@@ -1,0 +1,41 @@
+"""Paper Fig. 4: β(b) = T(b(γ+1))/T(b) across batch sizes — 1.0 in the
+memory-bound ideal, growing as decoding turns compute-bound.  Reported
+from the paper's measured Table 5 profiles and from the live CPU engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import demo_target, emit, timeit
+from repro.core import speculative as spec
+from repro.core.adaptive import PAPER_PROFILES
+from repro.models import transformer as T
+
+GAMMA = 3
+
+
+def run():
+    for name, prof in PAPER_PROFILES.items():
+        for b in (1, 4, 16, 64, 128):
+            emit(f"fig4/paper/{name}/beta_b{b}", prof.t(b) * 1e3,
+                 f"{prof.beta(b, GAMMA):.3f}")
+    # live: time the target decode step at n and n(γ+1) "rows"
+    cfg, params, _ = demo_target()
+    MAX = 64
+    for b in (1, 2, 4, 8):
+        def step_at(rows):
+            toks = jnp.zeros((rows, 8), jnp.int32)
+            pre = T.prefill(cfg, params, toks, max_len=MAX,
+                            want_caps=False)
+            fn = jax.jit(lambda c, t: T.decode_step(
+                cfg, params, c, t, want_caps=False)["logits"])
+            tok = jnp.zeros((rows, 1), jnp.int32)
+            return lambda: fn(pre["cache"], tok)
+        t1 = timeit(step_at(b), iters=5)
+        t4 = timeit(step_at(b * (GAMMA + 1)), iters=5)
+        emit(f"fig4/live/beta_b{b}", t1 * 1e6, f"{t4 / t1:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Paper Table 4 (Appendix A.2): speculative configuration sweep —
+(batch, γ) against throughput and acceptance length on the live engine.
+The paper finds γ=3–4 chain drafting optimal; larger speculative budgets
+raise accept length but hurt throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import demo_target, emit, trained_draft
+from repro.core import eagle, speculative as spec
+from repro.models import transformer as T
+
+
+def _throughput(cfg, dcfg, params, dparams, domain, batch, gamma,
+                n_steps=16):
+    rng = np.random.default_rng(1)
+    prompts = [domain.sample_prompt(rng)[:12] for _ in range(batch)]
+    toks = jnp.asarray([p + [0] * (12 - len(p)) for p in prompts])
+    MAX = 12 + (gamma + 1) * (n_steps + 2)
+    pre = T.prefill(cfg, params, toks, max_len=MAX)
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    if gamma == 0:
+        fn = jax.jit(lambda c, t, k: spec.plain_decode_step(
+            cfg, params, c, t, key=k))
+        o = {"cache": pre["cache"], "token": first}
+        o = fn(o["cache"], o["token"], jax.random.key(0))
+        jax.block_until_ready(o["token"])
+        t0 = time.perf_counter()
+        n_tok = 0
+        for i in range(n_steps):
+            o = fn(o["cache"], o["token"], jax.random.key(i))
+            n_tok += batch
+        jax.block_until_ready(o["token"])
+        return n_tok / (time.perf_counter() - t0), 1.0
+    dcache = eagle.init_draft_cache(dcfg, batch, MAX)
+    dcache = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache,
+                                   pre, toks)
+    carry = spec.init_carry(cfg, dcfg, pre, first, gamma)
+    fn = jax.jit(lambda c, dc, cr, k: spec.spec_decode_step(
+        cfg, dcfg, params, dparams, c, dc, cr, gamma=gamma, key=k))
+    o = fn(pre["cache"], dcache, carry, jax.random.key(0))
+    jax.block_until_ready(o["tokens"])
+    t0 = time.perf_counter()
+    n_tok, ells = 0, []
+    for i in range(n_steps):
+        o = fn(o["cache"], o["dcache"], o["carry"], jax.random.key(i))
+        n = np.asarray(o["n_commit"])
+        n_tok += int(n.sum())
+        ells.append(float(n.mean()))
+    jax.block_until_ready(o["tokens"])
+    return n_tok / (time.perf_counter() - t0), float(np.mean(ells))
+
+
+def run():
+    cfg, params, domains = demo_target()
+    dcfg, dparams, _ = trained_draft("science")
+    dom = domains["science"]
+    for batch in (1, 4, 8):
+        base_tps, _ = _throughput(cfg, dcfg and dcfg, params, dparams,
+                                  dom, batch, 0)
+        emit(f"table4/b{batch}/gamma0", 1e6 / max(base_tps, 1e-9),
+             f"tps={base_tps:.1f};accept_len=1.00;speedup=1.00")
+        for gamma in (2, 3, 5):
+            tps, ell = _throughput(cfg, dcfg, params, dparams, dom,
+                                   batch, gamma)
+            emit(f"table4/b{batch}/gamma{gamma}",
+                 1e6 / max(tps, 1e-9),
+                 f"tps={tps:.1f};accept_len={ell:.2f};"
+                 f"speedup={tps / base_tps:.2f}")
+
+
+if __name__ == "__main__":
+    run()

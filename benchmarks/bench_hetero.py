@@ -1,0 +1,44 @@
+"""Paper Figs. 10/11/12: heterogeneous GPU allocation — the decision
+model with the paper's measured device ratios (Fig. 11), the Fig. 12
+configuration grid, and the TPU-native submesh analogue (DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.hetero import (PAPER_DEVICES, TPU_DEVICES, best_split,
+                               paper_figure12_grid, plan_tpu_submesh,
+                               relative_throughput)
+
+
+def run():
+    # Fig. 11: the disproportionate inference/training gap
+    for name, d in PAPER_DEVICES.items():
+        emit(f"fig11/{name}", 0.0,
+             f"inference={d.inference:.2f};training={d.training:.2f};"
+             f"gap_ratio={d.inference / d.training:.2f}")
+    # Fig. 10: paper's deployment (8×H100 serve + 4×MI250 train), per
+    # dataset speedup s from §5.5
+    for ds, s in (("sharegpt", 1.15), ("science", 1.30),
+                  ("evolcode", 1.25), ("numinamath", 1.22)):
+        r = relative_throughput(PAPER_DEVICES["H100"],
+                                PAPER_DEVICES["MI250"], 8, 4, s)
+        emit(f"fig10/{ds}", 0.0,
+             f"rel_throughput={r:.2f};s={s}")
+    # Fig. 12 grid
+    for row in paper_figure12_grid():
+        emit(f"fig12/{row['config'].replace(' ', '')}/s{row['s']}", 0.0,
+             f"rel={row['relative_throughput']:.3f};"
+             f"use_tide={row['use_tide']}")
+    # TPU-native: v5p serving + v5e training, and single-pod submesh carve
+    r = best_split(TPU_DEVICES["v5p"], TPU_DEVICES["v5e"], 4, 1, 1.3)
+    emit("tpu/v5p_v5e_4_1_s1.3", 0.0,
+         f"rel={r['relative_throughput']:.3f}")
+    for s in (1.15, 1.3, 1.47):
+        plan = plan_tpu_submesh(256, s)
+        emit(f"tpu/submesh_256_s{s}", 0.0,
+             f"serve={plan.serve_chips};train={plan.train_chips};"
+             f"rel={plan.relative_throughput():.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: times the jnp oracle paths on CPU (the
+interpret-mode kernels are Python-looped and not timing-representative)
+and reports the TPU roofline expectation for each kernel's shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels.extract_pack.ref import extract_pack_ref
+from repro.kernels.flash_attn.ref import flash_attention_ref
+from repro.kernels.verify_attn.ref import verify_attention_ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def run():
+    ks = jax.random.split(jax.random.key(0), 3)
+    # flash prefill
+    B, S, Hq, Hk, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    fn = jax.jit(lambda: flash_attention_ref(q, k, v))
+    t = timeit(fn)
+    flops = 4 * B * Hq * S * S * D
+    emit("kernel/flash_attn/oracle_cpu", t * 1e6,
+         f"tpu_roofline_us={flops / PEAK_FLOPS * 1e6:.1f}")
+    # verify attention (decode hot spot): bandwidth-bound on TPU
+    T_, Smax = 4, 8192
+    q2 = jax.random.normal(ks[0], (B, T_, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Smax, Hk, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Smax, Hk, D), jnp.float32)
+    lengths = jnp.array([Smax - T_] * B, jnp.int32)
+    fn = jax.jit(lambda: verify_attention_ref(q2, kc, vc, lengths))
+    t = timeit(fn)
+    cache_bytes = 2 * B * Smax * Hk * D * 2          # bf16 k+v read
+    emit("kernel/verify_attn/oracle_cpu", t * 1e6,
+         f"tpu_roofline_us={cache_bytes / HBM_BW * 1e6:.1f}")
+    # extract pack
+    feats = jax.random.normal(ks[0], (8, 4, 1536), jnp.float32)
+    toks = jnp.zeros((8, 4), jnp.int32)
+    mask = jnp.ones((8, 4), bool)
+    fn = jax.jit(lambda: extract_pack_ref(feats, toks, mask))
+    t = timeit(fn)
+    emit("kernel/extract_pack/oracle_cpu", t * 1e6,
+         f"bytes={feats.nbytes}")
+
+
+if __name__ == "__main__":
+    run()

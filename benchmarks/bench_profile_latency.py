@@ -1,0 +1,47 @@
+"""Paper Table 5: profiled T(n) and D0.  Prints the paper's H100
+measurements (used by the adaptive model) plus the analytic TPU-v5e
+profile derived from the roofline (DESIGN.md §2.4), and profiles the
+live CPU engine (tide-tiny) with the actual startup profiling pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from benchmarks.common import demo_target, emit, timeit
+from repro.core.adaptive import PAPER_PROFILES, analytic_tpu_profile, \
+    profile_engine
+from repro.models import transformer as T
+
+
+def run():
+    for name, prof in PAPER_PROFILES.items():
+        for b, t in zip(prof.batch_sizes, prof.t_ms):
+            emit(f"table5/paper/{name}/T_{b}", t * 1e3, f"{t:.3f}ms")
+        emit(f"table5/paper/{name}/D0", prof.d0_ms * 1e3,
+             f"{prof.d0_ms:.3f}ms")
+    # analytic TPU v5e profiles for two assigned archs
+    for arch in ("glm4-9b", "deepseek-v3-671b"):
+        prof = analytic_tpu_profile(C.get(arch), chips=256)
+        for b in (1, 16, 256):
+            emit(f"table5/tpu_v5e_analytic/{arch}/T_{b}",
+                 prof.t(b) * 1e3, f"{prof.t(b):.4f}ms")
+    # live CPU profiling pass (the actual §4.1 startup procedure)
+    cfg, params, _ = demo_target()
+
+    def step_fn(n):
+        toks = jnp.zeros((n, 8), jnp.int32)
+        pre = T.prefill(cfg, params, toks, max_len=32, want_caps=False)
+        fn = jax.jit(lambda c, t: T.decode_step(cfg, params, c, t,
+                                                want_caps=False)["logits"])
+        out = fn(pre["cache"], jnp.zeros((n, 1), jnp.int32))
+        jax.block_until_ready(out)
+
+    prof = profile_engine(step_fn, [1, 2, 4, 8], iters=3)
+    for b, t in zip(prof.batch_sizes, prof.t_ms):
+        emit(f"table5/live_cpu/T_{b}", t * 1e3, f"{t:.3f}ms")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Roofline table (§Roofline deliverable, assignment requirement (g)):
+reads the dry-run JSONs produced by launch/dryrun.py and prints the
+three-term roofline per (arch × shape × mesh) with the dominant
+bottleneck and the useful-FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/no_dryrun_results", 0.0,
+             "run: python -m repro.launch.dryrun --all --multi-pod both")
+        return
+    for path in files:
+        with open(path) as f:
+            d = json.load(f)
+        tag = f"{d['arch']}/{d['shape']}/{d.get('mesh', '?')}"
+        if "skipped" in d:
+            emit(f"roofline/{tag}", 0.0, f"SKIP:{d['skipped'][:40]}")
+            continue
+        if "error" in d:
+            emit(f"roofline/{tag}", 0.0, f"ERROR:{d['error'][:60]}")
+            continue
+        r = d["roofline"]
+        ratio = d["model_flops"] / max(r["flops"] * r["chips"], 1.0)
+        emit(f"roofline/{tag}", r["step_s"] * 1e6,
+             f"dom={r['dominant']};comp={r['compute_s']:.4f}s;"
+             f"mem={r['memory_s']:.4f}s;coll={r['collective_s']:.4f}s;"
+             f"useful_flops={ratio:.2f};"
+             f"resident_gb={d.get('resident_bytes', 0) / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,105 @@
+"""Paper Fig. 8 + Eq. 5: practical-speedup model vs. actual measured
+speedup, and the paper-profile (Table 5) predictions.
+
+Measured part runs on the live CPU engine (tide-tiny): we profile T(n)
+and D0 by timing the jitted target/draft steps, predict speedup via
+Eq. 5 from the observed acceptance, and compare against the actually
+measured speculative-vs-plain throughput ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import demo_target, emit, timeit, trained_draft
+from repro.core import eagle, speculative as spec
+from repro.core.adaptive import (PAPER_PROFILES, LatencyProfile,
+                                 alpha_from_accept_len, practical_speedup,
+                                 profile_engine)
+from repro.models import transformer as T
+
+
+def _measure(cfg, params, dcfg, dparams, domain, batch, n_steps=20,
+             gamma=3):
+    """Returns (T(b) us, spec tok/s, plain tok/s, accept_len)."""
+    rng = np.random.default_rng(0)
+    prompts = [domain.sample_prompt(rng)[:12] for _ in range(batch)]
+    toks = jnp.asarray([p + [0] * (12 - len(p)) for p in prompts])
+    MAX = 12 + (gamma + 1) * (n_steps + 2)
+    pre = T.prefill(cfg, params, toks, max_len=MAX)
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    dcache0 = eagle.init_draft_cache(dcfg, batch, MAX)
+    dcache0 = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache0,
+                                    pre, toks)
+    carry0 = spec.init_carry(cfg, dcfg, pre, first, gamma)
+
+    spec_fn = jax.jit(lambda c, dc, cr, k: spec.spec_decode_step(
+        cfg, dcfg, params, dparams, c, dc, cr, gamma=gamma, key=k))
+    plain_fn = jax.jit(lambda c, t, k: spec.plain_decode_step(
+        cfg, params, c, t, key=k))
+
+    # plain timing
+    cache = jax.tree.map(jnp.copy, pre["cache"])
+    tok = first
+    out = plain_fn(cache, tok, jax.random.key(0))
+    jax.block_until_ready(out["token"])
+    import time
+    t0 = time.perf_counter()
+    toks_plain = 0
+    for i in range(n_steps):
+        out = plain_fn(out["cache"], out["token"], jax.random.key(i))
+        toks_plain += batch
+    jax.block_until_ready(out["token"])
+    t_plain = time.perf_counter() - t0
+
+    # spec timing
+    o = spec_fn(pre["cache"], dcache0, carry0, jax.random.key(0))
+    jax.block_until_ready(o["tokens"])
+    t0 = time.perf_counter()
+    toks_spec = 0
+    ells = []
+    for i in range(n_steps):
+        o = spec_fn(o["cache"], o["dcache"], o["carry"],
+                    jax.random.key(i + 1))
+        n = np.asarray(o["n_commit"])
+        toks_spec += int(n.sum())
+        ells.append(float(n.mean()))
+    jax.block_until_ready(o["tokens"])
+    t_spec = time.perf_counter() - t0
+    return (t_plain / n_steps, toks_spec / t_spec, toks_plain / t_plain,
+            float(np.mean(ells)))
+
+
+def run():
+    cfg, params, domains = demo_target()
+    dcfg, dparams, acc = trained_draft("science")
+    gamma = 3
+    # profile T(n) and D0 from the live engine (paper §4.1 startup pass)
+    results = {}
+    for b in (1, 2, 4):
+        tb, spec_tps, plain_tps, ell = _measure(
+            cfg, params, dcfg, dparams, domains["science"], b)
+        results[b] = (tb, spec_tps, plain_tps, ell)
+    bs = sorted(results)
+    prof = LatencyProfile(bs, [results[b][0] * 1e3 for b in bs],
+                          d0_ms=results[1][0] * 1e3 * 0.25)
+    for b in bs:
+        tb, spec_tps, plain_tps, ell = results[b]
+        actual = spec_tps / plain_tps
+        alpha = alpha_from_accept_len(ell, gamma)
+        pred = practical_speedup(alpha, gamma, prof, b)
+        emit(f"fig8/live/b{b}/actual_speedup", tb * 1e6,
+             f"{actual:.3f}")
+        emit(f"fig8/live/b{b}/predicted_speedup", tb * 1e6,
+             f"{pred:.3f};accept_len={ell:.2f}")
+    # paper-profile predictions (Table 5 -> Fig. 8 curves)
+    for name, prof in PAPER_PROFILES.items():
+        for b in (1, 8, 64):
+            pred = practical_speedup(0.65, gamma, prof, b)
+            emit(f"fig8/paper/{name}/b{b}", prof.t(b) * 1e3,
+                 f"pred_speedup={pred:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Shared benchmark infrastructure: a cached pretrained demo system and
+CSV emission (``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Iterable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    """Seconds per call (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+@functools.lru_cache(maxsize=1)
+def demo_target(pretrain_steps: int = 120):
+    """Pretrained tide-tiny target + the paper-style synthetic domains —
+    shared across all live benchmarks (pretraining is the slow part)."""
+    import repro.configs as C
+    from repro.data.workloads import (PAPER_BRANCHINGS, PAPER_DOMAINS,
+                                      make_domains, training_corpus)
+    from repro.models import transformer as T
+    from repro.training.trainer import pretrain_target
+
+    cfg = C.get("tide-tiny")
+    params = T.init(cfg, jax.random.key(0))
+    domains = make_domains(cfg.vocab_size, PAPER_DOMAINS,
+                           branchings=PAPER_BRANCHINGS, seed=3)
+    corpus = np.concatenate([
+        training_corpus(d, 48, 48, seed=11 + i)
+        for i, d in enumerate(domains.values())])
+    params, losses = pretrain_target(cfg, params, corpus,
+                                     steps=pretrain_steps, lr=3e-3)
+    return cfg, params, domains
+
+
+def trained_draft(domain_name: str, n_seqs: int = 48, steps: int = 90):
+    """A draft trained on captures of `domain_name` traffic (cached per
+    domain)."""
+    return _trained_draft_cached(domain_name, n_seqs, steps)
+
+
+@functools.lru_cache(maxsize=8)
+def _trained_draft_cached(domain_name: str, n_seqs: int, steps: int):
+    import jax.numpy as jnp
+
+    from repro.core import eagle
+    from repro.data.workloads import training_corpus
+    from repro.models import transformer as T
+    from repro.training.optimizer import adamw
+
+    cfg, params, domains = demo_target()
+    dcfg = eagle.draft_config(cfg)
+    dparams = eagle.draft_init(dcfg, jax.random.key(100))
+    corpus = training_corpus(domains[domain_name], n_seqs, 40, seed=23)
+    toks = jnp.asarray(corpus)
+    pre = T.prefill(cfg, params, toks)
+    feats, nexts = pre["captures"][:, :-1], toks[:, 1:]
+    opt = adamw(lr=2e-3, weight_decay=0.0)
+    ostate = opt.init(dparams)
+    lossf = jax.value_and_grad(
+        lambda dp, f, t: eagle.draft_train_loss(dcfg, dp, params["embed"],
+                                                f, t), has_aux=True)
+
+    @jax.jit
+    def step(dp, os_, f, t, it):
+        (l, m), g = lossf(dp, f, t)
+        dp, os_ = opt.update(dp, g, os_, it)
+        return dp, os_, m["accuracy"]
+
+    rng = np.random.default_rng(0)
+    acc = 0.0
+    for it in range(steps):
+        sel = rng.integers(0, feats.shape[0], size=8)
+        dparams, ostate, a = step(dparams, ostate, feats[sel], nexts[sel],
+                                  jnp.int32(it))
+        acc = float(a)
+    return dcfg, dparams, acc

@@ -1,0 +1,59 @@
+"""Render the §Roofline markdown table for EXPERIMENTS.md from the
+dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_table [--tag bl]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str, tag: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, f"*_{tag}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(d):
+    if "skipped" in d:
+        return (f"| {d['arch']} | {d['shape']} | {d.get('mesh','-')} | "
+                f"SKIP | — | — | — | — | — | {d['skipped'][:46]} |")
+    r = d["roofline"]
+    ratio = d["model_flops"] / max(r["flops"] * r["chips"], 1.0)
+    sw = " [sw]" if d.get("window") else ""
+    res = d.get("resident_bytes", 0) / 1e9
+    note = {
+        "compute": "more tokens/chip or larger micro would help",
+        "memory": "cut activation round-trips / fuse attention reads",
+        "collective": "reshard or overlap the dominant collective",
+    }[r["dominant"]]
+    return (f"| {d['arch']}{sw} | {d['shape']} | {d['mesh']} | "
+            f"{r['dominant']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+            f" {r['collective_s']:.4f} | {ratio:.2f} | {res:.1f} | {note} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="bl")
+    args = ap.parse_args()
+    rows = load(args.dir, args.tag)
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"]),
+                             d.get("mesh", "")))
+    print("| arch | shape | mesh | bound | compute s | memory s | "
+          "collective s | useful-FLOPs | resident GB/chip | "
+          "what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        print(fmt_row(d))
+
+
+if __name__ == "__main__":
+    main()

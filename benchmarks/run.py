@@ -1,0 +1,68 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  Fig. 4   bench_beta_ratio          β(b) verification-latency ratio
+  Fig. 5/6 bench_adaptation          accept-length/throughput over time
+  Fig. 8   bench_speedup_model       Eq. 5 predicted vs actual speedup
+  Fig. 9   bench_adaptive_control    TIDE-default vs TIDE-adaptive
+  Fig.10-12 bench_hetero             heterogeneous allocation model
+  Table 1  bench_storage             hidden-state storage math
+  Table 2  bench_training_time       reuse vs recompute training time
+  Table 3  bench_cross_domain        cross-dataset acceptance matrix
+  Table 4  bench_gamma_sweep         (batch, γ) configuration sweep
+  Table 5  bench_profile_latency     T(n)/D0 profiles
+  (g)      bench_roofline            dry-run roofline table
+  kernels  bench_kernels             kernel oracles + TPU rooflines
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+Run one: ``PYTHONPATH=src python -m benchmarks.run --only table2``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table5", "benchmarks.bench_profile_latency"),
+    ("fig4", "benchmarks.bench_beta_ratio"),
+    ("table1", "benchmarks.bench_storage"),
+    ("table2", "benchmarks.bench_training_time"),
+    ("table3", "benchmarks.bench_cross_domain"),
+    ("table4", "benchmarks.bench_gamma_sweep"),
+    ("fig8", "benchmarks.bench_speedup_model"),
+    ("fig5", "benchmarks.bench_adaptation"),
+    ("fig9", "benchmarks.bench_adaptive_control"),
+    ("fig10", "benchmarks.bench_hetero"),
+    ("roofline", "benchmarks.bench_roofline"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on the bench tag")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for tag, module in MODULES:
+        if args.only and args.only not in tag:
+            continue
+        t0 = time.perf_counter()
+        print(f"# === {tag} ({module}) ===", flush=True)
+        try:
+            __import__(module, fromlist=["run"]).run()
+        except Exception:
+            failed.append(tag)
+            print(f"# {tag} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# === {tag} done in {time.perf_counter() - t0:.1f}s ===",
+              flush=True)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,40 @@
+"""Heterogeneous deployment planning (paper §5.5 / Figs. 10–12): given
+device classes and an expected speculative speedup, decide whether to
+dedicate low-end devices to draft training — with the paper's GPU
+numbers and the TPU submesh analogue.
+
+    PYTHONPATH=src python examples/heterogeneous_plan.py
+"""
+from repro.core.hetero import (PAPER_DEVICES, TPU_DEVICES, best_split,
+                               paper_figure12_grid, plan_tpu_submesh)
+
+
+def main():
+    print("Fig. 11 device classes (normalized to MI250):")
+    for name, d in PAPER_DEVICES.items():
+        print(f"  {name:8s} inference {d.inference:5.2f}x   "
+              f"training {d.training:5.2f}x   "
+              f"(gap {d.inference/d.training:.2f}x -> low-end chips are "
+              "relatively better at training)")
+
+    print("\nFig. 12 configuration grid:")
+    for row in paper_figure12_grid():
+        mark = "TIDE" if row["use_tide"] else "all-inference"
+        print(f"  {row['config']:22s} s={row['s']:.1f}  "
+              f"rel={row['relative_throughput']:.3f}  -> {mark}")
+
+    print("\nTPU-native submesh planning (one v5e pod, 256 chips):")
+    for s in (1.1, 1.3, 1.47):
+        p = plan_tpu_submesh(256, s)
+        print(f"  speculative speedup s={s:.2f}: serve {p.serve_chips} / "
+              f"train {p.train_chips} chips  "
+              f"rel_throughput={p.relative_throughput():.3f}")
+
+    print("\nv5p+v5e heterogeneous (4:1, s=1.3):")
+    r = best_split(TPU_DEVICES["v5p"], TPU_DEVICES["v5e"], 4, 1, 1.3)
+    print(f"  rel={r['relative_throughput']:.3f} -> "
+          f"{'TIDE split' if r['use_tide'] else 'all-inference'}")
+
+
+if __name__ == "__main__":
+    main()

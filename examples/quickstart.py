@@ -1,0 +1,57 @@
+"""Quickstart: build a tiny target + EAGLE-3 draft, run one speculative
+decoding round, and inspect every TIDE signal on the way.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.core import eagle, speculative as spec
+from repro.core.adaptive import PAPER_PROFILES, practical_speedup
+from repro.models import transformer as T
+
+
+def main():
+    # 1) a target model (tide-tiny: 4 layers, runs on CPU) and its draft
+    cfg = configs.get("tide-tiny")
+    dcfg = eagle.draft_config(cfg)
+    params = T.init(cfg, jax.random.key(0))
+    dparams = eagle.draft_init(dcfg, jax.random.key(1))
+    print(f"target: {cfg.name}  ({cfg.param_count()/1e6:.2f}M params)")
+    print(f"draft:  {dcfg.name} ({eagle.draft_param_count(dcfg)/1e6:.2f}M"
+          " params, 1 decoder layer + LM head)")
+
+    # 2) prefill a prompt — hidden-state captures come out for free
+    prompt = jnp.array([[5, 42, 7, 99, 12, 3, 77, 21]])
+    pre = T.prefill(cfg, params, prompt, max_len=64)
+    print(f"\nprefill: last-token logits {pre['logits'].shape}, "
+          f"captures {pre['captures'].shape}  <- TIDE training signals")
+
+    # 3) seed the draft with the prompt's captures, then speculate
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    dcache = eagle.init_draft_cache(dcfg, 1, 64)
+    dcache = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache,
+                                   pre, prompt)
+    carry = spec.init_carry(cfg, dcfg, pre, first, gamma=3)
+    out = spec.spec_decode_step(cfg, dcfg, params, dparams, pre["cache"],
+                                dcache, carry, gamma=3,
+                                key=jax.random.key(2))
+    n = int(out["n_commit"][0])
+    print(f"\nspeculative round: committed {n} tokens "
+          f"{[int(t) for t in out['tokens'][0, :n]]} "
+          f"(drafts accepted: {int(out['n_acc'][0])})")
+    print(f"captures for the accepted block: {out['captures'].shape} — "
+          "these feed the Draft Model Training Engine")
+
+    # 4) the adaptive model (Eq. 5) with the paper's H100 profile
+    prof = PAPER_PROFILES["gpt-oss-120b"]
+    for b in (1, 64, 512):
+        s = practical_speedup(alpha=0.65, gamma=3, profile=prof, batch=b)
+        print(f"Eq.5 predicted speedup @ batch {b:4d}: {s:.2f}x")
+    print("\n-> speculation pays at small batch, fades at large batch: "
+          "this is what TIDE's Adaptive Drafter automates.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Pytree checkpointing: flat-key .npz save/load + the draft deploy gate.
+
+No external deps; paths are '/'-joined pytree keys.  Used by the training
+engine to hand updated drafts to the serving engine (paper Fig. 2's
+"deploy if improved" edge) and by examples for resumable training.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, metadata: Optional[dict] = None):
+    """Atomic save (tmp + rename)."""
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    if metadata is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def load(path: str, like) -> Any:
+    """Load into the structure of ``like`` (same flattening order)."""
+    data = np.load(path)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path_keys, leaf) in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class DraftDeployGate:
+    """Thread-safe draft-model handoff between training and serving
+    (paper: 'deployed only if it demonstrates improved acceptance')."""
+
+    def __init__(self, initial_params):
+        self._lock = threading.Lock()
+        self._params = initial_params
+        self.version = 0
+        self.deploy_log = []
+
+    def current(self):
+        with self._lock:
+            return self._params, self.version
+
+    def offer(self, new_params, eval_acc: float, baseline_acc: float) -> bool:
+        """Deploy iff eval acceptance improved."""
+        deploy = eval_acc > baseline_acc
+        with self._lock:
+            if deploy:
+                self._params = new_params
+                self.version += 1
+            self.deploy_log.append({"eval": eval_acc, "base": baseline_acc,
+                                    "deployed": deploy,
+                                    "version": self.version})
+        return deploy

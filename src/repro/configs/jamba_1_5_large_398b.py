@@ -1,0 +1,43 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE every other
+layer.  [arXiv:2403.19887]
+
+Superblock of 8: attention at position 4, Mamba elsewhere; MoE replaces
+the MLP on every other (odd) layer.  72 = 9 superblocks.
+"""
+from repro.models.config import (ATTN, FFN_MOE, FFN_SWIGLU, MAMBA, BlockDef,
+                                 ModelConfig, reduced)
+
+
+def _blk(i: int) -> BlockDef:
+    mixer = ATTN if i == 4 else MAMBA
+    ffn = FFN_MOE if i % 2 == 1 else FFN_SWIGLU
+    return BlockDef(mixer, ffn)
+
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    citation="arXiv:2403.19887",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    pattern=tuple(_blk(i) for i in range(8)),
+    num_experts=16,
+    experts_per_tok=2,
+    moe_d_ff=24576,          # Jamba experts use the full MLP width
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    rope_theta=10000.0,
+)
+
+REDUCED = reduced(
+    CONFIG,
+    num_layers=2,
+    pattern=(BlockDef(MAMBA, FFN_SWIGLU), BlockDef(ATTN, FFN_MOE)),
+)

@@ -1,0 +1,33 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256, cross-attn image layers every 5th layer.
+[hf:meta-llama/Llama-3.2-11B-Vision]
+
+The vision frontend (ViT encoder + projector) is a STUB per the assignment:
+``input_specs`` provides precomputed patch embeddings (B, M, d_model); the
+model here is the language backbone with interleaved cross-attention layers.
+"""
+from repro.models.config import (ATTN, CROSS, FFN_SWIGLU, BlockDef,
+                                 ModelConfig, reduced)
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    citation="hf:meta-llama/Llama-3.2-11B-Vision",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    # every 5th layer is a cross-attention (image) layer: 8 of 40
+    pattern=(BlockDef(ATTN, FFN_SWIGLU),) * 4 + (BlockDef(CROSS, FFN_SWIGLU),),
+    rope_theta=500000.0,
+    num_image_tokens=4096,   # 4 tiles x 1024 patches (stubbed frontend)
+)
+
+REDUCED = reduced(
+    CONFIG,
+    num_layers=2,
+    pattern=(BlockDef(ATTN, FFN_SWIGLU), BlockDef(CROSS, FFN_SWIGLU)),
+)

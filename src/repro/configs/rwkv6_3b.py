@@ -1,0 +1,23 @@
+"""rwkv6-3b [ssm] — 32L d_model=2560 (attention-free) d_ff=8960 vocab=65536 —
+Finch, data-dependent decay.  [arXiv:2404.05892]
+
+O(1)-state decode: runs long_500k natively (no attention window needed).
+"""
+from repro.models.config import FFN_SWIGLU, RWKV6, BlockDef, ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    citation="arXiv:2404.05892",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,            # 2560 / 64 time-mix heads
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    pattern=(BlockDef(RWKV6, FFN_SWIGLU),),
+    rwkv_head_dim=64,
+)
+
+REDUCED = reduced(CONFIG, rwkv_head_dim=32, num_heads=4, num_kv_heads=4)

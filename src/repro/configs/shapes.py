@@ -1,0 +1,127 @@
+"""Assigned input shapes and per-(arch × shape) input specs.
+
+Decode shapes lower ``serve_step`` (one speculative verify block against a
+``seq_len`` KV cache); train lowers ``train_step``; prefill lowers the
+prompt pass.  ``input_specs`` returns ShapeDtypeStruct stand-ins only —
+no device allocation (the dry-run pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, RWKV6, MAMBA, ATTN, CROSS, MLA
+
+# Sliding window used for the dense/moe/vlm long-context decode variant.
+LONG_CONTEXT_WINDOW = 8192
+SPEC_BLOCK = 4           # γ + 1 tokens per verify block (paper: γ = 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _mixers(cfg: ModelConfig):
+    return {b.mixer for b in cfg.layer_kinds}
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """True if every mixer is O(1)-state or windowed."""
+    mix = _mixers(cfg)
+    if mix <= {RWKV6, MAMBA}:
+        return True
+    return bool(cfg.window)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """Whether this (arch, shape) pair runs, and why not if skipped.
+
+    Rules (DESIGN.md §Shape skips): long_500k skipped only for whisper-base
+    (architecturally capped decoder); dense/moe/vlm archs run long_500k with
+    a sliding-window attention variant (see ``shape_cfg``)."""
+    if shape_name == "long_500k" and cfg.family == "audio":
+        return False, ("audio decoder is positionally capped (448); no 500k "
+                       "decode regime exists for this arch")
+    return True, ""
+
+
+def shape_cfg(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Shape-adapted config: long_500k forces sub-quadratic attention for
+    archs with full-attention mixers (flagged [sw] in the roofline table)."""
+    if shape_name == "long_500k" and not is_subquadratic(cfg):
+        has_attn = ATTN in _mixers(cfg) or MLA in _mixers(cfg)
+        if has_attn:
+            return dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _token_spec(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _extras_spec(cfg: ModelConfig, b: int, s: int) -> Dict:
+    dt = cfg.act_dtype
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+    if cfg.num_image_tokens:
+        return {"image_embeds": jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), dt)}
+    return {}
+
+
+def mem_len_for(cfg: ModelConfig, enc_seq: int = 0) -> int:
+    if cfg.num_image_tokens:
+        return cfg.num_image_tokens
+    if cfg.encoder_layers:
+        # whisper-base encodes 30 s -> 1500 frames; decode shapes use this
+        return enc_seq or 1504
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                gamma: int = SPEC_BLOCK - 1) -> Dict:
+    """Model-input ShapeDtypeStructs for the entry point of this shape.
+
+    train  -> {"batch": {tokens, targets, extras...}}
+    prefill-> {"tokens", "extra"}
+    decode -> {"tokens" (B, γ+1), "cache" (abstract)}
+    """
+    shp = SHAPES[shape_name]
+    cfg = shape_cfg(cfg, shape_name)
+    b, s = shp.global_batch, shp.seq_len
+    if shp.kind == "train":
+        if cfg.family == "audio":
+            dl = cfg.decoder_len
+            batch = {"tokens": _token_spec(b, dl), "targets": _token_spec(b, dl)}
+        else:
+            batch = {"tokens": _token_spec(b, s), "targets": _token_spec(b, s)}
+        batch.update(_extras_spec(cfg, b, s))
+        return {"batch": batch}
+    if shp.kind == "prefill":
+        out = {"tokens": _token_spec(b, s), "extra": _extras_spec(cfg, b, s)}
+        if cfg.family == "audio":
+            # the decoder consumes BOS-ish prompt; encoder consumes frames
+            out["tokens"] = _token_spec(b, min(s, cfg.decoder_len))
+        return out
+    # decode: γ+1-token verify block against a seq_len-deep cache.
+    # headroom of 16 keeps max_len divisible by the 16-way model axis so
+    # the kv_seq sharding rule applies (divisibility auto-drop otherwise).
+    max_len = s + 16
+    cache = T.cache_abstract(cfg, b, max_len, mem_len_for(cfg))
+    return {"tokens": _token_spec(b, gamma + 1), "cache": cache}

@@ -1,0 +1,29 @@
+"""whisper-base [audio] — 6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865 —
+enc-dec, conv frontend (stub).  [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is STUBBED per the assignment:
+``input_specs`` provides pre-embedded frames (B, S, d_model).  The model is
+the 6-layer bidirectional encoder + 6-layer causal decoder with cross
+attention.  long_500k is SKIPPED for this arch (decoder is architecturally
+capped; see DESIGN.md §Shape skips).
+"""
+from repro.models.config import ATTN, FFN_GELU, BlockDef, ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    citation="arXiv:2212.04356",
+    num_layers=6,            # decoder layers
+    encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    pattern=(BlockDef(ATTN, FFN_GELU, cross=True),),
+    decoder_len=448,         # whisper max target positions
+    rope_theta=10000.0,
+)
+
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,263 @@
+"""EAGLE-3 draft model (Li et al., arXiv:2503.01840), as used by TIDE §3.2.
+
+One decoder layer + LM head.  The draft predicts the next token from the
+*target model's* concatenated low/mid/high hidden states (3·D "capture
+features") fused to D, combined with the embedding of the most recent
+token.  During chain drafting the draft's own hidden state substitutes for
+the target feature (EAGLE-3 "training-time test" behaviour), so training
+includes a TTT step on self-generated features.
+
+The draft shares the target's token embedding (read-only), so its own
+parameters are just: fuse (3D→D), fc (2D→D), one decoder layer, head.
+DeepSeek-V3's MTP head (``cfg.mtp_depth``) is this same structure trained
+jointly — we expose it through the identical module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ATTN, FFN_SWIGLU, BlockDef, ModelConfig
+from repro.models.layers import (EMBED, MLP, embed, ffn, ffn_specs, rmsnorm,
+                                 rmsnorm_specs)
+from repro.models.param import ParamSpec, init_params
+from repro.models.transformer import BATCH, KV_SEQ
+
+
+def draft_config(tcfg: ModelConfig) -> ModelConfig:
+    """Draft architecture derived from the target: 1 decoder layer, same
+    d_model/vocab, small GQA."""
+    # pick a head count that divides d_model with head_dim >= 64
+    bound = max(min(tcfg.num_heads, tcfg.d_model // 64), 1)
+    heads = next(h for h in range(bound, 0, -1) if tcfg.d_model % h == 0)
+    kv = min(tcfg.num_kv_heads, heads)
+    while heads % kv:
+        kv -= 1
+    return dataclasses.replace(
+        tcfg,
+        name=tcfg.name + "-eagle3",
+        family="dense",
+        num_layers=1,
+        prologue=(),
+        pattern=(BlockDef(ATTN, FFN_SWIGLU),),
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=tcfg.d_model // heads,
+        d_ff=2 * tcfg.d_model,
+        num_experts=0,
+        experts_per_tok=0,
+        num_shared_experts=0,
+        encoder_layers=0,
+        num_image_tokens=0,
+        q_lora_rank=0,
+        kv_lora_rank=0,
+        window=0,
+        capture_layers=(0, 0, 0),
+    )
+
+
+def draft_specs(dcfg: ModelConfig) -> dict:
+    d, v = dcfg.d_model, dcfg.vocab_size
+    return {
+        "fuse": ParamSpec((3 * d, d), (MLP, EMBED)),
+        "fc": ParamSpec((2 * d, d), (MLP, EMBED)),
+        "norm1": rmsnorm_specs(d),
+        "attn": attn.attn_specs(dcfg),
+        "norm2": rmsnorm_specs(d),
+        "ffn": ffn_specs(dcfg, FFN_SWIGLU),
+        "final_norm": rmsnorm_specs(d),
+        "head": {"w": ParamSpec((d, v), (EMBED, "vocab"))},
+    }
+
+
+def draft_init(dcfg: ModelConfig, key):
+    return init_params(key, draft_specs(dcfg))
+
+
+def draft_param_count(dcfg: ModelConfig) -> int:
+    from repro.models.param import count_params
+    return count_params(draft_specs(dcfg))
+
+
+# ------------------------------------------------------------ core layer
+def _layer(dcfg: ModelConfig, p, x, k_cache, v_cache, lengths, pad):
+    """One decoder layer over new positions (decode form, cache write)."""
+    h = rmsnorm(p["norm1"], x, dcfg.norm_eps)
+    out, (kc, vc) = attn.self_attention_decode(
+        dcfg, p["attn"], h, k_cache, v_cache, lengths, pad)
+    x = x + out
+    h2 = rmsnorm(p["norm2"], x, dcfg.norm_eps)
+    x = x + ffn(p["ffn"], h2, FFN_SWIGLU)
+    return x, kc, vc
+
+
+def _layer_full(dcfg: ModelConfig, p, x):
+    """Training form: full causal self-attention, no cache."""
+    h = rmsnorm(p["norm1"], x, dcfg.norm_eps)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out, _ = attn.self_attention_prefill(dcfg, p["attn"], h, positions)
+    x = x + out
+    h2 = rmsnorm(p["norm2"], x, dcfg.norm_eps)
+    return x + ffn(p["ffn"], h2, FFN_SWIGLU)
+
+
+def _head(dcfg, dparams, x):
+    return (x @ dparams["head"]["w"].astype(x.dtype)).astype(jnp.float32)
+
+
+def _fuse_inputs(dcfg, dparams, feats, tok_emb):
+    """feats: (B,T,3D) target captures (or (B,T,D) self features pre-fused);
+    tok_emb: (B,T,D). Returns fc([fused; emb])."""
+    dt = tok_emb.dtype
+    if feats.shape[-1] == 3 * dcfg.d_model:
+        fused = feats.astype(dt) @ dparams["fuse"].astype(dt)
+    else:
+        fused = feats.astype(dt)
+    x = jnp.concatenate([fused, tok_emb], axis=-1)
+    return x @ dparams["fc"].astype(dt)
+
+
+# ------------------------------------------------------------- cache
+def init_draft_cache(dcfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hk, hd = dcfg.num_kv_heads, dcfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, hk, hd), dcfg.act_dtype),
+        "v": jnp.zeros((batch, max_len, hk, hd), dcfg.act_dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "pad": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def draft_cache_axes() -> dict:
+    return {"k": (BATCH, KV_SEQ, "kv_heads", "qkv"),
+            "v": (BATCH, KV_SEQ, "kv_heads", "qkv"),
+            "lengths": (BATCH,), "pad": (BATCH,)}
+
+
+def draft_cache_abstract(dcfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_draft_cache(dcfg, batch, max_len))
+
+
+# ------------------------------------------------------- serving functions
+def draft_extend(dcfg: ModelConfig, dparams, embed_params, dcache,
+                 feats, tokens, advance):
+    """Append ``T`` (feature, token) pairs to the draft cache.
+
+    feats: (B, T, 3D) true target captures for the accepted positions;
+    tokens: (B, T) the tokens *following* each feature position;
+    advance: (B,) how many of the T entries are valid (cache lengths
+    advance by this; trailing entries are scratch and get overwritten).
+
+    Returns (logits (B,T,V), h (B,T,D), dcache').
+    """
+    dt = dcfg.act_dtype
+    tok_emb = embed(embed_params, tokens, dt)
+    x = _fuse_inputs(dcfg, dparams, feats, tok_emb)
+    x, kc, vc = _layer(dcfg, dparams, x, dcache["k"], dcache["v"],
+                       dcache["lengths"], dcache["pad"])
+    h = rmsnorm(dparams["final_norm"], x, dcfg.norm_eps)
+    logits = _head(dcfg, dparams, h)
+    new_cache = dict(dcache, k=kc, v=vc,
+                     lengths=dcache["lengths"] + advance)
+    return logits, h, new_cache
+
+
+def draft_propose(dcfg: ModelConfig, dparams, embed_params, dcache,
+                  h_last, first_logits, gamma: int, *,
+                  greedy: bool = True, key=None):
+    """Chain-draft γ tokens.  h_last: (B, D) draft hidden at the last
+    verified position; first_logits: (B, V) draft logits there.
+
+    Returns (draft_tokens (B, γ), draft_logits (B, γ, V), dcache') —
+    dcache' has the speculative entries written but its *lengths advanced
+    by γ* so the target-verify block can be compared; the caller resets
+    lengths on commit (stale entries are overwritten next round).
+    """
+    dt = dcfg.act_dtype
+    b = h_last.shape[0]
+
+    def pick(logits, k):
+        if greedy:
+            return logits.argmax(-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits).astype(jnp.int32)
+
+    keys = (jax.random.split(key, gamma) if key is not None
+            else jnp.zeros((gamma, 2), jnp.uint32))
+
+    def step(carry, k):
+        h, logits, cache = carry
+        tok = pick(logits, k)
+        tok_emb = embed(embed_params, tok[:, None], dt)
+        x = _fuse_inputs(dcfg, dparams, h[:, None], tok_emb)
+        x, kc, vc = _layer(dcfg, dparams, x, cache["k"], cache["v"],
+                           cache["lengths"], cache["pad"])
+        h_new = rmsnorm(dparams["final_norm"], x, dcfg.norm_eps)[:, 0]
+        logits_new = _head(dcfg, dparams, h_new[:, None])[:, 0]
+        cache = dict(cache, k=kc, v=vc, lengths=cache["lengths"] + 1)
+        return (h_new, logits_new, cache), (tok, logits)
+
+    (h_f, logits_f, cache_f), (toks, logitss) = jax.lax.scan(
+        step, (h_last, first_logits, dcache), keys)
+    draft_tokens = toks.T                                    # (B, γ)
+    draft_logits = logitss.transpose(1, 0, 2)                # (B, γ, V)
+    return draft_tokens, draft_logits, cache_f
+
+
+def reset_propose(dcache, gamma: int):
+    """Roll the speculative lengths back after verification."""
+    return dict(dcache, lengths=dcache["lengths"] - gamma)
+
+
+# ------------------------------------------------------------- training
+def draft_train_loss(dcfg: ModelConfig, dparams, embed_params, feats, tokens,
+                     *, ttt: bool = True, mask=None):
+    """EAGLE-3 training loss on captured signals.
+
+    Signal convention (SignalStore / draft_extend): pair i is
+    (f_i, u_i) where f_i is the target capture at a committed position
+    and u_i the token that followed it.  Draft input at i:
+    (f_i, e(u_i)); label u_{i+1}.  The TTT term replays with the draft's
+    own hidden as the feature (chain-step distribution matching).
+    Returns (loss, metrics{accuracy}).
+    """
+    dt = dcfg.act_dtype
+    b, s, _ = feats.shape
+    f_in = feats[:, :s - 1]
+    tok_in = tokens[:, :s - 1]
+    labels = tokens[:, 1:]
+    tok_emb = embed(embed_params, tok_in, dt)
+    x = _fuse_inputs(dcfg, dparams, f_in, tok_emb)
+    x = _layer_full(dcfg, dparams, x)
+    h = rmsnorm(dparams["final_norm"], x, dcfg.norm_eps)
+    logits = _head(dcfg, dparams, h)
+
+    if mask is None:
+        m = jnp.ones(labels.shape, jnp.float32)
+    else:
+        m = mask[:, 1:].astype(jnp.float32)
+
+    def ce(lg, lb, mm):
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        return ((logz - ll) * mm).sum() / jnp.maximum(mm.sum(), 1.0)
+
+    loss = ce(logits, labels, m)
+    acc = (((logits.argmax(-1) == labels) * m).sum()
+           / jnp.maximum(m.sum(), 1.0))
+    if ttt and s >= 3:
+        # step-2 (TTT): feature = draft's own hidden at i, token u_{i+1},
+        # label u_{i+2} — matches the propose-chain input distribution
+        f2 = h[:, :-1]
+        tok2 = tokens[:, 1:s - 1]
+        lab2 = tokens[:, 2:]
+        m2 = m[:, 1:]
+        x2 = _fuse_inputs(dcfg, dparams, f2, embed(embed_params, tok2, dt))
+        x2 = _layer_full(dcfg, dparams, x2)
+        h2 = rmsnorm(dparams["final_norm"], x2, dcfg.norm_eps)
+        loss = loss + 0.5 * ce(_head(dcfg, dparams, h2), lab2, m2)
+    return loss, {"accuracy": acc}

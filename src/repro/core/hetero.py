@@ -1,0 +1,106 @@
+"""Heterogeneous resource allocation model (paper §5.5, Figs. 10–12).
+
+TIDE decouples inference serving from draft training and maps them to
+different accelerator classes.  This module captures the decision problem:
+given per-class inference/training throughput ratios and the speculative
+speedup *s* unlocked by draft training, should low-end devices train the
+draft or serve?  It reproduces the paper's GPU numbers and adds TPU
+presets (the TPU-native analogue is disjoint submesh allocation —
+DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    name: str
+    # throughput relative to the reference class (paper Fig. 11:
+    # normalized to MI250)
+    inference: float
+    training: float
+
+
+# Paper Fig. 11 measurements (normalized to MI250).
+PAPER_DEVICES = {
+    "MI250": DeviceClass("MI250", 1.0, 1.0),
+    "MI300X": DeviceClass("MI300X", 4.42, 1.77),
+    "H100": DeviceClass("H100", 6.76, 2.44),
+}
+
+# TPU preset: v5e as the low class; v5p-class chip as the high class.
+# Inference gap ≈ HBM-bandwidth ratio (2765/819 ≈ 3.4); training gap ≈
+# bf16-FLOPs ratio (459/197 ≈ 2.3) — same disproportionality the paper
+# exploits (decode is bandwidth-bound, training is compute-bound).
+TPU_DEVICES = {
+    "v5e": DeviceClass("v5e", 1.0, 1.0),
+    "v5p": DeviceClass("v5p", 3.38, 2.33),
+}
+
+
+def relative_throughput(high: DeviceClass, low: DeviceClass,
+                        n_high: int, n_low: int, s: float) -> float:
+    """Fig. 12 model: relative throughput of TIDE's split (high GPUs serve
+    with speculative speedup s, low GPUs train) vs. the all-inference
+    baseline (everything serves, no speculation).
+
+    baseline  = n_high·I_high + n_low·I_low
+    tide      = n_high·I_high·s          (low class is busy training)
+    """
+    baseline = n_high * high.inference + n_low * low.inference
+    tide = n_high * high.inference * s
+    return tide / baseline
+
+
+def best_split(high: DeviceClass, low: DeviceClass, n_high: int, n_low: int,
+               s: float) -> Dict:
+    """Compare TIDE's split against all-inference; the paper's decision."""
+    rel = relative_throughput(high, low, n_high, n_low, s)
+    return {
+        "relative_throughput": rel,
+        "use_tide": rel > 1.0,
+        "config": f"{high.name}:{low.name} ({n_high}:{n_low})",
+        "s": s,
+    }
+
+
+def paper_figure12_grid() -> List[Dict]:
+    """All configurations evaluated in paper Fig. 12."""
+    out = []
+    for hi, lo, nh, nl in [("H100", "MI250", 4, 1), ("H100", "MI250", 2, 1),
+                           ("MI300X", "MI250", 4, 1), ("MI300X", "MI250", 2, 1)]:
+        for s in (1.1, 1.2, 1.3):
+            out.append(best_split(PAPER_DEVICES[hi], PAPER_DEVICES[lo],
+                                  nh, nl, s))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmeshPlan:
+    """TPU-native deployment: carve a training submesh out of the pod."""
+    serve_chips: int
+    train_chips: int
+    s: float                   # speculative speedup from online adaptation
+
+    def relative_throughput(self) -> float:
+        total = self.serve_chips + self.train_chips
+        return (self.serve_chips * self.s) / total
+
+
+def plan_tpu_submesh(total_chips: int, s: float,
+                     train_fraction_grid=(0.0, 1 / 64, 1 / 32, 1 / 16, 1 / 8)
+                     ) -> SubmeshPlan:
+    """Pick the training submesh size maximizing serving throughput.
+    The draft is 1 layer — a few chips suffice (paper uses 4 MI250s of a
+    12-GPU total); fractions beyond 1/8 never pay off."""
+    best = None
+    for f in train_fraction_grid:
+        tc = max(int(total_chips * f), 0) if f else 0
+        eff_s = s if tc > 0 else 1.0     # no training -> draft goes stale
+        plan = SubmeshPlan(total_chips - tc, tc, eff_s)
+        if best is None or plan.relative_throughput() > \
+                best.relative_throughput():
+            best = plan
+    return best

@@ -1,0 +1,152 @@
+"""Zero-overhead training-signal extraction (paper §3.2 + Fig. 3).
+
+The target's capture features (concatenated low/mid/high hidden states)
+are produced *inside* the already-running prefill/verify step — zero extra
+forward passes (TIDE's C2 contribution).  This module is the host side:
+a double-buffered ring that receives (features, tokens, mask) for accepted
+positions, overlapping device→host transfer with the next step (JAX
+dispatch is asynchronous; ``jax.device_get`` on the previous step's
+donated outputs runs while the next step computes), and spills full
+buffers to the shared store consumed by the training engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SignalBatch:
+    """One training sample: a contiguous token window with its features."""
+    feats: np.ndarray       # (S, 3D)
+    tokens: np.ndarray      # (S,)
+
+
+class SignalStore:
+    """The 'shared storage' between the serving and training engines.
+
+    In-memory FIFO with an optional .npz spill directory; the training
+    engine polls ``drain``/``peek_count``.  Thread-safe (the serving loop
+    and trainer may run in different threads in the live demo).
+    """
+
+    def __init__(self, spill_dir: Optional[str] = None,
+                 max_samples: int = 100_000):
+        self._lock = threading.Lock()
+        self._buf: List[SignalBatch] = []
+        self.spill_dir = spill_dir
+        self.max_samples = max_samples
+        self.total_added = 0
+        self.total_bytes = 0
+        if spill_dir:
+            os.makedirs(spill_dir, exist_ok=True)
+
+    def add(self, batch: SignalBatch):
+        with self._lock:
+            self._buf.append(batch)
+            self.total_added += 1
+            self.total_bytes += batch.feats.nbytes + batch.tokens.nbytes
+            if len(self._buf) > self.max_samples:
+                self._buf.pop(0)
+
+    def peek_count(self) -> int:
+        with self._lock:
+            return len(self._buf)
+
+    def drain(self, n: Optional[int] = None) -> List[SignalBatch]:
+        with self._lock:
+            if n is None:
+                out, self._buf = self._buf, []
+            else:
+                out, self._buf = self._buf[:n], self._buf[n:]
+            return out
+
+    def spill(self, tag: str):
+        """Flush the buffer to an .npz shard (offline-training parity)."""
+        if not self.spill_dir:
+            return None
+        batches = self.drain()
+        if not batches:
+            return None
+        path = os.path.join(self.spill_dir, f"signals_{tag}.npz")
+        np.savez_compressed(
+            path,
+            feats=np.stack([b.feats for b in batches]),
+            tokens=np.stack([b.tokens for b in batches]))
+        return path
+
+
+class SignalExtractor:
+    """Per-request sliding windows of accepted-position signals.
+
+    The serving engine calls ``offer`` each step with the step outputs
+    (still on device — retrieval is deferred one step so the D2H copy of
+    step t overlaps with the compute of step t+1, the paper's Fig. 3
+    overlap, expressed through JAX's async dispatch).
+    """
+
+    def __init__(self, store: SignalStore, window: int = 64,
+                 feat_dim: int = 0):
+        self.store = store
+        self.window = window
+        self._pending = None     # device arrays from the previous step
+        self._acc: Dict[int, List] = {}   # rid -> [(feat, tok), ...]
+        self.enabled = True
+
+    def offer(self, rids, feats, tokens, mask):
+        """feats (B,T,3D), tokens (B,T), mask (B,T) — device arrays for the
+        just-dispatched step; the previous step's arrays are collected now
+        (they are guaranteed complete once this step is enqueued)."""
+        prev, self._pending = self._pending, (list(rids), feats, tokens, mask)
+        if prev is not None:
+            self._collect(*prev)
+
+    def flush(self):
+        if self._pending is not None:
+            prev, self._pending = self._pending, None
+            self._collect(*prev)
+        # emit all residual windows (end of workload)
+        for rid in list(self._acc):
+            self._emit(rid, force=True)
+
+    def _collect(self, rids, feats, tokens, mask):
+        if not self.enabled:
+            return
+        f = np.asarray(jax.device_get(feats))
+        t = np.asarray(jax.device_get(tokens))
+        m = np.asarray(jax.device_get(mask))
+        for i, rid in enumerate(rids):
+            sel = m[i].astype(bool)
+            if not sel.any():
+                continue
+            acc = self._acc.setdefault(rid, [])
+            acc.extend(zip(f[i][sel], t[i][sel]))
+            if len(acc) >= self.window:
+                self._emit(rid)
+
+    def _emit(self, rid, force: bool = False):
+        acc = self._acc.get(rid, [])
+        while len(acc) >= self.window:
+            chunk, acc = acc[:self.window], acc[self.window:]
+            self.store.add(SignalBatch(
+                feats=np.stack([c[0] for c in chunk]),
+                tokens=np.array([c[1] for c in chunk], np.int32)))
+        if force and len(acc) >= 8:   # short residual windows still usable
+            self.store.add(SignalBatch(
+                feats=np.stack([c[0] for c in acc]),
+                tokens=np.array([c[1] for c in acc], np.int32)))
+            acc = []
+        self._acc[rid] = acc
+        if force:
+            self._acc.pop(rid, None)
+
+
+def storage_bytes_per_token(cfg) -> int:
+    """Hidden-state bytes stored per token (3 capture layers, bf16) —
+    the per-token cost behind paper Table 1."""
+    return 3 * cfg.d_model * 2

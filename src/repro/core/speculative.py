@@ -1,0 +1,203 @@
+"""Speculative decoding: draft-propose + target-verify + acceptance.
+
+Implements both greedy (exact-match) verification and Leviathan-style
+stochastic speculative sampling (accept w.p. min(1, p/q), residual
+resample), plus the fused ``spec_decode_step`` used by the serving engine
+and lowered by the dry-run (the paper's serve step).
+
+Token/position bookkeeping (see core/eagle.py for the draft side):
+the verify block fed to the target is ``[t0, d1, …, dγ]`` where t0 is the
+last committed token; target logits at block index j give the distribution
+of the token after block[j].  ``n_acc`` drafts are accepted and one
+bonus/correction token is sampled from logits[n_acc], so each step commits
+``n_acc + 1`` tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import eagle
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------ verification
+def verify_greedy(target_logits, draft_tokens):
+    """target_logits: (B, γ+1, V); draft_tokens: (B, γ).
+    Returns (n_acc (B,), bonus_token (B,))."""
+    b, t, _ = target_logits.shape
+    gamma = t - 1
+    tgt = target_logits[:, :gamma].argmax(-1).astype(jnp.int32)   # (B, γ)
+    match = tgt == draft_tokens
+    # accepted = longest matching prefix
+    n_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    # bonus/correction token from logits[n_acc]
+    bonus_logits = jnp.take_along_axis(
+        target_logits, n_acc[:, None, None], axis=1)[:, 0]
+    bonus = bonus_logits.argmax(-1).astype(jnp.int32)
+    return n_acc, bonus
+
+
+def verify_sample(key, target_logits, draft_logits, draft_tokens,
+                  temperature: float = 1.0):
+    """Stochastic speculative sampling (Leviathan et al. 2023).
+
+    target_logits: (B, γ+1, V); draft_logits: (B, γ, V);
+    draft_tokens: (B, γ).  Returns (n_acc, bonus) with the guarantee that
+    committed tokens are distributed exactly as target samples.
+    """
+    b, gp1, v = target_logits.shape
+    gamma = gp1 - 1
+    p = jax.nn.softmax(target_logits[:, :gamma] / temperature, axis=-1)
+    q = jax.nn.softmax(draft_logits / temperature, axis=-1)
+    p_tok = jnp.take_along_axis(p, draft_tokens[..., None], axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(q, draft_tokens[..., None], axis=-1)[..., 0]
+    k_acc, k_res = jax.random.split(key)
+    u = jax.random.uniform(k_acc, (b, gamma))
+    ok = u < jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-20))
+    n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    # residual distribution at the first rejected slot (or plain target
+    # sample at slot γ when everything was accepted)
+    sel = jnp.minimum(n_acc, gamma)
+    p_rej = jax.nn.softmax(
+        jnp.take_along_axis(target_logits, sel[:, None, None], axis=1)[:, 0]
+        / temperature, axis=-1)
+    q_rej = jnp.take_along_axis(
+        jnp.pad(q, ((0, 0), (0, 1), (0, 0))),   # dummy row for the all-acc case
+        sel[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(p_rej - q_rej, 0.0)
+    use_residual = (n_acc < gamma)[:, None]
+    dist = jnp.where(use_residual, residual, p_rej)
+    dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-20)
+    bonus = jax.random.categorical(k_res, jnp.log(dist + 1e-20)
+                                   ).astype(jnp.int32)
+    return n_acc, bonus
+
+
+# --------------------------------------------------------------- carry
+class SpecCarry(NamedTuple):
+    """Pending (feature, token) pairs the draft must ingest next round.
+
+    Pair j is (feats[:, j], tokens[:, j]): the target capture at a
+    committed position and the token that *followed* it.  Only the first
+    ``advance[b]`` pairs are valid per request (tail entries are scratch
+    and get overwritten in the draft cache)."""
+    feats: jnp.ndarray      # (B, γ+1, 3D)
+    tokens: jnp.ndarray     # (B, γ+1)
+    advance: jnp.ndarray    # (B,)
+
+
+def init_carry(cfg: ModelConfig, dcfg: ModelConfig, prefill_out,
+               first_token, gamma: int = 3) -> SpecCarry:
+    """Carry after target prefill: one pending pair — the capture of the
+    last prompt position with the first sampled token."""
+    b = first_token.shape[0]
+    feat = prefill_out["captures"][:, -1]
+    feats = jnp.zeros((b, gamma + 1, feat.shape[-1]), feat.dtype
+                      ).at[:, 0].set(feat)
+    tokens = jnp.zeros((b, gamma + 1), jnp.int32
+                       ).at[:, 0].set(first_token.astype(jnp.int32))
+    return SpecCarry(feats, tokens, jnp.ones((b,), jnp.int32))
+
+
+def seed_draft_cache(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
+                     dcache, prefill_out, prompt_tokens):
+    """Draft 'prefill': ingest the prompt pairs (caps[i], t_{i+1}) for
+    i < S-1 so the draft has full context before the first propose."""
+    caps = prefill_out["captures"]                         # (B, S, 3D)
+    b, s, _ = caps.shape
+    _, _, dcache = eagle.draft_extend(
+        dcfg, dparams, tparams["embed"], dcache,
+        caps[:, :s - 1], prompt_tokens[:, 1:],
+        jnp.full((b,), s - 1, jnp.int32))
+    return dcache
+
+
+# ------------------------------------------------------------ fused step
+def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
+                     cache, dcache, carry: SpecCarry, *, gamma: int = 3,
+                     greedy: bool = True, key=None,
+                     moe_impl: str = "sort"):
+    """One full speculative serving step (paper Fig. 2 inner loop).
+
+    1. draft-extend with the pairs committed last round (true features),
+    2. chain-draft γ tokens from the last valid position,
+    3. target verify block [t0, d1..dγ],
+    4. accept, commit caches, emit training-signal captures.
+
+    Returns dict(tokens (B, γ+1) committed tokens (scratch beyond
+    n_commit), n_commit (B,), cache, dcache, carry, captures, accept_mask).
+    """
+    b = carry.tokens.shape[0]
+    if key is None:
+        key = jax.random.key(0)
+    k_draft, k_ver = jax.random.split(key)
+
+    # 1) draft catches up on everything committed last round
+    ext_logits, ext_h, dcache = eagle.draft_extend(
+        dcfg, dparams, tparams["embed"], dcache,
+        carry.feats, carry.tokens, carry.advance)
+    last = (carry.advance - 1)[:, None, None]
+    h_last = jnp.take_along_axis(ext_h, last, axis=1)[:, 0]
+    first_logits = jnp.take_along_axis(ext_logits, last, axis=1)[:, 0]
+
+    # 2) chain-draft γ tokens
+    draft_tokens, draft_logits, dcache = eagle.draft_propose(
+        dcfg, dparams, tparams["embed"], dcache, h_last, first_logits,
+        gamma, greedy=greedy, key=k_draft)
+
+    # 3) target verify: t0 = last committed token (pair index advance-1)
+    t0 = jnp.take_along_axis(carry.tokens, (carry.advance - 1)[:, None],
+                             axis=1)
+    block = jnp.concatenate([t0, draft_tokens], axis=1)
+    out = T.decode_step(cfg, tparams, cache, block, moe_impl=moe_impl)
+    tl = out["logits"]                                     # (B, γ+1, V)
+
+    # 4) acceptance
+    if greedy:
+        n_acc, bonus = verify_greedy(tl, draft_tokens)
+    else:
+        n_acc, bonus = verify_sample(k_ver, tl, draft_logits, draft_tokens)
+    n_commit = n_acc + 1
+
+    # commit target cache (per-request rollback for SSM states)
+    cache = T.commit_cache(cfg, out["cache"], n_commit)
+    # draft cache: roll the speculative lengths back (stale entries get
+    # overwritten by next round's extend)
+    dcache = eagle.reset_propose(dcache, gamma)
+
+    # committed tokens this round: [d1..d_{n_acc}, bonus, scratch...]
+    idx = jnp.arange(gamma + 1)[None, :]
+    accept_mask = idx < n_commit[:, None]
+    committed = jnp.where(idx < n_acc[:, None],
+                          jnp.pad(draft_tokens, ((0, 0), (0, 1))),
+                          bonus[:, None])
+    committed = jnp.where(accept_mask, committed, 0)
+    # next round's pending pairs: (caps[j], committed[j]) for j < n_commit
+    caps = out["captures"]                                  # (B, γ+1, 3D)
+    carry = SpecCarry(caps, committed, n_commit)
+
+    return {"tokens": committed, "n_commit": n_commit, "cache": cache,
+            "dcache": dcache, "carry": carry, "captures": caps,
+            "accept_mask": accept_mask, "n_acc": n_acc, "block": block,
+            "target_logits": tl}
+
+
+def plain_decode_step(cfg: ModelConfig, tparams, cache, carry_token, *,
+                      greedy: bool = True, key=None, moe_impl: str = "sort"):
+    """Baseline autoregressive step (speculation disabled — the TIDE
+    Adaptive Drafter falls back to this when Eq. 5 predicts no gain)."""
+    out = T.decode_step(cfg, tparams, cache, carry_token[:, None],
+                        moe_impl=moe_impl)
+    logits = out["logits"][:, 0]
+    if greedy:
+        nxt = logits.argmax(-1).astype(jnp.int32)
+    else:
+        nxt = jax.random.categorical(key, logits).astype(jnp.int32)
+    cache = T.commit_cache(cfg, out["cache"],
+                           jnp.ones(carry_token.shape, jnp.int32))
+    return {"token": nxt, "cache": cache, "captures": out["captures"],
+            "logits": logits}

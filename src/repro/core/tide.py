@@ -1,0 +1,133 @@
+"""TIDE system orchestrator (paper Fig. 1): wires the Inference Serving
+Engine, Training Signal Extractor, Acceptance Length Monitor, Adaptive
+Drafter, and Draft Model Training Engine into the full adaptive loop.
+
+On real hardware the two engines live on disjoint device sets (serving
+submesh / training submesh — DESIGN.md §2.1); in this CPU container the
+trainer runs interleaved between serving waves, which preserves every
+control decision of the paper (the asynchrony is an interface property:
+the serving engine never blocks on training, it just receives deploys).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import DraftDeployGate
+from repro.core import eagle
+from repro.core.adaptive import AdaptiveDrafter, LatencyProfile
+from repro.core.controller import Decision, TrainingController
+from repro.core.signals import SignalExtractor, SignalStore
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.training.draft_trainer import DraftTrainer
+
+
+@dataclasses.dataclass
+class TideConfig:
+    gamma: int = 3
+    batch_size: int = 4
+    max_len: int = 160
+    greedy: bool = True
+    adaptive_spec: bool = True        # False = TIDE-default (paper §5.4)
+    selective_training: bool = True
+    signal_window: int = 24
+    n_threshold: int = 96             # samples per training cycle (tiny scale)
+    train_epochs: int = 2
+    seed: int = 0
+
+
+class TideSystem:
+    def __init__(self, cfg: ModelConfig, params, tide_cfg: TideConfig,
+                 profile: Optional[LatencyProfile] = None,
+                 dparams=None):
+        self.cfg = cfg
+        self.tcfg = tide_cfg
+        self.dcfg = eagle.draft_config(cfg)
+        if dparams is None:
+            dparams = eagle.draft_init(self.dcfg,
+                                       jax.random.key(tide_cfg.seed + 7))
+        self.store = SignalStore()
+        self.extractor = SignalExtractor(self.store,
+                                         window=tide_cfg.signal_window)
+        self.controller = TrainingController(
+            n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
+            n_init=4)
+        drafter = None
+        if tide_cfg.adaptive_spec and profile is not None:
+            drafter = AdaptiveDrafter(profile, gamma=tide_cfg.gamma)
+        self.engine = ServingEngine(
+            cfg, params, self.dcfg, dparams, gamma=tide_cfg.gamma,
+            max_len=tide_cfg.max_len, batch_size=tide_cfg.batch_size,
+            greedy=tide_cfg.greedy, drafter=drafter,
+            controller=self.controller if tide_cfg.selective_training
+            else None,
+            extractor=self.extractor, seed=tide_cfg.seed)
+        self.trainer = DraftTrainer(cfg, self.dcfg, params["embed"])
+        self.gate = DraftDeployGate(dparams)
+        self.events: List[Dict] = []
+        # start in collection mode so the cold draft trains immediately
+        self.controller.collection_enabled = True
+
+    # ----------------------------------------------------------- training
+    def _maybe_train(self):
+        need = self.store.peek_count() * self.tcfg.signal_window
+        if need < self.controller.n_threshold:
+            return
+        batches = self.store.drain()
+        baseline = self.controller.alpha_train
+        dparams, _ = self.gate.current()
+        result = self.trainer.train_cycle(dparams, batches,
+                                          epochs=self.tcfg.train_epochs,
+                                          seed=self.tcfg.seed)
+        deployed = self.gate.offer(result["dparams"], result["eval_acc"],
+                                   baseline)
+        if self.tcfg.selective_training:
+            self.controller.training_result(result["eval_acc"])
+        if deployed:
+            self.engine.deploy_draft(result["dparams"])
+        self.events.append({
+            "kind": "train_cycle", "eval_acc": result["eval_acc"],
+            "train_acc": result["train_acc"], "baseline": baseline,
+            "deployed": deployed, "steps": result["steps"],
+            "seconds": result["seconds"],
+            "engine_steps": self.engine.stats.steps,
+        })
+
+    # ------------------------------------------------------------ serving
+    def run(self, waves: Iterable[List], max_new_tokens: int = 48
+            ) -> List[Request]:
+        """Serve a workload stream (already grouped into waves of
+        (domain, prompt) pairs). Returns all completed requests."""
+        done: List[Request] = []
+        for wave in waves:
+            reqs = [Request(prompt=p, domain=d,
+                            max_new_tokens=max_new_tokens)
+                    for d, p in wave]
+            self.engine.serve_wave(reqs)
+            done.extend(reqs)
+            self._maybe_train()
+        return done
+
+    # ------------------------------------------------------------- stats
+    def summary(self) -> Dict:
+        st = self.engine.stats
+        return {
+            "tokens": st.tokens_out,
+            "throughput_tok_s": st.throughput,
+            "accept_len": st.accept_len,
+            "steps": st.steps,
+            "spec_steps": st.spec_steps,
+            "train_cycles": len([e for e in self.events
+                                 if e["kind"] == "train_cycle"]),
+            "deployed": self.gate.version,
+            "signals_collected": self.store.total_added,
+            "signal_bytes": self.store.total_bytes,
+        }

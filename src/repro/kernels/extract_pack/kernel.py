@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for zero-overhead training-signal packing (TIDE §3.2).
+
+After verification, accepted-position capture features must be compacted
+(per request) into the contiguous host-transfer buffer.  Fused into one
+VMEM pass, this is the device half of the paper's "overlap extraction
+with the next verification step": the packed buffer is the only thing the
+host copies, and producing it costs one (T, F) tile per request.
+
+T = γ+1 is tiny; F = 3·d_model is the wide axis.  Grid: (B, F_blocks).
+The per-row compaction is a T-step select loop (T ≤ 8), vectorized over
+the F lane dimension — no gathers, MXU untouched, pure VPU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(mask_ref, feat_ref, tok_ref, pf_ref, pt_ref, cnt_ref, *,
+            t: int, block_f: int):
+    jf = pl.program_id(1)
+    mask = mask_ref[0, :]                       # (t,) int32
+    feats = feat_ref[0, :, :]                   # (t, block_f)
+    pf_ref[0, :, :] = jnp.zeros_like(pf_ref[0, :, :])
+    # slot[i] = exclusive prefix sum of mask
+    slots = jnp.cumsum(mask) - mask
+    # write row i into slot[i] where accepted: T-step select loop
+    for dst in range(t):
+        # row that lands at dst (at most one): mask[i] & slots[i]==dst
+        sel = ((mask == 1) & (slots == dst)).astype(feats.dtype)   # (t,)
+        pf_ref[0, dst, :] = jnp.sum(sel[:, None] * feats, axis=0)
+
+    @pl.when(jf == 0)
+    def _tok():
+        toks = tok_ref[0, :]
+        pt_ref[0, :] = jnp.zeros_like(pt_ref[0, :])
+        for dst in range(t):
+            sel = ((mask == 1) & (slots == dst)).astype(jnp.int32)
+            pt_ref[0, dst] = jnp.sum(sel * toks)
+        cnt_ref[0] = jnp.sum(mask)
+
+
+def extract_pack(feats, tokens, mask, *, block_f: int = 512,
+                 interpret: bool = False):
+    """feats: (B, T, F); tokens: (B, T) int32; mask: (B, T) bool.
+    Returns (packed_feats, packed_tokens, counts) — accepted entries
+    compacted to the front per row, zero tail."""
+    b, t, f = feats.shape
+    block_f = min(block_f, f)
+    if f % block_f:
+        raise ValueError(f"feature dim {f} % block_f {block_f} != 0")
+    nf = f // block_f
+    kern = functools.partial(_kernel, t=t, block_f=block_f)
+    pf, pt, cnt = pl.pallas_call(
+        kern,
+        grid=(b, nf),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda b_, jf: (b_, 0)),
+            pl.BlockSpec((1, t, block_f), lambda b_, jf: (b_, 0, jf)),
+            pl.BlockSpec((1, t), lambda b_, jf: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, block_f), lambda b_, jf: (b_, 0, jf)),
+            pl.BlockSpec((1, t), lambda b_, jf: (b_, 0)),
+            pl.BlockSpec((1,), lambda b_, jf: (b_,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, f), feats.dtype),
+            jax.ShapeDtypeStruct((b, t), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask.astype(jnp.int32), feats, tokens.astype(jnp.int32))
+    return pf, pt, cnt

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the training-signal pack kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.extract_pack.kernel import extract_pack
+from repro.kernels.extract_pack.ref import extract_pack_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "force_kernel"))
+def pack_signals(feats, tokens, mask, *, block_f: int = 512,
+                 force_kernel: bool = False):
+    if _on_tpu() or force_kernel:
+        return extract_pack(feats, tokens, mask, block_f=block_f,
+                            interpret=not _on_tpu())
+    return extract_pack_ref(feats, tokens, mask)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the signal extraction pack kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def extract_pack_ref(feats, tokens, mask):
+    """Compact accepted positions to the front of each row.
+
+    feats: (B, T, F); tokens: (B, T) int32; mask: (B, T) bool.
+    Returns (packed_feats (B,T,F), packed_tokens (B,T), counts (B,)):
+    row b holds the masked entries in order at [0, counts[b]); the tail is
+    zero."""
+    b, t, f = feats.shape
+    pos = jnp.cumsum(mask, axis=1) - mask.astype(jnp.int32)   # target slot
+    slot = jnp.where(mask, pos, t)                            # t = dropped
+    pf = jnp.zeros((b, t + 1, f), feats.dtype)
+    pt = jnp.zeros((b, t + 1), jnp.int32)
+    bidx = jnp.arange(b)[:, None].repeat(t, 1)
+    pf = pf.at[bidx, slot].set(feats)
+    pt = pt.at[bidx, slot].set(tokens)
+    return pf[:, :t], pt[:, :t], mask.sum(axis=1).astype(jnp.int32)

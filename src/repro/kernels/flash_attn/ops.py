@@ -1,0 +1,27 @@
+"""Jitted public wrapper for the flash prefill attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attn.kernel import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "force_kernel"))
+def flash_attn(q, k, v, *, causal: bool = True, window: int = 0,
+               block_q: int = 128, block_kv: int = 128,
+               force_kernel: bool = False):
+    """Dispatch: Pallas kernel on TPU (or forced, in interpret mode on
+    CPU — used by the allclose sweeps); jnp oracle elsewhere."""
+    if _on_tpu() or force_kernel:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=not _on_tpu())
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

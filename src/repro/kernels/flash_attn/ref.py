@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash prefill attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (B, S, Hq, D); k, v: (B, S, Hk, D); GQA by head grouping.
+    Returns (B, S, Hq, D) in q.dtype; math in fp32."""
+    b, s, hq, d = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qf = q.astype(jnp.float32).reshape(b, s, hk, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / jnp.sqrt(d)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return out.reshape(b, s, hq, d).astype(q.dtype)

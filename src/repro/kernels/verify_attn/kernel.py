@@ -1,0 +1,116 @@
+"""Pallas TPU speculative-verification attention (flash-decoding style).
+
+The γ+1 verify queries of each request attend to its KV cache (new block
+already written).  This is the target-model hot spot of TIDE's serving
+step: tiny query block, huge KV — so the kernel tiles the *KV sequence*
+into VMEM blocks (grid-innermost) and carries an online softmax in
+scratch, exactly flash-decoding on TPU.  Per-request valid windows
+(lengths/pad) arrive as small int refs in VMEM; fully-masked KV blocks
+are skipped with ``pl.when`` (no MXU work issued).
+
+The query block (γ+1 = 4 rows) is padded to 8 rows (fp32 sublane tile);
+masking keeps the pad rows inert.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, t: int, t_pad: int, block_kv: int, nkv: int,
+            window: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    pad = pad_ref[0]
+    blk_lo = ik * block_kv
+    # last readable position for any query in this request:
+    max_kpos = length + t - 1
+
+    @pl.when(blk_lo <= max_kpos)
+    def _work():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (t_pad, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bkv, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale                     # (t_pad, bkv)
+        qpos = length + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (t_pad, block_kv), 0)
+        kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (t_pad, block_kv), 1)
+        mask = (kpos <= qpos) & (kpos >= pad)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _fin():
+        o_ref[0, :, 0, :] = (acc_scr[...]
+                             / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+def verify_attention(q, k_cache, v_cache, lengths, pad=None, *,
+                     window: int = 0, block_kv: int = 512,
+                     interpret: bool = False):
+    """q: (B, T, Hq, D); k/v_cache: (B, Smax, Hk, D); lengths/pad: (B,).
+    Returns (B, T, Hq, D)."""
+    b, t, hq, d = q.shape
+    smax, hk = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    if pad is None:
+        pad = jnp.zeros((b,), jnp.int32)
+    block_kv = min(block_kv, smax)
+    if smax % block_kv:
+        raise ValueError(f"cache len {smax} % block_kv {block_kv} != 0")
+    nkv = smax // block_kv
+    t_pad = max(8, t)            # fp32 sublane tile
+    if t != t_pad:
+        q = jnp.pad(q, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    grid = (b, hq, nkv)
+    kern = functools.partial(
+        _kernel, t=t, t_pad=t_pad, block_kv=block_kv, nkv=nkv,
+        window=window, scale=1.0 / math.sqrt(d))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h, ik: (b_,)),
+            pl.BlockSpec((1,), lambda b_, h, ik: (b_,)),
+            pl.BlockSpec((1, t_pad, 1, d), lambda b_, h, ik: (b_, 0, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda b_, h, ik: (b_, ik, h // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda b_, h, ik: (b_, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t_pad, 1, d),
+                               lambda b_, h, ik: (b_, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t_pad, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((t_pad,), jnp.float32),
+            pltpu.VMEM((t_pad,), jnp.float32),
+            pltpu.VMEM((t_pad, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), pad.astype(jnp.int32), q, k_cache, v_cache)
+    return out[:, :t]

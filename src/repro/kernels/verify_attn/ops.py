@@ -1,0 +1,25 @@
+"""Jitted public wrapper for the speculative verification attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.verify_attn.kernel import verify_attention
+from repro.kernels.verify_attn.ref import verify_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv",
+                                             "force_kernel"))
+def verify_attn(q, k_cache, v_cache, lengths, pad=None, *, window: int = 0,
+                block_kv: int = 512, force_kernel: bool = False):
+    if _on_tpu() or force_kernel:
+        return verify_attention(q, k_cache, v_cache, lengths, pad,
+                                window=window, block_kv=block_kv,
+                                interpret=not _on_tpu())
+    return verify_attention_ref(q, k_cache, v_cache, lengths, pad,
+                                window=window)

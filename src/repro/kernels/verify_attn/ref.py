@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the speculative verification attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def verify_attention_ref(q, k_cache, v_cache, lengths, pad=None, *,
+                         window: int = 0):
+    """q: (B, T, Hq, D) — γ+1 verify queries at cache positions
+    lengths[b] + [0..T); k/v_cache: (B, Smax, Hk, D) with the new block's
+    K/V already written. Valid region is [pad[b], lengths[b] + t].
+    Returns (B, T, Hq, D)."""
+    b, t, hq, d = q.shape
+    smax, hk = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    qf = q.astype(jnp.float32).reshape(b, t, hk, g, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf, kf) / jnp.sqrt(d)
+    qpos = lengths[:, None] + jnp.arange(t)[None, :]          # (B, T)
+    kpos = jnp.arange(smax)
+    mask = kpos[None, None, :] <= qpos[:, :, None]
+    if pad is not None:
+        mask &= kpos[None, None, :] >= pad[:, None, None]
+    if window:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, vf)
+    return out.reshape(b, t, hq, d).astype(q.dtype)

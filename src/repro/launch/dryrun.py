@@ -1,0 +1,366 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo
+and extract memory/cost/collective analysis for the roofline report.
+
+MUST set XLA_FLAGS before any jax import — done in the first two lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out experiments/dryrun
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs import shapes as shp
+from repro.core import eagle, speculative as spec
+from repro.launch import mesh as mesh_mod
+from repro.launch import roofline as rf
+from repro.launch import sharding as sh
+from repro.models import transformer as T
+from repro.models import param as P
+from repro.models.config import ModelConfig
+from repro.training.optimizer import adafactor
+from repro.training.trainer import make_train_step
+
+GAMMA = 3
+
+
+def _abstract_params(cfg: ModelConfig, specs=None):
+    specs = specs or T.param_specs(cfg)
+    dt = cfg.weight_dtype
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt), specs,
+        is_leaf=P.is_spec)
+
+
+def _param_shardings(cfg, mesh, rules, specs=None):
+    specs = specs or T.param_specs(cfg)
+    ab = _abstract_params(cfg, specs)
+    axes = P.logical_axes(specs)
+    return sh.logical_to_sharding(ab, axes, mesh, rules), ab
+
+
+def _cache_shardings(cfg, mesh, rules, cache_ab):
+    axes = T.cache_axes(cfg)
+    return sh.logical_to_sharding(cache_ab, axes, mesh, rules)
+
+
+def _bf16(cfg: ModelConfig) -> ModelConfig:
+    """Dry-run numerics policy: bf16 weights + activations (the HBM-budget
+    math in EXPERIMENTS.md; Adafactor keeps optimizer state O(d))."""
+    return dataclasses.replace(cfg, dtype="bfloat16",
+                               param_dtype="bfloat16")
+
+
+# ================================================================ builders
+def build_train(cfg: ModelConfig, mesh, shape_name: str, rules, moe_impl,
+                n_micro_override: int = 0):
+    specs_in = shp.input_specs(cfg, shape_name)
+    batch_ab = specs_in["batch"]
+    b = batch_ab["tokens"].shape[0]
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.devices.shape[mesh.axis_names.index(ax)]
+    n_micro = n_micro_override or max(b // dp, 1)
+    opt = adafactor()
+    step = make_train_step(cfg, opt, n_micro=n_micro, moe_impl=moe_impl,
+                           remat=True)
+    pspecs = T.param_specs(cfg)
+    param_sh, param_ab = _param_shardings(cfg, mesh, rules, pspecs)
+    opt_ab = jax.eval_shape(opt.init, param_ab)
+    # adafactor state: vr drops the last param axis, vc the second-to-last
+    paxes = P.logical_axes(pspecs)
+
+    def state_axes(ax):
+        ax = tuple(ax)
+        return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]} if len(ax) >= 2 \
+            else {"v": ax}
+    oaxes = jax.tree.map(state_axes, paxes,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    opt_sh = sh.logical_to_sharding(opt_ab, oaxes, mesh, rules)
+    batch_sh = sh.tree_sharding_for_tokens(batch_ab, mesh, rules)
+    step_ab = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh,
+                                         sh.replicated(mesh)),
+                     donate_argnums=(0, 1))
+    return jitted, (param_ab, opt_ab, batch_ab, step_ab)
+
+
+def build_prefill(cfg: ModelConfig, mesh, shape_name: str, rules, moe_impl):
+    specs_in = shp.input_specs(cfg, shape_name)
+    tokens_ab, extra_ab = specs_in["tokens"], specs_in["extra"]
+
+    def prefill_fn(params, tokens, extra):
+        return T.prefill(cfg, params, tokens, extra=extra,
+                         max_len=tokens.shape[1], moe_impl=moe_impl,
+                         want_caps=True)
+
+    param_sh, param_ab = _param_shardings(cfg, mesh, rules)
+    tok_sh = sh.tree_sharding_for_tokens(tokens_ab, mesh, rules)
+    ex_sh = sh.tree_sharding_for_tokens(extra_ab, mesh, rules)
+    jitted = jax.jit(prefill_fn, in_shardings=(param_sh, tok_sh, ex_sh))
+    return jitted, (param_ab, tokens_ab, extra_ab)
+
+
+def build_serve(cfg: ModelConfig, mesh, shape_name: str, rules, moe_impl,
+                baseline: bool = False):
+    """Speculative serve step (paper-faithful) or plain autoregressive
+    baseline step (--baseline)."""
+    specs_in = shp.input_specs(cfg, shape_name, gamma=GAMMA)
+    cache_ab = specs_in["cache"]
+    b = specs_in["tokens"].shape[0]
+    max_len = cache_ab["lengths"].shape  # noqa  (lengths is (B,))
+    dcfg = eagle.draft_config(cfg)
+    smax = jax.tree.leaves(cache_ab["body"])[0].shape[2] \
+        if "body" in cache_ab else 0
+    # draft cache spans the same horizon
+    dcache_ab = eagle.draft_cache_abstract(dcfg, b, smax)
+
+    if baseline:
+        def step_fn(tparams, cache, token, seed):
+            key = jax.random.fold_in(jax.random.key(0), seed)
+            out = spec.plain_decode_step(cfg, tparams, cache, token,
+                                         greedy=True, key=key,
+                                         moe_impl=moe_impl)
+            return {"token": out["token"], "cache": out["cache"],
+                    "captures": out["captures"]}
+
+        param_sh, param_ab = _param_shardings(cfg, mesh, rules)
+        cache_sh = _cache_shardings(cfg, mesh, rules, cache_ab)
+        tok_ab = jax.ShapeDtypeStruct((b,), jnp.int32)
+        jitted = jax.jit(step_fn, in_shardings=(
+            param_sh, cache_sh, sh.tree_sharding_for_tokens(tok_ab, mesh,
+                                                            rules),
+            sh.replicated(mesh)), donate_argnums=(1,))
+        return jitted, (param_ab, cache_ab, tok_ab,
+                        jax.ShapeDtypeStruct((), jnp.int32))
+
+    carry_ab = spec.SpecCarry(
+        feats=jax.ShapeDtypeStruct((b, GAMMA + 1, 3 * cfg.d_model),
+                                   cfg.act_dtype),
+        tokens=jax.ShapeDtypeStruct((b, GAMMA + 1), jnp.int32),
+        advance=jax.ShapeDtypeStruct((b,), jnp.int32))
+
+    def step_fn(tparams, dparams, cache, dcache, carry, seed):
+        key = jax.random.fold_in(jax.random.key(0), seed)
+        out = spec.spec_decode_step(cfg, dcfg, tparams, dparams, cache,
+                                    dcache, carry, gamma=GAMMA, greedy=True,
+                                    key=key, moe_impl=moe_impl)
+        return {"tokens": out["tokens"], "n_commit": out["n_commit"],
+                "cache": out["cache"], "dcache": out["dcache"],
+                "carry": out["carry"], "captures": out["captures"],
+                "accept_mask": out["accept_mask"]}
+
+    param_sh, param_ab = _param_shardings(cfg, mesh, rules)
+    dspecs = eagle.draft_specs(dcfg)
+    dparam_ab = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dcfg.weight_dtype), dspecs,
+        is_leaf=P.is_spec)
+    dparam_sh = sh.logical_to_sharding(dparam_ab, P.logical_axes(dspecs),
+                                       mesh, rules)
+    cache_sh = _cache_shardings(cfg, mesh, rules, cache_ab)
+    dcache_sh = sh.logical_to_sharding(dcache_ab, eagle.draft_cache_axes(),
+                                       mesh, rules)
+    carry_sh = spec.SpecCarry(
+        feats=sh.tree_sharding_for_tokens(carry_ab.feats, mesh, rules),
+        tokens=sh.tree_sharding_for_tokens(carry_ab.tokens, mesh, rules),
+        advance=sh.tree_sharding_for_tokens(carry_ab.advance, mesh, rules))
+    jitted = jax.jit(step_fn, in_shardings=(
+        param_sh, dparam_sh, cache_sh, dcache_sh, carry_sh,
+        sh.replicated(mesh)), donate_argnums=(2, 3))
+    return jitted, (param_ab, dparam_ab, cache_ab, dcache_ab, carry_ab,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+
+RULESETS = {
+    "base": sh.BASE_RULES,
+    "ep": sh.EXPERT_PARALLEL_RULES,
+    "ws": sh.SERVE_WEIGHT_STATIONARY,
+    "longctx": sh.LONG_CONTEXT_RULES,
+}
+
+
+def default_rules(cfg: ModelConfig, kind: str) -> str:
+    """Paper-faithful deployment defaults: FSDP/ZeRO for training; TP
+    weight-stationary serving (SGLang-style), with expert parallelism over
+    the data axis for MoE archs (their dense TP shard alone exceeds v5e
+    HBM at 671B/398B scale)."""
+    if kind == "train":
+        return "base"
+    return "ep" if cfg.num_experts else "ws"
+
+
+# ================================================================== driver
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool,
+             rules_name: str = "auto", moe_impl: str = "sort",
+             baseline: bool = False, hints: bool = True,
+             mixed_attn: bool = True, chunk: int = 0,
+             n_micro: int = 0, force_wg: bool = False) -> Dict:
+    ok, reason = shp.applicable(configs.get(arch), shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason,
+                "multi_pod": multi_pod}
+    cfg = _bf16(shp.shape_cfg(configs.get(arch), shape_name))
+    if chunk:
+        cfg = dataclasses.replace(cfg, chunk_len=chunk)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    kind = shp.SHAPES[shape_name].kind
+    if rules_name == "auto":
+        rules_name = default_rules(cfg, kind)
+    rules = RULESETS[rules_name]
+    if force_wg:
+        rules = dict(rules, **{"__weight_gather__": True})
+    from repro.models import attention as attn_mod
+    from repro.models import hints as hints_mod
+    import contextlib
+    attn_mod.MIXED_PRECISION = mixed_attn
+    hint_ctx = (hints_mod.activate(mesh, rules) if hints
+                else contextlib.nullcontext())
+    t0 = time.perf_counter()
+    with mesh, hint_ctx:
+        if kind == "train":
+            jitted, args = build_train(cfg, mesh, shape_name, rules,
+                                       moe_impl, n_micro_override=n_micro)
+        elif kind == "prefill":
+            jitted, args = build_prefill(cfg, mesh, shape_name, rules,
+                                         moe_impl)
+        else:
+            jitted, args = build_serve(cfg, mesh, shape_name, rules,
+                                       moe_impl, baseline=baseline)
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    roof = rf.analyze(compiled, mesh.devices.size)
+    mem = rf.memory_analysis_dict(compiled)
+    shape = shp.SHAPES[shape_name]
+    tokens = (shape.global_batch * shape.seq_len if kind != "decode"
+              else shape.global_batch * (GAMMA + 1))
+    if kind == "train" and cfg.family == "audio":
+        tokens = shape.global_batch * (cfg.decoder_len + shape.seq_len)
+    mf = rf.model_flops(cfg, kind, tokens)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "rules": rules_name, "moe_impl": moe_impl,
+        "baseline": baseline, "kind": kind,
+        "hints": hints, "mixed_attn": mixed_attn,
+        "window": cfg.window,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "roofline": roof.as_dict(),
+        "memory": mem,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(roof.flops, 1.0),
+        "params_b": round(cfg.param_count() / 1e9, 3),
+        "active_params_b": round(cfg.active_param_count() / 1e9, 3),
+    }
+    if mem.get("argument_size_in_bytes") is not None:
+        # Resident bytes per device: weights + optimizer state + caches +
+        # outputs (donated outputs alias args).  This is the hard HBM
+        # floor; temps are upper-bounded by the CPU backend's analysis,
+        # which does NOT model cross-iteration buffer reuse in scans
+        # (microbatch/layer loops) and so overcounts roughly by the trip
+        # count — recorded as temp_upper_bound for reference only.
+        resident = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0))
+        result["resident_bytes"] = resident
+        result["temp_upper_bound_bytes"] = mem.get("temp_size_in_bytes", 0)
+        result["fits_16g_hbm_resident"] = bool(resident < 16e9)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--rules", default="auto",
+                    choices=["auto"] + list(RULESETS))
+    ap.add_argument("--moe-impl", default="sort",
+                    choices=["sort", "einsum", "shard_map"])
+    ap.add_argument("--baseline", action="store_true",
+                    help="plain autoregressive decode instead of the "
+                         "speculative serve step")
+    ap.add_argument("--no-hints", action="store_true",
+                    help="disable activation-sharding hints (§Perf A/B)")
+    ap.add_argument("--fp32-attn", action="store_true",
+                    help="baseline fp32-upcast attention (§Perf A/B)")
+    ap.add_argument("--no-flash-decode", action="store_true",
+                    help="baseline full-score decode attention (§Perf A/B)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="override cfg.chunk_len (mamba/rwkv scan chunk)")
+    ap.add_argument("--micro", type=int, default=0,
+                    help="override grad-accum microbatch count (§Perf)")
+    ap.add_argument("--force-wg", action="store_true",
+                    help="enable use-site weight gathering even for "
+                         "training rules (§Perf H-C3 A/B)")
+    ap.add_argument("--tag", default="",
+                    help="extra tag appended to output filenames")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.assigned() if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                tag = (f"{arch}_{shape_name}_{'2pod' if mp else '1pod'}"
+                       f"_{args.rules}"
+                       + ("_baseline" if args.baseline else "")
+                       + (f"_{args.tag}" if args.tag else ""))
+                path = os.path.join(args.out, tag + ".json")
+                t0 = time.perf_counter()
+                try:
+                    from repro.models import attention as _attn
+                    _attn.DECODE_FLASH = not args.no_flash_decode
+                    res = run_pair(arch, shape_name, multi_pod=mp,
+                                   rules_name=args.rules,
+                                   moe_impl=args.moe_impl,
+                                   baseline=args.baseline,
+                                   hints=not args.no_hints,
+                                   mixed_attn=not args.fp32_attn,
+                                   chunk=args.chunk, n_micro=args.micro,
+                                   force_wg=args.force_wg)
+                    status = ("SKIP " + res["skipped"]) if "skipped" in res \
+                        else (f"ok {res['roofline']['dominant']}-bound "
+                              f"step={res['roofline']['step_s']:.4f}s")
+                except Exception as e:  # noqa
+                    failures += 1
+                    res = {"arch": arch, "shape": shape_name,
+                           "multi_pod": mp, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    status = f"FAIL {type(e).__name__}: {str(e)[:120]}"
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2)
+                print(f"[{time.perf_counter() - t0:7.1f}s] {tag}: {status}",
+                      flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

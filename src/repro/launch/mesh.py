@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods; the
+``pod`` axis carries data parallelism whose collectives cross DCN/ICI
+pod boundaries.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state — required because the dry-run must
+set XLA_FLAGS before the first jax call while tests/benches see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run "
+            "under launch/dryrun.py (it sets "
+            "--xla_force_host_platform_device_count)")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_demo_mesh(shape=(1, 1), axes=("data", "model")):
+    """1-device mesh for CPU tests of the sharded code paths."""
+    import numpy as np
+    dev = np.asarray(jax.devices()[:1]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

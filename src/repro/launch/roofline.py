@@ -1,0 +1,338 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = Σ per-op traffic / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+traffic is parsed from the compiled HLO text: per op we take the result
+byte size with ring-schedule multipliers (all-reduce 2(n−1)/n, gather /
+scatter / all-to-all (n−1)/n, permute 1) and the replica-group size n
+parsed per op.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# first dtype[dims] token on the line = the (payload) result shape; async
+# start ops have tuple results whose first component is the payload
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
+    top: Optional[List[Dict]] = None       # largest contributors
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+# ---------------------------------------------------- trip-aware parsing
+# HLO text is per-computation; ops inside a while body execute
+# trip_count times (scan over layers/microbatches/KV blocks).  Build a
+# per-computation execution multiplier from `backend_config=
+# {"known_trip_count":{"n":"R"}}` + body/calls edges.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\) -> .* \{")
+_WHILE_RE = re.compile(
+    r"body=%([\w.\-]+).*?known_trip_count\":\{\"n\":\"(\d+)\"")
+_WHILE_NOCOUNT_RE = re.compile(r" while\(.*body=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, float]:
+    """name -> estimated execution count of each HLO computation."""
+    current = "ENTRY"
+    entry = "ENTRY"
+    edges = []          # (parent_comp, child_comp, multiplier)
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            if line.strip().startswith("ENTRY"):
+                entry = current
+            continue
+        if " while(" in line:
+            trip = 1
+            mw = _WHILE_RE.search(line)
+            if mw:
+                body, trip = mw.group(1), int(mw.group(2))
+            else:
+                mb = _WHILE_NOCOUNT_RE.search(line)
+                if not mb:
+                    continue
+                body = mb.group(1)
+            edges.append((current, body, trip))
+            mc = _COND_RE.search(line)
+            if mc:
+                edges.append((current, mc.group(1), trip))
+        for mc in _CALLS_RE.finditer(line):
+            edges.append((current, mc.group(1), 1))
+    mult: Dict[str, float] = {"ENTRY": 1.0, entry: 1.0}
+    # propagate (graph is a DAG of computations; iterate to fixpoint)
+    for _ in range(30):
+        changed = False
+        for parent, child, k in edges:
+            p = mult.get(parent)
+            if p is None:
+                continue
+            v = p * k
+            if mult.get(child, 0.0) < v:
+                mult[child] = v
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _line_multiplier(mult: Dict[str, float], comp: str) -> float:
+    return mult.get(comp, 1.0)
+
+
+def _iter_lines_with_comp(hlo_text: str):
+    current = "ENTRY"
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            continue
+        yield current, line
+
+
+# `%x = f32[...] convert(%y)` — the CPU backend emulates bf16 matmuls by
+# upcasting whole operands to f32; TPU MXUs consume bf16 natively, so
+# this traffic is discounted from the TPU memory term.  Operand dtypes
+# are not printed inline, so the direction heuristic is by result dtype;
+# only tensors >= 1 MB are counted (small f32 converts are legitimate
+# numerics that TPU also performs).
+_CONVERT_RE = re.compile(r"= (f32|bf16|f16)\[([0-9,]*)\]\S* convert\(")
+_CONVERT_MIN_BYTES = 1e6
+
+
+def _fusion_bodies(hlo_text: str) -> set:
+    """Computations that are fusion bodies (ops inside them are fused —
+    intermediate converts there cost no HBM traffic)."""
+    bodies = set()
+    for line in hlo_text.splitlines():
+        if " fusion(" in line or "kind=k" in line:
+            for m in _CALLS_RE.finditer(line):
+                bodies.add(m.group(1))
+    return bodies
+
+
+def parse_convert_overhead(hlo_text: str) -> float:
+    """Bytes of precision-emulation converts (read + write), trip-aware.
+
+    Counts (a) top-level convert ops in entry/loop computations and
+    (b) fusions whose body is a pure convert (``wrapped_convert_*``) —
+    both materialize their output.  Converts *inside* other fusions are
+    register-level and free."""
+    mult = computation_multipliers(hlo_text)
+    fused = _fusion_bodies(hlo_text)
+    total = 0.0
+    for comp, line in _iter_lines_with_comp(hlo_text):
+        m = _CONVERT_RE.search(line)
+        is_conv_fusion = (" fusion(" in line
+                          and "wrapped_convert" in line)
+        if not m and not is_conv_fusion:
+            continue
+        if m and comp in fused and not comp.startswith("wrapped_convert"):
+            continue                      # fused interior convert: free
+        if is_conv_fusion and not m:
+            m = _SHAPE_RE.search(line)
+            if not m:
+                continue
+        dtype, dims = m.groups()
+        out_b = _shape_bytes(dtype, dims)
+        if out_b < _CONVERT_MIN_BYTES:
+            continue
+        k = _line_multiplier(mult, comp)
+        if dtype == "f32":
+            total += (out_b + out_b / 2) * k     # bf16 read + f32 write
+        else:
+            total += (out_b + out_b * 2) * k     # f32 read + bf16 write
+    return total
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Trip-aware: a collective inside a scanned layer loop counts once
+    per iteration (execution multipliers from computation_multipliers)."""
+    mult = computation_multipliers(hlo_text)
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    traffic: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    top: List[Dict] = []
+    for comp, line in _iter_lines_with_comp(hlo_text):
+        if "-done(" in line:
+            continue          # count start ops only (async pairs)
+        kind = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                kind = c
+                break
+        if kind is None:
+            continue
+        m = _SHAPE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims = m.groups()
+        size = _shape_bytes(dtype, dims)
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        n = max(n, 2)
+        if kind == "all-reduce":
+            factor = 2.0 * (n - 1) / n
+        elif kind == "collective-permute":
+            factor = 1.0
+        else:
+            factor = (n - 1) / n
+        k = _line_multiplier(mult, comp)
+        counts[kind] += int(k)
+        # `size` is the per-shard result size (HLO shapes in SPMD are
+        # per-device); traffic is what each chip moves over ICI
+        contrib = size * factor * k
+        traffic[kind] += contrib
+        top.append({"kind": kind, "bytes": contrib, "mult": k,
+                    "shape": f"{dtype}[{dims}]", "comp": comp[:40]})
+    top.sort(key=lambda d: -d["bytes"])
+    return CollectiveStats(counts, traffic, top[:8])
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All quantities are PER DEVICE: after SPMD partitioning the compiled
+    module is the per-device program, so ``cost_analysis`` flops/bytes and
+    HLO shapes are already per-chip."""
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    collective_bytes: float      # per-chip ICI traffic
+    chips: int
+    collectives: Optional[CollectiveStats] = None
+    convert_bytes: float = 0.0   # CPU-backend bf16-emulation traffic
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        """TPU memory term: HLO bytes minus the CPU backend's bf16→f32
+        emulation converts (absent on TPU; see parse_convert_overhead).
+        The estimate is itself approximate (operand dtypes are not in the
+        HLO text), so the subtraction is floored at 15% of the raw bytes
+        — both §Perf A/B sides use the same accounting."""
+        return max(self.hbm_bytes - self.convert_bytes,
+                   0.15 * self.hbm_bytes) / HBM_BW
+
+    @property
+    def memory_raw_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        d = {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes, "chips": self.chips,
+            "convert_bytes": self.convert_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_raw_s": self.memory_raw_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_s": self.step_s,
+        }
+        if self.collectives:
+            d["collective_counts"] = self.collectives.counts
+            d["collective_traffic"] = self.collectives.bytes_by_kind
+            d["collective_top"] = self.collectives.top
+        return d
+
+
+def analyze(compiled, mesh_chips: int) -> Roofline:
+    """Extract roofline terms from a jax compiled object."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):            # older jax: list per device
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = parse_collectives(text)
+    conv = parse_convert_overhead(text)
+    return Roofline(flops=flops, hbm_bytes=nbytes,
+                    collective_bytes=coll.total_bytes, chips=mesh_chips,
+                    collectives=coll, convert_bytes=conv)
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """'Useful' model FLOPs (6·N·D train, 2·N_active·D inference), whole
+    program.  Compare per chip: model_flops / chips vs. HLO flops."""
+    n_act = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n_act * tokens
+    return 2.0 * n_act * tokens
+
+
+def memory_analysis_dict(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

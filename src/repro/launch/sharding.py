@@ -1,0 +1,141 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+One rule table maps every logical axis name used by the param specs and
+cache/activation trees onto mesh axes; ``logical_to_sharding`` applies the
+table with per-dimension divisibility auto-drop (a 40-expert dim on a
+16-way axis replicates instead of erroring), so the same model code
+lowers on any mesh.
+
+Baseline policy (paper-faithful TP serving + FSDP/ZeRO training):
+  batch / kv_seq activations  → ("pod","data") / "model"
+  weight TP dims (mlp, heads, vocab, experts) → "model"
+  weight FSDP dim (embed)     → "data"      (ZeRO-style, gathered at use)
+Alternative policies (used by the §Perf hillclimbs) are expressed as rule
+overrides, e.g. expert-parallel serving moves "experts" → "data".
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# ------------------------------------------------------------- rule tables
+BASE_RULES: Dict[str, Axes] = {
+    # §Perf H-C3 switch: use-site weight gathering (ZeRO-3 style).
+    # Measured on train shapes: improves the memory term ~3x but the
+    # per-microbatch re-gathers cost more collective time than the
+    # activation all-reduces they replace — OFF for training rules.
+    "__weight_gather__": False,
+    # activations / cache
+    "batch": ("pod", "data"),
+    "tokens": ("pod", "data"),   # flattened (B·T) token rows
+    "act_seq": None,
+    "kv_seq": "model",
+    # weights
+    "embed": "data",          # FSDP / ZeRO shard
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": None,
+    "vocab": "model",
+    "experts": "model",
+    "latent": None,
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "mem": None,
+}
+
+# Hillclimb variants (§Perf): expert parallelism over the data axis frees
+# the model axis for TP inside each expert; weight-stationary serving
+# drops the FSDP gather.
+EXPERT_PARALLEL_RULES = dict(BASE_RULES, experts="data", embed=None,
+                             **{"__weight_gather__": True})
+SERVE_WEIGHT_STATIONARY = dict(BASE_RULES, embed=None,
+                               **{"__weight_gather__": True})
+# Sequence-parallel long-context: shard the KV sequence over both axes.
+LONG_CONTEXT_RULES = dict(BASE_RULES, kv_seq=("data", "model"), batch="pod")
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    # works for both Mesh and AbstractMesh
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _resolve(rule: Axes, dim: int, mesh_sizes: Dict[str, int],
+             used: set) -> Optional[Tuple[str, ...]]:
+    """Pick the longest usable prefix of the rule's axes: every axis must
+    exist in the mesh, be unused so far in this spec, and the product must
+    divide the dim."""
+    if rule is None:
+        return None
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    axes = tuple(a for a in axes if a in mesh_sizes and a not in used)
+    while axes:
+        prod = int(np.prod([mesh_sizes[a] for a in axes]))
+        if dim % prod == 0:
+            return axes
+        axes = axes[:-1]
+    return None
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Dict[str, Axes]) -> P:
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        rule = rules.get(name) if name else None
+        axes = _resolve(rule, dim, sizes, used)
+        if axes:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def logical_to_sharding(abstract_tree, axes_tree, mesh: Mesh,
+                        rules: Optional[Dict[str, Axes]] = None):
+    """abstract_tree: ShapeDtypeStruct pytree; axes_tree: aligned pytree of
+    logical-axis tuples. Returns a pytree of NamedSharding."""
+    rules = rules or BASE_RULES
+    ab_leaves, treedef = jax.tree.flatten(abstract_tree)
+    # axes leaves are tuples — flatten only down to the abstract tree's
+    # leaf positions so the tuples survive as leaves
+    ax_leaves = treedef.flatten_up_to(axes_tree)
+    out = [NamedSharding(mesh, spec_for(ab.shape, ax, mesh, rules))
+           for ab, ax in zip(ab_leaves, ax_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_sharding(mesh: Mesh, batch: int,
+                   rules: Optional[Dict[str, Axes]] = None) -> NamedSharding:
+    """Sharding for a (B, ...) host-side input tensor."""
+    rules = rules or BASE_RULES
+    spec = spec_for((batch,), ("batch",), mesh, rules)
+    return NamedSharding(mesh, P(spec[0]))
+
+
+def token_sharding(mesh: Mesh, shape, rules=None) -> NamedSharding:
+    rules = rules or BASE_RULES
+    spec = spec_for(shape, ("batch",) + (None,) * (len(shape) - 1), mesh,
+                    rules)
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def tree_sharding_for_tokens(tree, mesh: Mesh, rules=None):
+    """Batch-shard every leaf of an input dict on its leading dim."""
+    def one(x):
+        ax = ("batch",) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, spec_for(x.shape, ax, mesh,
+                                            rules or BASE_RULES))
+    return jax.tree.map(one, tree)

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+Two modes:
+  * demo (default): runs real steps of a reduced config on the local
+    device(s) — a live, verifiable training loop.
+  * --dryrun: delegates to launch/dryrun.py semantics for the full config
+    on the production mesh (lower+compile only).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-v3-671b --dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tide-tiny")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", choices=["adamw", "adafactor"],
+                    default="adamw")
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # re-exec through the dry-run module so XLA_FLAGS is set first
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+               args.arch, "--shape", args.shape]
+        raise SystemExit(subprocess.call(cmd, env=dict(
+            os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src"))))
+
+    import repro.configs as configs
+    from repro.data.workloads import make_domains, training_corpus
+    from repro.models import transformer as T
+    from repro.training.optimizer import adafactor, adamw
+    from repro.training.trainer import make_train_step
+
+    cfg = configs.get_reduced(args.arch)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.2f}M params "
+          f"on {jax.devices()}")
+    params = T.init(cfg, jax.random.key(0))
+    opt = adamw(lr=args.lr) if args.optimizer == "adamw" else \
+        adafactor(lr=args.lr)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, n_micro=1, remat=False))
+
+    dom = make_domains(cfg.vocab_size, ["train"], seed=0)["train"]
+    corpus = training_corpus(dom, 4 * args.batch, args.seq + 1, seed=1)
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jnp.zeros((args.batch, args.seq, cfg.d_model),
+                                    cfg.act_dtype)
+    if cfg.num_image_tokens:
+        extra["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.act_dtype)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for it in range(args.steps):
+        sel = rng.integers(0, corpus.shape[0], size=args.batch)
+        batch = {"tokens": jnp.asarray(corpus[sel][:, :-1]),
+                 "targets": jnp.asarray(corpus[sel][:, 1:]), **extra}
+        params, opt_state, m = step_fn(params, opt_state, batch,
+                                       jnp.int32(it))
+        if it % max(args.steps // 10, 1) == 0:
+            print(f"step {it:4d}  loss {float(m['loss']):.4f}  "
+                  f"acc {float(m['accuracy']):.3f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+    dt = time.perf_counter() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,434 @@
+"""GQA attention: RoPE, blockwise-flash prefill (jnp), decode w/ KV cache,
+sliding-window variants, and cross attention.
+
+All functions are pure; the Pallas kernels in ``repro.kernels`` mirror the
+prefill/decode entry points and are swapped in via ``cfg.use_pallas``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import EMBED, HEADS, KV_HEADS, QKV
+
+NEG_INF = -1e30
+
+# §Perf A/B switch: True (default) keeps attention operands in their
+# storage dtype with fp32 MXU accumulation; False reproduces the
+# baseline implementation that upcast K/V to fp32 (extra HBM traffic).
+MIXED_PRECISION = True
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, T, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- helpers
+def _expand_kv(k, q_per_kv: int):
+    """(B, S, Hk, D) -> (B, S, Hk*G, D) by repeat (jnp path; einsum keeps it lazy)."""
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+# -------------------------------------------------- full masked attention
+def attend(q, k, v, mask, *, softcap: float = 0.0):
+    """Reference masked attention.
+
+    q: (B, T, Hq, D); k, v: (B, S, Hk, D); mask: broadcastable to
+    (B, Hk, G, T, S) or (B, 1, 1, T, S). Returns (B, T, Hq, D).
+    """
+    b, t, hq, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    if MIXED_PRECISION:
+        # operands stay in their storage dtype (bf16 on TPU); the MXU
+        # accumulates in fp32 via preferred_element_type — avoids
+        # materializing fp32 copies of the (huge) KV cache [§Perf H-A1]
+        qr = q.reshape(b, t, hk, g, d)
+        scores = jnp.einsum("btkgd,bskd->bkgts", qr, k,
+                            preferred_element_type=jnp.float32
+                            ) / jnp.sqrt(d)
+        scores = _softcap(scores, softcap)
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, t, hq, d).astype(q.dtype)
+    qf = q.astype(jnp.float32).reshape(b, t, hk, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf, kf) / jnp.sqrt(d)
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, vf)
+    return out.reshape(b, t, hq, d).astype(q.dtype)
+
+
+def causal_mask(t: int, s: int, q_offset) -> jnp.ndarray:
+    """(T, S) causal mask where query i sits at position q_offset + i."""
+    qpos = q_offset + jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    return kpos <= qpos
+
+
+# ------------------------------------------- blockwise flash (jnp) prefill
+def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
+                  block_q: int = 512, block_kv: int = 1024,
+                  softcap: float = 0.0, seg_ids: Optional[jnp.ndarray] = None):
+    """Memory-O(S·block) flash attention via lax.scan over KV blocks.
+
+    q: (B, S, Hq, D), k/v: (B, S, Hk, D). Runs all query blocks against each
+    KV block with an online-softmax carry — peak memory per step is
+    (B, Hq, S, block_kv) scores instead of (B, Hq, S, S).
+    """
+    b, s, hq, d = q.shape
+    hk = k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hk
+    bkv = min(block_kv, s)
+    if s % bkv:
+        # pad kv to a block multiple; padded keys masked out
+        pad = bkv - s % bkv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = s
+    else:
+        pad = 0
+        kv_valid = s
+    nkv = k.shape[1] // bkv
+    if MIXED_PRECISION:
+        kb = k.reshape(b, nkv, bkv, hk, d)
+        vb = v.reshape(b, nkv, bkv, hk, dv)
+        qf = q.reshape(b, s, hk, g, d)
+    else:
+        kb = k.reshape(b, nkv, bkv, hk, d).astype(jnp.float32)
+        vb = v.reshape(b, nkv, bkv, hk, dv).astype(jnp.float32)
+        qf = q.astype(jnp.float32).reshape(b, s, hk, g, d)
+    qpos = jnp.arange(s)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, blk_idx = inputs
+        kpos = blk_idx * bkv + jnp.arange(bkv)
+        sc = jnp.einsum("bskgd,bukd->bkgsu", qf, kblk,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(d)
+        sc = _softcap(sc, softcap)
+        msk = kpos[None, :] < kv_valid
+        if causal:
+            msk = msk & (kpos[None, :] <= qpos[:, None])
+        if window:
+            msk = msk & (kpos[None, :] > qpos[:, None] - window)
+        sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgsu,bukd->bkgsd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nkv)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dv)
+    return out.astype(q.dtype)
+
+
+def windowed_prefill(q, k, v, *, window: int, block_q: int = 512,
+                     softcap: float = 0.0):
+    """True sub-quadratic sliding-window prefill: scan over query blocks,
+    each attending a static-size KV slice of length window + block_q."""
+    b, s, hq, d = q.shape
+    hk = k.shape[2]
+    bq = min(block_q, s)
+    if s % bq:
+        raise ValueError(f"seq {s} % block_q {bq} != 0")
+    nq = s // bq
+    span = window + bq
+    # pad kv on the left by `window` so slices never clip
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def blk(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=1)
+        ki = jax.lax.dynamic_slice_in_dim(kp, i * bq, span, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vp, i * bq, span, axis=1)
+        # positions: query j (global i*bq+j) attends keys with global pos
+        # in (qpos-window, qpos]; key slice covers global [i*bq-window, i*bq+bq)
+        qpos = jnp.arange(bq)[:, None] + window      # local coords in slice
+        kpos = jnp.arange(span)[None, :]
+        valid = (kpos <= qpos) & (kpos > qpos - window) \
+            & (kpos + i * bq - window >= 0)
+        return attend(qi, ki, vi, valid[None, None, None], softcap=softcap)
+
+    out = jax.lax.map(blk, jnp.arange(nq))           # (nq, B, bq, Hq, D)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, d)
+
+
+# ----------------------------------------------------------- decode step
+# §Perf A/B switch: blockwise (flash-decoding) KV traversal for long
+# caches — avoids materializing (T, Smax) fp32 score tensors per layer.
+DECODE_FLASH = True
+DECODE_FLASH_MIN_LEN = 4096
+DECODE_FLASH_BLOCK = 2048
+
+
+def decode_attend_blockwise(q, k_cache, v_cache, lengths, pad=None, *,
+                            window: int = 0, softcap: float = 0.0,
+                            block_kv: int = DECODE_FLASH_BLOCK):
+    """Flash-decoding in jnp: scan KV blocks with an online softmax.
+    Same signature/semantics as ``decode_attend``; this is also the
+    XLA-path mirror of kernels/verify_attn."""
+    b, t, hq, d = q.shape
+    smax, hk = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    bkv = min(block_kv, smax)
+    if smax % bkv:
+        return decode_attend(q, k_cache, v_cache, lengths, pad,
+                             window=window, softcap=softcap)
+    nkv = smax // bkv
+    qf = q.reshape(b, t, hk, g, d)
+    qpos = lengths[:, None] + jnp.arange(t)[None, :]          # (B, T)
+    kb = k_cache.reshape(b, nkv, bkv, hk, d)
+    vb = v_cache.reshape(b, nkv, bkv, hk, d)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, ik = inputs                               # (B,bkv,hk,d)
+        kpos = ik * bkv + jnp.arange(bkv)                     # (bkv,)
+        sc = jnp.einsum("btkgd,bukd->bkgtu", qf, kblk,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(d)
+        sc = _softcap(sc, softcap)
+        msk = kpos[None, None, :] <= qpos[:, :, None]         # (B,T,bkv)
+        if pad is not None:
+            msk = msk & (kpos[None, None, :] >= pad[:, None, None])
+        if window:
+            msk = msk & (kpos[None, None, :] > qpos[:, :, None] - window)
+        sc = jnp.where(msk[:, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgtu,bukd->bkgtd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, t), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, t, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nkv)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, t, hq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attend(q, k_cache, v_cache, lengths, pad=None, *, window: int = 0,
+                  softcap: float = 0.0):
+    """Decode/verify attention: T new queries per request vs. cached KV.
+
+    q: (B, T, Hq, D) — queries for cache positions lengths[b] + [0..T).
+    k_cache/v_cache: (B, Smax, Hk, D) with valid region [pad[b], lengths[b])
+    (the T new tokens' k/v must already be written into the cache).
+    """
+    b, t, hq, d = q.shape
+    smax = k_cache.shape[1]
+    qpos = lengths[:, None] + jnp.arange(t)[None, :]           # (B, T)
+    kpos = jnp.arange(smax)[None, None, :]                     # (1, 1, S)
+    mask = kpos <= qpos[:, :, None]
+    if pad is not None:
+        mask = mask & (kpos >= pad[:, None, None])
+    if window:
+        mask = mask & (kpos > qpos[:, :, None] - window)
+    return attend(q, k_cache, v_cache, mask[:, None, None], softcap=softcap)
+
+
+def decode_attend_windowed(q, k_cache, v_cache, lengths, pad=None, *,
+                           window: int, softcap: float = 0.0):
+    """Sliding-window decode that only *reads* the last `window + T` cache
+    entries (static slice size) — sub-quadratic long-context decode path."""
+    b, t, hq, d = q.shape
+    smax = k_cache.shape[1]
+    span = window + t
+    if span >= smax:
+        return decode_attend(q, k_cache, v_cache, lengths, pad, window=window,
+                             softcap=softcap)
+    start = jnp.clip(lengths + t - span, 0, smax - span)       # (B,)
+
+    def slice_one(cache, s0):
+        return jax.lax.dynamic_slice_in_dim(cache, s0, span, axis=0)
+
+    ks = jax.vmap(slice_one)(k_cache, start)                   # (B, span, Hk, D)
+    vs = jax.vmap(slice_one)(v_cache, start)
+    qpos = lengths[:, None] + jnp.arange(t)[None, :]           # (B, T) global
+    kpos = start[:, None, None] + jnp.arange(span)[None, None, :]
+    mask = (kpos <= qpos[:, :, None]) & (kpos > qpos[:, :, None] - window)
+    if pad is not None:
+        mask = mask & (kpos >= pad[:, None, None])
+    return attend(q, ks, vs, mask[:, None, None], softcap=softcap)
+
+
+# -------------------------------------------------------- module wrapper
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, hq, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, hq, hd), (EMBED, HEADS, QKV)),
+        "wk": ParamSpec((d, hk, hd), (EMBED, KV_HEADS, QKV)),
+        "wv": ParamSpec((d, hk, hd), (EMBED, KV_HEADS, QKV)),
+        "wo": ParamSpec((hq, hd, d), (HEADS, QKV, EMBED)),
+    }
+    if cross:
+        specs["q_norm"] = ParamSpec((hd,), (QKV,), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), (QKV,), init="ones")
+    return specs
+
+
+def qkv_proj(params, x, dtype):
+    from repro.models.hints import weight_gather as wg
+    q = jnp.einsum("btd,dhk->bthk", x,
+                   wg(params["wq"].astype(dtype), (None, "heads", None)))
+    k = jnp.einsum("btd,dhk->bthk", x,
+                   wg(params["wk"].astype(dtype), (None, "kv_heads", None)))
+    v = jnp.einsum("btd,dhk->bthk", x,
+                   wg(params["wv"].astype(dtype), (None, "kv_heads", None)))
+    return q, k, v
+
+
+def out_proj(params, o, dtype):
+    from repro.models.hints import weight_gather as wg
+    return jnp.einsum("bthk,hkd->btd", o,
+                      wg(params["wo"].astype(dtype), ("heads", None, None)))
+
+
+def self_attention_prefill(cfg: ModelConfig, params, x, positions, pad=None, *,
+                           window: int = 0, causal: bool = True
+                           ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (out, (k, v)) — k/v retained for the KV cache.
+
+    positions: (B, S) RoPE positions.  pad: optional (B,) left-pad widths —
+    when given, the masked small-batch path is used (serving engine);
+    when None, the flash/blockwise paths assume uniform arange positions.
+    """
+    dt = x.dtype
+    q, k, v = qkv_proj(params, x, dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    if pad is not None:
+        kpos = jnp.arange(s)[None, None, :]
+        qpos = jnp.arange(s)[None, :, None]
+        msk = (kpos <= qpos) & (kpos >= pad[:, None, None])
+        if not causal:
+            msk = kpos >= pad[:, None, None]
+        if window:
+            msk = msk & (kpos > qpos - window)
+        o = attend(q, k, v, msk[:, None, None], softcap=cfg.attn_logit_softcap)
+    elif window and causal and s > window:
+        o = windowed_prefill(q, k, v, window=window, block_q=cfg.attn_block_q,
+                             softcap=cfg.attn_logit_softcap)
+    elif s > cfg.attn_block_kv:
+        o = flash_prefill(q, k, v, causal=causal, window=window,
+                          block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+                          softcap=cfg.attn_logit_softcap)
+    else:
+        msk = causal_mask(s, s, 0)[None, None, None] if causal else \
+            jnp.ones((1, 1, 1, s, s), bool)
+        if window:
+            kpos = jnp.arange(s)[None, :]
+            qpos = jnp.arange(s)[:, None]
+            msk = msk & (kpos > qpos - window)[None, None, None]
+        o = attend(q, k, v, msk, softcap=cfg.attn_logit_softcap)
+    return out_proj(params, o, dt), (k, v)
+
+
+def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
+                          lengths, pad=None, *, window: int = 0):
+    """x: (B, T, D) new tokens at cache positions lengths + [0..T).
+    RoPE positions are lengths - pad + t (pad-adjusted true token index).
+    Writes the new K/V into the cache functionally and attends."""
+    dt = x.dtype
+    b, t, _ = x.shape
+    q, k, v = qkv_proj(params, x, dt)
+    rope_pos = lengths[:, None] + jnp.arange(t)[None, :]
+    if pad is not None:
+        rope_pos = rope_pos - pad[:, None]
+    q = apply_rope(q, rope_pos, cfg.rope_theta)
+    k = apply_rope(k, rope_pos, cfg.rope_theta)
+    # scatter new kv into cache at per-request offsets
+    k_cache = scatter_kv(k_cache, k, lengths)
+    v_cache = scatter_kv(v_cache, v, lengths)
+    if window and k_cache.shape[1] > 4 * (window + t):
+        o = decode_attend_windowed(q, k_cache, v_cache, lengths, pad,
+                                   window=window,
+                                   softcap=cfg.attn_logit_softcap)
+    elif DECODE_FLASH and k_cache.shape[1] >= DECODE_FLASH_MIN_LEN:
+        o = decode_attend_blockwise(q, k_cache, v_cache, lengths, pad,
+                                    window=window,
+                                    softcap=cfg.attn_logit_softcap)
+    else:
+        o = decode_attend(q, k_cache, v_cache, lengths, pad, window=window,
+                          softcap=cfg.attn_logit_softcap)
+    return out_proj(params, o, dt), (k_cache, v_cache)
+
+
+def scatter_kv(cache, new, lengths):
+    """cache: (B, Smax, Hk, D); new: (B, T, Hk, D); write at lengths[b]+t."""
+    from repro.models.hints import hint
+    b, t = new.shape[0], new.shape[1]
+    bidx = jnp.arange(b)[:, None].repeat(t, 1)             # (B, T)
+    sidx = lengths[:, None] + jnp.arange(t)[None, :]       # (B, T)
+    out = cache.at[bidx, sidx].set(new.astype(cache.dtype))
+    # pin the scatter result to the cache layout — stops SPMD from
+    # rematerializing the cache to a replicated layout per layer [§Perf]
+    return hint(out, ("batch", "kv_seq", "kv_heads", "qkv"))
+
+
+# ---------------------------------------------------------- cross attn
+def cross_attention(cfg: ModelConfig, params, x, mem_k, mem_v):
+    """x: (B, T, D); mem_k/v: (B, M, Hk, D) precomputed memory KV."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    m = mem_k.shape[1]
+    mask = jnp.ones((1, 1, 1, x.shape[1], m), bool)
+    o = attend(q, mem_k, mem_v, mask, softcap=cfg.attn_logit_softcap)
+    return out_proj(params, o, dt)
+
+
+def cross_memory_kv(params, mem, dtype):
+    """Project memory embeddings (B, M, D) to cross-attn K/V once."""
+    k = jnp.einsum("bmd,dhk->bmhk", mem, params["wk"].astype(dtype))
+    v = jnp.einsum("bmd,dhk->bmhk", mem, params["wv"].astype(dtype))
+    return k, v

@@ -1,0 +1,79 @@
+"""Activation-sharding hints (§Perf optimization layer).
+
+Model code is mesh-agnostic; under a production mesh, XLA's sharding
+propagation sometimes picks pathological layouts (full rematerialization
+of scattered KV caches, all-gathered MoE dispatch intermediates).  The
+launcher can *activate* a (mesh, rules) context; model code then marks
+key intermediates with ``hint(x, logical_axes)`` which lowers to
+``with_sharding_constraint`` — a no-op when no context is active (tests,
+single-device demo).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_CTX = {"mesh": None, "rules": None}
+
+
+@contextlib.contextmanager
+def activate(mesh, rules):
+    prev = dict(_CTX)
+    _CTX.update(mesh=mesh, rules=rules)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+@contextlib.contextmanager
+def suspend():
+    """Disable hints while tracing a shard_map region (mesh axes are
+    manual there; with_sharding_constraint over them is illegal)."""
+    prev = dict(_CTX)
+    _CTX.update(mesh=None, rules=None)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+def active() -> bool:
+    return _CTX["mesh"] is not None
+
+
+def hint(x, logical, force: bool = False):
+    """x: array/tracer; logical: tuple of logical axis names (or None).
+
+    No-op when the rules resolve to nothing (constraining to a fully
+    replicated spec would *force* replication — worse than leaving XLA
+    free to propagate), unless ``force`` — used by weight-gather hints
+    where replication IS the intent."""
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    from repro.launch.sharding import spec_for
+    spec = spec_for(x.shape, logical, mesh, rules)
+    if not force and all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def weight_gather(w, tp_axes):
+    """ZeRO-3 use-site weight gather (§Perf H-C3): constrain a weight to
+    its tensor-parallel-only sharding (FSDP axis dropped), so XLA gathers
+    the (small) weight over the data axis instead of all-reducing the
+    (huge) activation output of a contraction against the sharded dim.
+    ``tp_axes``: logical axes with the FSDP/embed entries already None.
+
+    Measured effect (EXPERIMENTS.md §Perf H-C3): memory term −3× on
+    train shapes, but per-microbatch re-gathers under remat cost more
+    ICI than the activation all-reduces they remove — so rule tables can
+    opt out via ``__weight_gather__: False`` (training does)."""
+    rules = _CTX["rules"]
+    if rules is not None and not rules.get("__weight_gather__", True):
+        return w
+    return hint(w, tp_axes, force=True)

@@ -1,0 +1,88 @@
+"""Shared layers: RMSNorm, FFNs, embeddings — functional, spec-declared."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, FFN_SWIGLU, FFN_GELU
+from repro.models.param import ParamSpec
+
+# Logical axis names (mapped to mesh axes in launch/sharding.py).
+EMBED = "embed"      # d_model dim of weights (FSDP-sharded)
+MLP = "mlp"          # ffn hidden dim (tensor-parallel)
+HEADS = "heads"      # attention head dim (tensor-parallel)
+KV_HEADS = "kv_heads"
+QKV = "qkv"          # per-head feature dim (replicated)
+VOCAB = "vocab"      # vocab dim (tensor-parallel)
+EXPERTS = "experts"  # MoE expert dim (expert-parallel)
+LAYERS = "layers"    # stacked scan dim (replicated)
+STATE = "state"      # ssm state dims (replicated)
+
+
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), (EMBED,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def ffn_specs(cfg: ModelConfig, kind: str, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    if kind == FFN_SWIGLU:
+        return {
+            "w_gate": ParamSpec((d, f), (EMBED, MLP)),
+            "w_up": ParamSpec((d, f), (EMBED, MLP)),
+            "w_down": ParamSpec((f, d), (MLP, EMBED)),
+        }
+    if kind == FFN_GELU:
+        return {
+            "w_up": ParamSpec((d, f), (EMBED, MLP)),
+            "b_up": ParamSpec((f,), (MLP,), init="zeros"),
+            "w_down": ParamSpec((f, d), (MLP, EMBED)),
+            "b_down": ParamSpec((d,), (EMBED,), init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def ffn(params, x, kind: str):
+    from repro.models.hints import weight_gather as wg
+    dt = x.dtype
+    if kind == FFN_SWIGLU:
+        g = x @ wg(params["w_gate"].astype(dt), (None, MLP))
+        u = x @ wg(params["w_up"].astype(dt), (None, MLP))
+        return (jax.nn.silu(g) * u) @ wg(params["w_down"].astype(dt),
+                                         (MLP, None))
+    if kind == FFN_GELU:
+        h = jax.nn.gelu(x @ wg(params["w_up"].astype(dt), (None, MLP))
+                        + params["b_up"].astype(dt), approximate=True)
+        return (h @ wg(params["w_down"].astype(dt), (MLP, None))
+                + params["b_down"].astype(dt))
+    raise ValueError(kind)
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    specs = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), (VOCAB, EMBED),
+                              init="embed")}
+    return specs
+
+
+def embed(params, tokens, dtype):
+    return params["tok"].astype(dtype)[tokens]
+
+
+def head_specs(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_size), (EMBED, VOCAB))}
+
+
+def lm_head(params, embed_params, x, tie: bool):
+    from repro.models.hints import weight_gather as wg
+    if tie:
+        return x @ embed_params["tok"].astype(x.dtype).T
+    return x @ wg(params["w"].astype(x.dtype), (None, VOCAB))

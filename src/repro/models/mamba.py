@@ -1,0 +1,157 @@
+"""Mamba-1 selective SSM mixer (Jamba's sequence layer, arXiv:2403.19887).
+
+Prefill uses a chunked associative scan (memory O(B·C·Di·N) per chunk);
+decode advances the recurrence token-by-token over the γ+1 verify block and
+returns per-step states so speculative rollback can select the accepted one.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import EMBED, MLP, STATE
+
+CONV = "conv"
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d, di, n, r, dc = (cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state,
+                       cfg.dt_rank, cfg.mamba_d_conv)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), (EMBED, MLP)),
+        "conv_w": ParamSpec((dc, di), (CONV, MLP), scale=1.0),
+        "conv_b": ParamSpec((di,), (MLP,), init="zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), (MLP, STATE)),
+        "dt_w": ParamSpec((r, di), (STATE, MLP)),
+        "dt_b": ParamSpec((di,), (MLP,), init="zeros"),
+        "a_log": ParamSpec((di, n), (MLP, STATE), init="alog"),
+        "d_skip": ParamSpec((di,), (MLP,), init="ones"),
+        "out_proj": ParamSpec((di, d), (MLP, EMBED)),
+    }
+
+
+def _conv_full(params, x):
+    """Causal depthwise conv over seq. x: (B, S, Di)."""
+    dc = params["conv_w"].shape[0]
+    w = params["conv_w"].astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = sum(xp[:, i:i + s] * w[i] for i in range(dc))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def _ssm_inputs(cfg: ModelConfig, params, xc):
+    """From conv output xc (B, T, Di) derive (decay a, input b, C, D·x)."""
+    dt_bc = xc @ params["x_proj"].astype(xc.dtype)
+    r, n = cfg.dt_rank, cfg.mamba_d_state
+    dt = jax.nn.softplus(dt_bc[..., :r] @ params["dt_w"].astype(xc.dtype)
+                         + params["dt_b"].astype(xc.dtype))       # (B,T,Di)
+    bmat = dt_bc[..., r:r + n]                                    # (B,T,N)
+    cmat = dt_bc[..., r + n:]                                     # (B,T,N)
+    a_coef = -jnp.exp(params["a_log"].astype(jnp.float32))        # (Di,N)
+    dt32 = dt.astype(jnp.float32)
+    a = jnp.exp(dt32[..., None] * a_coef)                         # (B,T,Di,N)
+    b = (dt32[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+         * xc.astype(jnp.float32)[..., None])                     # (B,T,Di,N)
+    return a, b, cmat, dt
+
+
+def _assoc(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def mamba_prefill(cfg: ModelConfig, params, x, pad=None
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D). Returns (out, state) with state = {"h", "conv"}.
+    pad: optional (B,) left-pad widths; padded steps leave the state
+    untouched (decay 1, input 0)."""
+    dt_ = x.dtype
+    b, s, _ = x.shape
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    if pad is not None:
+        # zero padded positions so conv windows of the first real tokens
+        # see zeros, exactly like the unpadded case
+        vx = (jnp.arange(s)[None, :] >= pad[:, None])[..., None]
+        x = jnp.where(vx, x, 0.0)
+    from repro.models.hints import weight_gather as wg
+    xz = x @ wg(params["in_proj"].astype(dt_), (None, MLP))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_full(params, xin))
+    # §Perf H-C1: the associative scan makes O(log2 c_len) passes over the
+    # (c_len, B, Di, N) fp32 chunk — smaller chunks cut HBM traffic per
+    # element (c=64 -> 6 passes vs c=256 -> 8) at more scan iterations.
+    c_len = min(cfg.chunk_len, s)
+    while s % c_len:
+        c_len -= 1
+    nc = s // c_len
+    a, bb, cmat, _ = _ssm_inputs(cfg, params, xc)
+    if pad is not None:
+        valid = (jnp.arange(s)[None, :] >= pad[:, None])[..., None, None]
+        a = jnp.where(valid, a, 1.0)
+        bb = jnp.where(valid, bb, 0.0)
+
+    def chunk_step(h_in, ab):
+        ac, bc = ab                                  # (C, B, Di, N)
+        bc0 = bc.at[0].add(ac[0] * h_in)
+        ah, bh = jax.lax.associative_scan(_assoc, (ac, bc0), axis=0)
+        return bh[-1], bh                            # carry h, all prefix h
+
+    a_c = a.transpose(1, 0, 2, 3).reshape(nc, c_len, b, di, n)
+    b_c = bb.transpose(1, 0, 2, 3).reshape(nc, c_len, b, di, n)
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_last, hs = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    hs = hs.reshape(s, b, di, n).transpose(1, 0, 2, 3)           # (B,S,Di,N)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+    y = (y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+         ).astype(dt_)
+    out = (y * jax.nn.silu(z)) @ wg(params["out_proj"].astype(dt_),
+                                    (MLP, None))
+    dc = cfg.mamba_d_conv
+    conv_state = xin[:, -(dc - 1):, :] if s >= dc - 1 else \
+        jnp.pad(xin, ((0, 0), (dc - 1 - s, 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv_state.astype(dt_)}
+
+
+def mamba_decode(cfg: ModelConfig, params, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, T, D) verify block. Returns (out, states-per-step dict) where
+    each state leaf has a leading T axis for speculative rollback."""
+    dt_ = x.dtype
+    b, t, _ = x.shape
+    dc = cfg.mamba_d_conv
+    xz = x @ params["in_proj"].astype(dt_)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    def step(carry, xt):
+        h, conv = carry                              # (B,Di,N), (B,dc-1,Di)
+        win = jnp.concatenate([conv, xt[:, None]], axis=1)       # (B,dc,Di)
+        w = params["conv_w"].astype(dt_)
+        xc = jax.nn.silu(jnp.einsum("bcd,cd->bd", win, w)
+                         + params["conv_b"].astype(dt_))
+        a, bb, cmat, _ = _ssm_inputs(cfg, params, xc[:, None])
+        h_new = a[:, 0] * h + bb[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h_new, cmat[:, 0].astype(jnp.float32))
+        y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+        conv_new = win[:, 1:]
+        return (h_new, conv_new), (y.astype(dt_), h_new, conv_new)
+
+    (h_f, conv_f), (ys, hs, convs) = jax.lax.scan(
+        step, (state["h"], state["conv"]), xin.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2)                                    # (B,T,Di)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(dt_)
+    states = {"h": hs.transpose(1, 0, 2, 3),                     # (B,T,Di,N)
+              "conv": convs.transpose(1, 0, 2, 3)}               # (B,T,dc-1,Di)
+    return out, states
+
+
+def select_state(states: dict, accept_idx) -> dict:
+    """Pick the state at the accepted position. accept_idx: (B,) int32."""
+    def pick(leaf):
+        idx = accept_idx.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.take_along_axis(leaf, idx, axis=1)[:, 0]
+    return jax.tree.map(pick, states)

@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+KV is compressed into a per-token latent c_kv (kv_lora_rank) plus a single
+shared RoPE key (qk_rope_head_dim); the decode path uses the *absorbed*
+formulation (W_uk folded into the query, W_uv applied after the attention
+read) so the cache stays in latent space — the TPU-native deployment form.
+Prefill uses the expanded form for clarity; both are cross-checked in tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import EMBED, HEADS, QKV, rmsnorm, rmsnorm_specs
+from repro.models.attention import apply_rope, NEG_INF
+from repro.models.hints import weight_gather as wg
+
+LATENT = "latent"
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((d, qr), (EMBED, LATENT)),
+        "q_norm": rmsnorm_specs(qr)["scale"],
+        "wq_b": ParamSpec((qr, h, dn + dr), (LATENT, HEADS, QKV)),
+        "wkv_a": ParamSpec((d, kr + dr), (EMBED, LATENT)),
+        "kv_norm": rmsnorm_specs(kr)["scale"],
+        "wkv_b": ParamSpec((kr, h, dn + dv), (LATENT, HEADS, QKV)),
+        "wo": ParamSpec((h, dv, d), (HEADS, QKV, EMBED)),
+    }
+
+
+def _queries(cfg: ModelConfig, params, x, positions):
+    dt = x.dtype
+    qa = rmsnorm({"scale": params["q_norm"]},
+                 x @ wg(params["wq_a"].astype(dt), (None, LATENT)),
+                 cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", qa,
+                   wg(params["wq_b"].astype(dt), (None, HEADS, None)))
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def latent_kv(cfg: ModelConfig, params, x, positions):
+    """Per-token latent cache entries: (c_kv normed, k_rope)."""
+    dt = x.dtype
+    kv = x @ wg(params["wkv_a"].astype(dt), (None, LATENT))
+    ckv = rmsnorm({"scale": params["kv_norm"]}, kv[..., :cfg.kv_lora_rank],
+                  cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[:, :, 0]        # (B, T, dr) shared head
+    return ckv, k_rope
+
+
+def _scale(cfg: ModelConfig):
+    return 1.0 / jnp.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+
+
+def mla_prefill(cfg: ModelConfig, params, x, positions, pad=None):
+    """Expanded-form causal MLA. Returns (out, (ckv, k_rope)) for the cache.
+
+    positions: (B, S) RoPE positions; causality is by sequence index, with
+    an optional left-pad mask.
+    """
+    dt = x.dtype
+    b, s, _ = x.shape
+    q_nope, q_rope = _queries(cfg, params, x, positions)
+    ckv, k_rope = latent_kv(cfg, params, x, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", ckv,
+                    wg(params["wkv_b"].astype(dt), (None, HEADS, None)))
+    k_nope = kv[..., :cfg.qk_nope_head_dim]
+    v = kv[..., cfg.qk_nope_head_dim:]
+    if pad is None and s > cfg.attn_block_kv:
+        # long-sequence path: expand to combined (nope ‖ rope) q/k and run
+        # blockwise flash attention (flash scales by sqrt(dn + dr) = _scale)
+        from repro.models.attention import flash_prefill
+        h = cfg.num_heads
+        qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kc = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                      (b, s, h, cfg.qk_rope_head_dim))],
+            axis=-1)
+        o = flash_prefill(qc, kc, v, causal=True,
+                          block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+        out = jnp.einsum("bthk,hkd->btd", o,
+                     wg(params["wo"].astype(dt), (HEADS, None, None)))
+        return out, (ckv, k_rope)
+    scores = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope)
+              + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope)) * _scale(cfg)
+    qpos = jnp.arange(s)[None, None, :, None]
+    kpos = jnp.arange(s)[None, None, None, :]
+    mask = kpos <= qpos
+    if pad is not None:
+        mask = mask & (kpos >= pad[:, None, None, None])
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(dt)
+    o = jnp.einsum("bhts,bshk->bthk", p, v)
+    out = jnp.einsum("bthk,hkd->btd", o,
+                     wg(params["wo"].astype(dt), (HEADS, None, None)))
+    return out, (ckv, k_rope)
+
+
+def mla_decode(cfg: ModelConfig, params, x, ckv_cache, krope_cache, lengths,
+               pad=None):
+    """Absorbed-form decode: attention runs entirely in latent space.
+
+    x: (B, T, D) new tokens; ckv_cache: (B, Smax, kv_lora_rank);
+    krope_cache: (B, Smax, qk_rope_head_dim). New latents are scattered in.
+    """
+    dt = x.dtype
+    b, t, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(t)[None, :]
+    rope_pos = positions if pad is None else positions - pad[:, None]
+    q_nope, q_rope = _queries(cfg, params, x, rope_pos)
+    ckv_new, krope_new = latent_kv(cfg, params, x, rope_pos)
+    bidx = jnp.arange(b)[:, None].repeat(t, 1)
+    sidx = positions
+    ckv_cache = ckv_cache.at[bidx, sidx].set(ckv_new.astype(ckv_cache.dtype))
+    krope_cache = krope_cache.at[bidx, sidx].set(
+        krope_new.astype(krope_cache.dtype))
+    # absorb W_uk into the query:  q_lat = q_nope @ W_uk  -> (B, T, H, kr)
+    w_uk = wg(params["wkv_b"].astype(dt),
+              (None, HEADS, None))[..., :cfg.qk_nope_head_dim]  # (kr, H, dn)
+    q_lat = jnp.einsum("bthk,rhk->bthr", q_nope, w_uk)
+    smax = ckv_cache.shape[1]
+    scores = (jnp.einsum("bthr,bsr->bhts", q_lat, ckv_cache.astype(dt))
+              + jnp.einsum("bthk,bsk->bhts", q_rope, krope_cache.astype(dt))
+              ) * _scale(cfg)
+    kpos = jnp.arange(smax)[None, None, None, :]
+    mask = kpos <= positions[:, None, :, None]
+    if pad is not None:
+        mask = mask & (kpos >= pad[:, None, None, None])
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhts,bsr->bthr", p, ckv_cache.astype(dt))
+    # apply W_uv on the latent read:  (kr, H, dv)
+    w_uv = wg(params["wkv_b"].astype(dt),
+              (None, HEADS, None))[..., cfg.qk_nope_head_dim:]
+    o = jnp.einsum("bthr,rhk->bthk", o_lat, w_uv)
+    out = jnp.einsum("bthk,hkd->btd", o,
+                     wg(params["wo"].astype(dt), (HEADS, None, None)))
+    return out, (ckv_cache, krope_cache)

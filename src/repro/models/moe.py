@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two dispatch implementations, cross-checked in tests:
+
+* ``sort``  — production path: flatten (token, choice) assignments, sort by
+  expert id, scatter into per-expert capacity slots, run a batched expert
+  einsum, and combine with gather + gate weighting.  O(T·k·D) memory; the
+  expert dim shards on the ``model``/expert axis (all-to-all inserted by SPMD).
+* ``einsum`` — GShard-style dense one-hot dispatch (T, E, C) einsums;
+  simple, fully SPMD-safe, memory-heavier.  Used as the oracle.
+
+Supports shared experts (DeepSeek-V3) and a load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import EMBED, MLP, EXPERTS, ffn_specs, ffn
+from repro.models.config import FFN_SWIGLU
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_hidden
+    specs = {
+        "router": ParamSpec((d, e), (EMBED, EXPERTS), scale=0.1),
+        "w_gate": ParamSpec((e, d, f), (EXPERTS, EMBED, MLP)),
+        "w_up": ParamSpec((e, d, f), (EXPERTS, EMBED, MLP)),
+        "w_down": ParamSpec((e, f, d), (EXPERTS, MLP, EMBED)),
+    }
+    if cfg.num_shared_experts:
+        specs["shared"] = ffn_specs(cfg, FFN_SWIGLU,
+                                    cfg.moe_hidden * cfg.num_shared_experts)
+    return specs
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.experts_per_tok / cfg.num_experts
+            * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def _route(cfg: ModelConfig, params, x):
+    """Returns (topk_idx (N,k), topk_gate (N,k), aux_loss) for x (N, D)."""
+    logits = (x.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_tok)    # (N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss.
+    e = cfg.num_experts
+    me = probs.mean(0)                                       # (E,)
+    one_hot = jax.nn.one_hot(idx[:, 0], e)                   # primary choice
+    ce = one_hot.mean(0)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return idx, gate, aux
+
+
+def _experts_ffn(params, xs, dtype):
+    """xs: (E, C, D) -> (E, C, D) SwiGLU per expert.  Weight-gather hints
+    pin the ZeRO-3 choice: gather the FSDP-sharded weight dim at use
+    instead of all-reducing the (much larger) (E, C, F) activations
+    (§Perf H-C3)."""
+    from repro.models.hints import weight_gather as wg
+    g = jnp.einsum("ecd,edf->ecf", xs,
+                   wg(params["w_gate"].astype(dtype),
+                      (EXPERTS, None, MLP)))
+    u = jnp.einsum("ecd,edf->ecf", xs,
+                   wg(params["w_up"].astype(dtype),
+                      (EXPERTS, None, MLP)))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      wg(params["w_down"].astype(dtype),
+                         (EXPERTS, MLP, None)))
+
+
+def moe_sort(cfg: ModelConfig, params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch. x: (B, T, D) -> (out, aux_loss)."""
+    dt = x.dtype
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    idx, gate, aux = _route(cfg, params, xf)
+    k, e = cfg.experts_per_tok, cfg.num_experts
+    cap = _capacity(cfg, n)
+    flat_e = idx.reshape(-1)                                  # (N*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    # rank within expert among sorted assignments
+    counts = jnp.bincount(flat_e, length=e)                   # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(n * k) - starts[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)    # overflow bucket
+    token_of = order // k                                     # source token
+    # scatter tokens into (E*C [+1 overflow], D).  NOTE (§Perf, refuted
+    # hypothesis H-B1): pinning the gathered rows to token sharding made
+    # the collective term *worse* (2.42s -> 3.42s on granite prefill) —
+    # the rows are expert-sorted, so forcing batch-order sharding inserts
+    # an extra global resharding.  The winning fix is moe_shard_map
+    # (local dispatch + explicit all-to-all); hints here stay off.
+    buf = jnp.zeros((e * cap + 1, d), dt)
+    buf = buf.at[slot].set(xf[token_of].astype(dt), mode="drop")
+    xs = buf[:e * cap].reshape(e, cap, d)
+    ys = _experts_ffn(params, xs, dt)
+    ysf = jnp.concatenate([ys.reshape(e * cap, d), jnp.zeros((1, d), dt)])
+    # combine: each assignment reads its slot, weighted by its gate
+    contrib = ysf[slot] * gate.reshape(-1)[order, None].astype(dt)
+    out = jnp.zeros((n, d), dt).at[token_of].add(contrib)
+    out = out.reshape(b, t, d)
+    if cfg.num_shared_experts:
+        out = out + ffn(params["shared"], x, FFN_SWIGLU)
+    return out, aux
+
+
+def moe_einsum(cfg: ModelConfig, params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard one-hot dispatch oracle. x: (B, T, D) -> (out, aux_loss)."""
+    dt = x.dtype
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    idx, gate, aux = _route(cfg, params, xf)
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    cap = _capacity(cfg, n)
+    # position of each (token, choice) within its expert
+    choice_oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)       # (N, k, E)
+    flat_oh = choice_oh.reshape(n * k, e)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh               # (N*k, E)
+    pos_in_e = (pos * flat_oh).sum(-1).reshape(n, k)          # (N, k)
+    keep = pos_in_e < cap
+    disp = (jax.nn.one_hot(idx, e) * keep[..., None]
+            )[..., None] * jax.nn.one_hot(pos_in_e, cap)[:, :, None, :]
+    disp = disp.sum(1)                                        # (N, E, C)
+    xs = jnp.einsum("nd,nec->ecd", xf.astype(jnp.float32), disp).astype(dt)
+    ys = _experts_ffn(params, xs, dt)
+    comb = (disp * (gate[..., None, None]
+                    * jax.nn.one_hot(idx, e)[..., None]).sum(1))
+    out = jnp.einsum("nec,ecd->nd", comb, ys.astype(jnp.float32))
+    out = out.astype(dt).reshape(b, t, d)
+    if cfg.num_shared_experts:
+        out = out + ffn(params["shared"], x, FFN_SWIGLU)
+    return out, aux
+
+
+def moe(cfg: ModelConfig, params, x, impl: str = "sort"):
+    if impl == "einsum":
+        return moe_einsum(cfg, params, x)
+    if impl == "shard_map":
+        # §Perf H-B3: local dispatch + explicit all-to-all; needs a mesh
+        # (taken from the active hints context); falls back to the SPMD
+        # sort path on a single device / outside a launcher context.
+        from repro.models import hints
+        mesh = hints._CTX["mesh"]
+        if mesh is not None:
+            from repro.models.moe_sm import moe_shard_map
+            rules = hints._CTX["rules"] or {}
+            erule = rules.get("experts")
+            eaxis = None
+            if isinstance(erule, str) and erule in mesh.axis_names \
+                    and cfg.num_experts % mesh.shape[erule] == 0:
+                eaxis = erule
+            taxes = tuple(a for a in ("pod", "data")
+                          if a in mesh.axis_names)
+            return moe_shard_map(cfg, params, x, mesh, token_axes=taxes,
+                                 expert_axis=eaxis)
+    return moe_sort(cfg, params, x)

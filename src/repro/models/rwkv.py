@@ -1,0 +1,179 @@
+"""RWKV-6 ("Finch", arXiv:2404.05892) time-mix with data-dependent decay.
+
+Prefill uses the chunked linear-attention form: within a chunk the decayed
+inner products are exact matmuls (log-decays clamped for fp32 stability),
+across chunks a lax.scan carries the (H, K, V) state. Decode advances the
+recurrence per token over the verify block and returns per-step states for
+speculative rollback.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import EMBED, HEADS, QKV, STATE
+
+LOG_W_MIN = -5.0   # per-step decay clamp: w in [e^-5, 1)
+CHUNK = 16         # intra-chunk matmul keeps exponents < 16*5 = 80 < ln(f32max)
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, k = cfg.rwkv_heads, cfg.rwkv_head_dim
+    lora = max(32, d // 32)
+    return {
+        # token-shift interpolation weights per stream
+        "mu_r": ParamSpec((d,), (EMBED,), init="zeros"),
+        "mu_k": ParamSpec((d,), (EMBED,), init="zeros"),
+        "mu_v": ParamSpec((d,), (EMBED,), init="zeros"),
+        "mu_g": ParamSpec((d,), (EMBED,), init="zeros"),
+        "mu_w": ParamSpec((d,), (EMBED,), init="zeros"),
+        "w_r": ParamSpec((d, h, k), (EMBED, HEADS, QKV)),
+        "w_k": ParamSpec((d, h, k), (EMBED, HEADS, QKV)),
+        "w_v": ParamSpec((d, h, k), (EMBED, HEADS, QKV)),
+        "w_g": ParamSpec((d, h, k), (EMBED, HEADS, QKV)),
+        # data-dependent decay LoRA (the Finch headline feature)
+        "w0": ParamSpec((h, k), (HEADS, QKV), init="zeros"),
+        "w_lora_a": ParamSpec((d, 64), (EMBED, STATE), scale=0.1),
+        "w_lora_b": ParamSpec((64, h, k), (STATE, HEADS, QKV), scale=0.1),
+        "u_bonus": ParamSpec((h, k), (HEADS, QKV), init="zeros"),
+        "ln_x": ParamSpec((h, k), (HEADS, QKV), init="ones"),
+        "w_o": ParamSpec((h, k, d), (HEADS, QKV, EMBED)),
+    }
+
+
+def _streams(cfg: ModelConfig, params, x, x_prev):
+    """Token-shifted projection streams. x: (B, T, D); x_prev: (B, T, D)
+    where x_prev[t] = x[t-1] (first position taken from the shift cache)."""
+    from repro.models.hints import weight_gather as wg
+    dt = x.dtype
+
+    def lerp(mu):
+        m = jax.nn.sigmoid(params[mu].astype(dt))
+        return x + (x_prev - x) * m
+
+    def proj(name):
+        return wg(params[name].astype(dt), (None, HEADS, None))
+
+    r = jnp.einsum("btd,dhk->bthk", lerp("mu_r"), proj("w_r"))
+    k = jnp.einsum("btd,dhk->bthk", lerp("mu_k"), proj("w_k"))
+    v = jnp.einsum("btd,dhk->bthk", lerp("mu_v"), proj("w_v"))
+    g = jnp.einsum("btd,dhk->bthk", lerp("mu_g"), proj("w_g"))
+    xw = lerp("mu_w")
+    lora = jnp.einsum("bts,shk->bthk",
+                      jnp.tanh(xw @ params["w_lora_a"].astype(dt)),
+                      params["w_lora_b"].astype(dt))
+    logw = -jnp.exp(params["w0"].astype(jnp.float32)
+                    + lora.astype(jnp.float32))            # (B,T,H,K) < 0
+    logw = jnp.clip(logw, LOG_W_MIN, -1e-4)
+    return r, k, v, g, logw
+
+
+def _read_out(cfg: ModelConfig, params, wkv, r, g):
+    """wkv: (B,T,H,V) attention read; apply per-head norm, gate, out proj."""
+    dt = r.dtype
+    x32 = wkv.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + 1e-5) * params["ln_x"].astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(g)
+    from repro.models.hints import weight_gather as wg
+    return jnp.einsum("bthk,hkd->btd", y,
+                      wg(params["w_o"].astype(dt), (HEADS, None, None)))
+
+
+def rwkv_prefill(cfg: ModelConfig, params, x, pad=None
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D). Returns (out, state={"s": (B,H,K,V), "shift": (B,1,D)}).
+    pad: optional (B,) left-pad widths; padded steps leave the state
+    untouched (decay 1, key/value 0)."""
+    dt = x.dtype
+    b, s_orig, d = x.shape
+    h, kd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    if pad is not None:
+        # zero padded positions so the token shift of the first real
+        # token sees 0, exactly like the unpadded case
+        vx = (jnp.arange(s_orig)[None, :] >= pad[:, None])[..., None]
+        x = jnp.where(vx, x, 0.0)
+    c = CHUNK
+    rpad = (-s_orig) % c          # right-pad to a chunk multiple
+    x_in = jnp.pad(x, ((0, 0), (0, rpad), (0, 0))) if rpad else x
+    s = s_orig + rpad
+    x_prev = jnp.pad(x_in, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _streams(cfg, params, x_in, x_prev)
+    valid = jnp.arange(s)[None, :] < s_orig
+    if pad is not None:
+        valid = valid & (jnp.arange(s)[None, :] >= pad[:, None])
+    if pad is not None or rpad:
+        vm = valid[..., None, None]
+        logw = jnp.where(vm, logw, 0.0)   # neutral steps: w=1, k=v=0
+        k = jnp.where(vm, k, 0.0)
+        v = jnp.where(vm, v, 0.0)
+    nc = s // c
+    u = params["u_bonus"].astype(jnp.float32)
+
+    def chunk(s_in, blk):
+        rc, kc, vc, lwc = blk                        # (C,B,H,K) / (C,B,H,V)
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        cum = jnp.cumsum(lwc, axis=0)                # inclusive  (C,B,H,K)
+        cum_ex = cum - lwc                           # exclusive
+        q_dec = rc * jnp.exp(cum_ex)                 # decayed queries
+        k_dec = kc * jnp.exp(-cum)                   # inverse-decayed keys
+        # inter-chunk read from carried state
+        inter = jnp.einsum("cbhk,bhkv->cbhv", q_dec, s_in)
+        # intra-chunk strictly-causal attention
+        att = jnp.einsum("cbhk,dbhk->bhcd", q_dec, k_dec)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = att * mask[None, None]
+        intra = jnp.einsum("bhcd,dbhv->cbhv", att, vc)
+        diag = jnp.einsum("cbhk,cbhk,cbhv->cbhv",
+                          rc, u[None, None] * kc, vc)
+        # state update: S_out = diag(prod w) S_in + sum_s decay(s->C) k_s v_s
+        k_tail = kc * jnp.exp(cum[-1][None] - cum)   # decay from s to chunk end
+        s_out = (jnp.exp(cum[-1])[..., None] * s_in
+                 + jnp.einsum("cbhk,cbhv->bhkv", k_tail, vc))
+        return s_out, inter + intra + diag
+
+    def resh(t):  # (B,S,H,*) -> (nc, C, B, H, *)
+        return t.transpose(1, 0, 2, 3).reshape(nc, c, b, h, t.shape[-1])
+
+    s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    s_fin, wkv = jax.lax.scan(chunk, s0, (resh(r), resh(k), resh(v), resh(logw)))
+    wkv = wkv.reshape(s, b, h, kd).transpose(1, 0, 2, 3)         # (B,S,H,V)
+    out = _read_out(cfg, params, wkv, r, g)[:, :s_orig]
+    return out, {"s": s_fin, "shift": x[:, s_orig - 1:s_orig, :]}
+
+
+def rwkv_decode(cfg: ModelConfig, params, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, T, D) verify block; per-step states returned for rollback."""
+    dt = x.dtype
+    b, t, d = x.shape
+    x_prev = jnp.concatenate([state["shift"].astype(dt), x[:, :-1]], axis=1)
+    r, k, v, g, logw = _streams(cfg, params, x, x_prev)
+    u = params["u_bonus"].astype(jnp.float32)
+
+    def step(s_in, inp):
+        rt, kt, vt, lwt, xt = inp                   # (B,H,K) ... (B,D)
+        rt = rt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        read = s_in + u[None, :, :, None] * kv
+        wkv = jnp.einsum("bhk,bhkv->bhv", rt, read)
+        s_out = jnp.exp(lwt)[..., None] * s_in + kv
+        return s_out, (wkv, s_out, xt)
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), logw.transpose(1, 0, 2, 3),
+          x.transpose(1, 0, 2))
+    s_fin, (wkvs, s_steps, x_steps) = jax.lax.scan(step, state["s"], xs)
+    wkv = wkvs.transpose(1, 0, 2, 3)                             # (B,T,H,V)
+    out = _read_out(cfg, params, wkv, r, g)
+    states = {"s": s_steps.transpose(1, 0, 2, 3, 4),             # (B,T,H,K,V)
+              "shift": x_steps.transpose(1, 0, 2)[:, :, None, :]}  # (B,T,1,D)
+    return out, states

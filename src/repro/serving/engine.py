@@ -1,0 +1,228 @@
+"""TIDE Inference Serving Engine (paper Fig. 1/2, left box).
+
+Wave-scheduled continuous batching: a wave of B requests is left-padded to
+a common prefill length, prefilled once, then speculatively decoded with
+the Adaptive Drafter deciding per-step whether to speculate (Eq. 5
+threshold) and the Acceptance Length Monitor feeding Algorithm 1.  The
+Training Signal Extractor captures accepted-position features with
+one-step-deferred device→host transfer (async-dispatch overlap, Fig. 3).
+
+All device steps are jitted with fixed shapes; per-request raggedness is
+handled with masks (pads, finished requests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eagle, speculative as spec
+from repro.core.adaptive import AdaptiveDrafter
+from repro.core.controller import Decision, TrainingController
+from repro.core.signals import SignalExtractor
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class EngineStats:
+    tokens_out: int = 0
+    steps: int = 0
+    spec_steps: int = 0
+    wall_s: float = 0.0
+    accept_len_sum: float = 0.0
+    accept_len_n: int = 0
+    timeline: List[Dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def accept_len(self) -> float:
+        return self.accept_len_sum / max(self.accept_len_n, 1)
+
+    @property
+    def throughput(self) -> float:
+        return self.tokens_out / max(self.wall_s, 1e-9)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, dcfg: ModelConfig,
+                 dparams, *, gamma: int = 3, max_len: int = 160,
+                 batch_size: int = 4, greedy: bool = True,
+                 drafter: Optional[AdaptiveDrafter] = None,
+                 controller: Optional[TrainingController] = None,
+                 extractor: Optional[SignalExtractor] = None,
+                 ema: float = 0.9, seed: int = 0):
+        self.cfg, self.dcfg = cfg, dcfg
+        self.params, self.dparams = params, dparams
+        self.gamma, self.max_len, self.batch = gamma, max_len, batch_size
+        self.greedy = greedy
+        self.drafter = drafter
+        self.controller = controller
+        self.extractor = extractor
+        self.accept_ema = 1.0
+        self._ema = ema
+        self.stats = EngineStats()
+        self._key = jax.random.key(seed)
+        self._build_steps()
+
+    # ------------------------------------------------------------ jit fns
+    def _build_steps(self):
+        cfg, dcfg, gamma = self.cfg, self.dcfg, self.gamma
+
+        @jax.jit
+        def _prefill(params, tokens, pad):
+            return T.prefill(cfg, params, tokens, max_len=self.max_len,
+                             pad=pad)
+
+        @jax.jit
+        def _seed_draft(params, dparams, dcache, caps, tokens, pad):
+            b, s, _ = caps.shape
+            dcache = dict(dcache, pad=pad)
+            _, _, dcache = eagle.draft_extend(
+                dcfg, dparams, params["embed"], dcache,
+                caps[:, :s - 1], tokens[:, 1:],
+                jnp.full((b,), s - 1, jnp.int32))
+            return dcache
+
+        @jax.jit
+        def _spec_step(params, dparams, cache, dcache, carry, key):
+            return spec.spec_decode_step(
+                cfg, dcfg, params, dparams, cache, dcache, carry,
+                gamma=gamma, greedy=self.greedy, key=key)
+
+        @jax.jit
+        def _plain_step(params, cache, token, key):
+            return spec.plain_decode_step(cfg, params, cache, token,
+                                          greedy=self.greedy, key=key)
+
+        self._prefill_fn = _prefill
+        self._seed_fn = _seed_draft
+        self._spec_fn = _spec_step
+        self._plain_fn = _plain_step
+
+    def deploy_draft(self, dparams):
+        """Hot-swap the draft (no target reload — TIDE's C2)."""
+        self.dparams = dparams
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    # ------------------------------------------------------------- waves
+    def serve_wave(self, requests: List[Request]) -> List[Request]:
+        """Serve one wave to completion. Mutates and returns requests."""
+        assert len(requests) == self.batch
+        t0 = time.perf_counter()
+        b = self.batch
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, plen), np.int32)
+        pad = np.zeros((b,), np.int32)
+        for i, r in enumerate(requests):
+            pad[i] = plen - len(r.prompt)
+            toks[i, pad[i]:] = r.prompt
+        toks_j, pad_j = jnp.asarray(toks), jnp.asarray(pad)
+        pre = self._prefill_fn(self.params, toks_j, pad_j)
+        first = self._pick(pre["logits"])
+        cache = pre["cache"]
+        dcache = eagle.init_draft_cache(self.dcfg, b, self.max_len)
+        dcache = self._seed_fn(self.params, self.dparams, dcache,
+                               pre["captures"], toks_j, pad_j)
+        carry = spec.init_carry(self.cfg, self.dcfg, pre, first, self.gamma)
+        for i, r in enumerate(requests):
+            r.generated.append(int(first[i]))
+
+        active = np.ones((b,), bool)
+        token_plain = first
+        max_steps = max(r.max_new_tokens for r in requests) + 2
+        rids = [r.rid for r in requests]
+        for _ in range(max_steps):
+            if not active.any():
+                break
+            use_spec = True
+            if self.drafter is not None:
+                use_spec = self.drafter.update(int(active.sum()),
+                                               self.accept_ema)
+            if use_spec:
+                out = self._spec_fn(self.params, self.dparams, cache,
+                                    dcache, carry, self._next_key())
+                cache, dcache, carry = (out["cache"], out["dcache"],
+                                        out["carry"])
+                n_commit = np.asarray(out["n_commit"])
+                toks_np = np.asarray(out["tokens"])
+                alpha = float((n_commit[active] - 1).mean()) / self.gamma
+                ell = float(n_commit[active].mean())
+                self.accept_ema = (self._ema * self.accept_ema
+                                   + (1 - self._ema) * ell)
+                self.stats.spec_steps += 1
+                if self.extractor is not None:
+                    mask = np.asarray(out["accept_mask"]) \
+                        & active[:, None]
+                    self.extractor.offer(rids, out["captures"],
+                                         out["tokens"],
+                                         jnp.asarray(mask))
+            else:
+                out = self._plain_fn(self.params, cache, token_plain,
+                                     self._next_key())
+                cache = out["cache"]
+                token_plain = out["token"]
+                toks_np = np.asarray(token_plain)[:, None]
+                n_commit = np.ones((b,), np.int32)
+                alpha = 0.0
+                ell = 1.0
+                # re-sync the spec carry so speculation can resume later:
+                # pending pair = (capture of the committed token, token)
+                caps = out["captures"]                      # (B, 1, 3D)
+                gp1 = self.gamma + 1
+                feats = jnp.zeros((b, gp1, caps.shape[-1]), caps.dtype
+                                  ).at[:, 0].set(caps[:, 0])
+                tokp = jnp.zeros((b, gp1), jnp.int32
+                                 ).at[:, 0].set(token_plain)
+                carry = spec.SpecCarry(feats, tokp,
+                                       jnp.ones((b,), jnp.int32))
+                if self.extractor is not None:
+                    mask = jnp.asarray(active[:, None])
+                    self.extractor.offer(rids, caps, toks_np, mask)
+
+            new_tokens = 0
+            for i, r in enumerate(requests):
+                if not active[i]:
+                    continue
+                n = int(n_commit[i])
+                r.generated.extend(int(t) for t in toks_np[i, :n])
+                new_tokens += min(n, r.max_new_tokens -
+                                  (len(r.generated) - n))
+                if r.done:
+                    r.finish()
+                    active[i] = False
+            self.stats.tokens_out += max(new_tokens, 0)
+            self.stats.steps += 1
+            self.stats.accept_len_sum += ell
+            self.stats.accept_len_n += 1
+            n_sig = int(n_commit[active].sum()) if active.any() else 0
+            decision = Decision.NONE
+            if self.controller is not None:
+                collecting_before = self.controller.collection_enabled
+                decision = self.controller.observe(
+                    alpha, n_sig if collecting_before else 0)
+                if self.extractor is not None:
+                    self.extractor.enabled = \
+                        self.controller.collection_enabled
+            self.stats.timeline.append({
+                "t": time.perf_counter() - t0, "spec": use_spec,
+                "accept_len": ell, "alpha": alpha,
+                "decision": decision.value,
+            })
+        if self.extractor is not None:
+            self.extractor.flush()
+        self.stats.wall_s += time.perf_counter() - t0
+        return requests
+
+    def _pick(self, logits):
+        if self.greedy:
+            return logits.argmax(-1).astype(jnp.int32)
+        return jax.random.categorical(self._next_key(), logits
+                                      ).astype(jnp.int32)

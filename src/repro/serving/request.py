@@ -1,0 +1,30 @@
+"""Serving request/response types."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import List, Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 48
+    domain: str = ""
+    rid: int = dataclasses.field(default_factory=lambda: next(_ids))
+    arrival_t: float = dataclasses.field(default_factory=time.perf_counter)
+    # filled by the engine
+    generated: List[int] = dataclasses.field(default_factory=list)
+    finish_t: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    def finish(self):
+        if self.finish_t is None:
+            self.finish_t = time.perf_counter()
+            del self.generated[self.max_new_tokens:]

@@ -1,0 +1,112 @@
+"""Draft Model Training Engine (paper §3.3).
+
+Consumes SignalBatches from the shared store and fine-tunes the EAGLE-3
+draft on the captured target hidden states — no target forward pass and no
+target weights on the training devices (only the frozen token-embedding
+table is read).  FSDP-style sharding of the draft params happens through
+the same logical-axis rules when run under a mesh; on CPU it runs as-is.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eagle
+from repro.core.signals import SignalBatch, SignalStore
+from repro.models.config import ModelConfig
+from repro.training.optimizer import Optimizer, adamw
+
+
+class DraftTrainer:
+    """Asynchronous draft training cycles (one per controller trigger)."""
+
+    def __init__(self, tcfg: ModelConfig, dcfg: ModelConfig, embed_params,
+                 opt: Optional[Optimizer] = None, batch_size: int = 8,
+                 ttt: bool = True):
+        self.tcfg = tcfg
+        self.dcfg = dcfg
+        self.embed_params = embed_params     # frozen target embeddings
+        self.opt = opt or adamw(lr=1e-3, weight_decay=0.0)
+        self.batch_size = batch_size
+        self.ttt = ttt
+        self.log: List[Dict] = []
+
+        def loss_fn(dparams, feats, tokens):
+            return eagle.draft_train_loss(
+                self.dcfg, dparams, self.embed_params, feats, tokens,
+                ttt=self.ttt)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        @jax.jit
+        def step(dparams, opt_state, feats, tokens, it):
+            (loss, metrics), grads = grad_fn(dparams, feats, tokens)
+            dparams, opt_state = self.opt.update(dparams, grads, opt_state,
+                                                 it)
+            return dparams, opt_state, loss, metrics["accuracy"]
+
+        self._step = step
+
+        @jax.jit
+        def eval_acc(dparams, feats, tokens):
+            _, metrics = eagle.draft_train_loss(
+                self.dcfg, dparams, self.embed_params, feats, tokens,
+                ttt=False)
+            return metrics["accuracy"]
+
+        self._eval = eval_acc
+
+    # ---------------------------------------------------------------- data
+    @staticmethod
+    def _stack(batches: List[SignalBatch]) -> Tuple[np.ndarray, np.ndarray]:
+        s = min(b.feats.shape[0] for b in batches)
+        feats = np.stack([b.feats[:s] for b in batches])
+        toks = np.stack([b.tokens[:s] for b in batches])
+        return feats, toks
+
+    def make_arrays(self, batches: List[SignalBatch], eval_frac: float = 0.1):
+        """Split collected signals 9:1 into train/eval (paper Alg. 1)."""
+        feats, toks = self._stack(batches)
+        n = feats.shape[0]
+        n_eval = max(1, int(n * eval_frac)) if n > 1 else 0
+        return ((feats[:n - n_eval], toks[:n - n_eval]),
+                (feats[n - n_eval:], toks[n - n_eval:]))
+
+    # --------------------------------------------------------------- cycle
+    def train_cycle(self, dparams, batches: List[SignalBatch], *,
+                    epochs: int = 2, min_steps: int = 80,
+                    seed: int = 0) -> Dict:
+        """One training cycle on the drained signal buffer.  ``epochs`` is
+        a floor — small buffers get extra epochs until ``min_steps``
+        optimizer steps have run (training-until-saturation, paper Fig. 5).
+        Returns dict(dparams, train_acc, eval_acc, steps, seconds)."""
+        (tf, tt), (ef, et) = self.make_arrays(batches)
+        opt_state = self.opt.init(dparams)
+        rng = np.random.default_rng(seed)
+        bs = min(self.batch_size, max(tf.shape[0], 1))
+        steps_per_epoch = max(tf.shape[0] // bs, 1)
+        epochs = max(epochs, -(-min_steps // steps_per_epoch))
+        t0 = time.perf_counter()
+        it = 0
+        last_acc = 0.0
+        for _ in range(epochs):
+            order = rng.permutation(tf.shape[0])
+            for s0 in range(0, len(order) - bs + 1, bs):
+                sel = order[s0:s0 + bs]
+                dparams, opt_state, loss, acc = self._step(
+                    dparams, opt_state, jnp.asarray(tf[sel]),
+                    jnp.asarray(tt[sel]), jnp.int32(it))
+                last_acc = float(acc)
+                self.log.append({"it": it, "loss": float(loss),
+                                 "acc": last_acc})
+                it += 1
+        eval_acc = (float(self._eval(dparams, jnp.asarray(ef),
+                                     jnp.asarray(et)))
+                    if ef.shape[0] else last_acc)
+        return {"dparams": dparams, "train_acc": last_acc,
+                "eval_acc": eval_acc, "steps": it,
+                "seconds": time.perf_counter() - t0}

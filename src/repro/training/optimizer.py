@@ -1,0 +1,133 @@
+"""Optimizers: AdamW and Adafactor, built from scratch (no optax).
+
+Adafactor (factored second moment, no first moment) is the default for the
+≥70B-class assigned archs — the v5e HBM budget math in EXPERIMENTS.md
+§Dry-run requires it (bf16 params + bf16 grads + O(d) optimizer state).
+Both expose the same functional interface:
+
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _tree_map(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": _tree_map(zeros, params), "v": _tree_map(zeros, params)}
+
+    def update(params, grads, state, step):
+        grads = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / c1
+            vh = v / c2
+            step_ = lr * (mh / (jnp.sqrt(vh) + eps)
+                          + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        out = _tree_map(upd, params, grads, state["m"], state["v"])
+        new_p = _tree_map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        new_m = _tree_map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _tree_map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Shazeer & Stern (2018): factored second moment for >=2D params,
+    no first moment — O(rows + cols) state per matrix."""
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return _tree_map(st, params)
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                row_mean = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                # u = g / (sqrt(vr/row_mean) ⊗ sqrt(vc))
+                u = (g32
+                     * jax.lax.rsqrt(vr / row_mean + eps)[..., None]
+                     * jax.lax.rsqrt(vc + eps)[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            step_ = lr * u + weight_decay * lr * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), new_s
+
+        out = _tree_map(upd, params, grads, state,
+                        is_leaf=lambda x: isinstance(x, dict)
+                        and ("vr" in x or "v" in x))
+        new_p = _tree_map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        new_s = _tree_map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+# ------------------------------------------------------------------ utils
+def clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                     grads)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))

@@ -1,0 +1,95 @@
+"""Target-model training step: microbatch gradient accumulation (scan) +
+remat; this is what ``train_4k`` lowers in the dry-run.
+
+The step is a pure function (params, opt_state, batch, step) ->
+(params, opt_state, metrics); the launcher jits it with sharding rules
+from launch/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training.optimizer import Optimizer, global_norm
+
+
+def _split_microbatches(batch: Dict, n_micro: int) -> Dict:
+    """(B, ...) -> (n_micro, B/n_micro, ...) for every leaf."""
+    def sp(x):
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} % microbatches {n_micro} != 0")
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *, n_micro: int = 1,
+                    moe_impl: str = "sort", remat: bool = True) -> Callable:
+    """Build the jittable train step with grad accumulation over
+    ``n_micro`` microbatches (scan; fp32 accumulators)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = T.forward_train(cfg, params, mb, moe_impl=moe_impl,
+                                        remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, n_micro)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / n_micro,
+                        a_acc + metrics["accuracy"] / n_micro), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss, acc), _ = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0.0), jnp.float32(0.0)), mbs)
+            metrics = {"accuracy": acc, "ce": loss, "aux": jnp.float32(0.0)}
+        new_params, new_opt = opt.update(params, grads, opt_state, step)
+        metrics = dict(metrics, loss=loss, grad_norm=global_norm(grads))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def pretrain_target(cfg: ModelConfig, params, corpus, *, steps: int = 200,
+                    batch_size: int = 8, lr: float = 3e-3, seed: int = 0,
+                    opt: Optional[Optimizer] = None,
+                    log_every: int = 0):
+    """Quick next-token pretraining of a (tiny) target on a token matrix
+    (N, S) — gives the live-demo target structured behaviour so the draft
+    has something learnable to align to (the assigned targets are trained
+    LMs; this stands in for that)."""
+    from repro.training.optimizer import adamw
+    import numpy as np
+    opt = opt or adamw(lr=lr, weight_decay=0.0)
+    step_fn = jax.jit(make_train_step(cfg, opt, n_micro=1, remat=False))
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for it in range(steps):
+        sel = rng.integers(0, corpus.shape[0], size=batch_size)
+        toks = jnp.asarray(corpus[sel][:, :-1])
+        tgts = jnp.asarray(corpus[sel][:, 1:])
+        params, opt_state, m = step_fn(params, opt_state,
+                                       {"tokens": toks, "targets": tgts},
+                                       jnp.int32(it))
+        losses.append(float(m["loss"]))
+        if log_every and it % log_every == 0:
+            print(f"  pretrain step {it}: loss {losses[-1]:.3f}")
+    return params, losses

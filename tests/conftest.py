@@ -1,0 +1,55 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — tests must see the
+real single CPU device (the dry-run sets its own flags in-process)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.config import (ATTN, CROSS, FFN_GELU, FFN_MOE, FFN_SWIGLU,
+                                 MAMBA, MLA, RWKV6, BlockDef, ModelConfig)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97,
+                dtype="float32", chunk_len=8, attn_block_q=32,
+                attn_block_kv=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="session")
+def rngs():
+    return jax.random.split(jax.random.key(0), 8)
+
+
+MIXER_CFGS = {
+    "dense": tiny_cfg(),
+    "mla": tiny_cfg(name="mla", pattern=(BlockDef(MLA, FFN_SWIGLU),),
+                    q_lora_rank=32, kv_lora_rank=32, qk_nope_head_dim=16,
+                    qk_rope_head_dim=8, v_head_dim=16, num_kv_heads=4),
+    # capacity_factor 8 → no token dropping, so decode ≡ prefill exactly
+    # (capacity-based MoE drops are batch-composition-dependent by design)
+    "moe": tiny_cfg(name="moe", pattern=(BlockDef(ATTN, FFN_MOE),),
+                    num_experts=4, experts_per_tok=2, moe_d_ff=64,
+                    num_shared_experts=1, capacity_factor=8.0),
+    "mamba": tiny_cfg(name="mamba", pattern=(BlockDef(MAMBA, FFN_SWIGLU),)),
+    "rwkv": tiny_cfg(name="rwkv", pattern=(BlockDef(RWKV6, FFN_SWIGLU),),
+                     rwkv_head_dim=16),
+    "vlm": tiny_cfg(name="vlm", num_layers=2,
+                    pattern=(BlockDef(ATTN), BlockDef(CROSS)),
+                    num_image_tokens=8),
+    "audio": tiny_cfg(name="audio",
+                      pattern=(BlockDef(ATTN, FFN_GELU, cross=True),),
+                      encoder_layers=2, decoder_len=16),
+}
+
+
+def extra_for(cfg, batch, seq, key):
+    if cfg.num_image_tokens:
+        return {"image_embeds": jax.random.normal(
+            key, (batch, cfg.num_image_tokens, cfg.d_model),
+            cfg.act_dtype)}
+    if cfg.encoder_layers:
+        return {"frames": jax.random.normal(key, (batch, seq, cfg.d_model),
+                                            cfg.act_dtype)}
+    return {}

@@ -1,0 +1,119 @@
+"""Per-assigned-architecture smoke tests: a reduced same-family variant
+runs one forward/train step and one decode step on CPU with finite
+outputs and the right shapes (assignment requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import transformer as T
+
+ARCHS = configs.assigned()
+
+
+def _extra(cfg, b, s, key):
+    if cfg.num_image_tokens:
+        return {"image_embeds": jax.random.normal(
+            key, (b, cfg.num_image_tokens, cfg.d_model), cfg.act_dtype)}
+    if cfg.encoder_layers:
+        return {"frames": jax.random.normal(key, (b, s, cfg.d_model),
+                                            cfg.act_dtype)}
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_variant_limits(arch):
+    cfg = configs.get_reduced(arch)
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.num_layers <= max(2, len(cfg.pattern) + len(cfg.prologue))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.key(0)
+    params = T.init(cfg, key)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks,
+             **_extra(cfg, B, S, jax.random.key(2))}
+    loss, metrics = T.forward_train(cfg, params, batch, remat=True)
+    assert np.isfinite(float(loss)), f"{arch}: NaN train loss"
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init(cfg, jax.random.key(0))
+    B, S, G = 2, 32, 3
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    extra = _extra(cfg, B, S, jax.random.key(2))
+    out = T.prefill(cfg, params, toks, extra=extra, max_len=S + 8)
+    assert out["logits"].shape == (B, cfg.vocab_size)
+    assert out["captures"].shape == (B, S, 3 * cfg.d_model)
+    assert np.isfinite(np.asarray(out["logits"])).all(), f"{arch}: NaN"
+    blk = jax.random.randint(jax.random.key(3), (B, G + 1), 0,
+                             cfg.vocab_size)
+    dec = T.decode_step(cfg, params, out["cache"], blk)
+    assert dec["logits"].shape == (B, G + 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(dec["logits"])).all(), f"{arch}: NaN"
+    committed = T.commit_cache(cfg, dec["cache"],
+                               jnp.array([1, G + 1], jnp.int32))
+    assert committed["lengths"].tolist() == [S + 1, S + G + 1]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full (non-reduced) config must carry the exact assigned dims."""
+    spec = {
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "rwkv6-3b": (32, 2560, None, None, 8960, 65536),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    }[arch]
+    cfg = configs.get(arch)
+    L, d, h, kv, ff, v = spec
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    if h is not None:
+        assert cfg.num_heads == h
+    if kv is not None:
+        assert cfg.num_kv_heads == kv
+    if ff is not None:
+        assert (cfg.d_ff == ff or cfg.moe_hidden == ff)
+    assert cfg.vocab_size == v
+    assert cfg.citation
+
+
+def test_moe_expert_counts():
+    ds = configs.get("deepseek-v3-671b")
+    assert ds.num_experts == 256 and ds.experts_per_tok == 8
+    assert ds.num_shared_experts == 1 and ds.moe_hidden == 2048
+    ja = configs.get("jamba-1.5-large-398b")
+    assert ja.num_experts == 16 and ja.experts_per_tok == 2
+    gr = configs.get("granite-moe-3b-a800m")
+    assert gr.num_experts == 40 and gr.experts_per_tok == 8
+
+
+def test_jamba_interleave_ratio():
+    cfg = configs.get("jamba-1.5-large-398b")
+    kinds = cfg.layer_kinds
+    attn_layers = [i for i, b in enumerate(kinds) if b.mixer == "attn"]
+    assert len(attn_layers) == 9            # 1:7 in every superblock of 8
+    moe_layers = [b for b in kinds if b.ffn == "moe"]
+    assert len(moe_layers) == 36            # every other layer
+
+
+def test_vision_cross_layer_count():
+    cfg = configs.get("llama-3.2-vision-11b")
+    cross = [b for b in cfg.layer_kinds if b.mixer == "cross"]
+    assert len(cross) == 8                  # every 5th of 40

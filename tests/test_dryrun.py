@@ -1,0 +1,28 @@
+"""Dry-run launcher end-to-end (deliverable e): lower + compile one
+(arch × shape) on the production mesh in a subprocess (the 512-device
+XLA flag must be set before jax initializes, hence not in-process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-base", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    files = list(tmp_path.glob("*.json"))
+    assert len(files) == 1
+    d = json.loads(files[0].read_text())
+    assert d["mesh"] == "16x16"
+    assert d["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert d["roofline"]["step_s"] > 0
+    assert "resident_bytes" in d

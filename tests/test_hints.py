@@ -1,0 +1,70 @@
+"""Sharding-hints layer (§Perf): inert without a context, correct specs
+with one, and the replication-guard no-op."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_demo_mesh
+from repro.models import hints
+from repro.models import attention as attn
+
+
+def test_hint_noop_without_context():
+    x = jnp.ones((4, 4))
+    assert hints.hint(x, ("batch", None)) is x
+    assert not hints.active()
+
+
+def test_hint_applies_under_context():
+    mesh = make_demo_mesh()
+    x = jnp.ones((4, 4))
+    with hints.activate(mesh, sh.BASE_RULES):
+        assert hints.active()
+        y = hints.hint(x, ("batch", None))
+        # on a 1-device mesh everything resolves to replicated -> no-op
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert not hints.active()
+
+
+def test_hint_replication_guard():
+    """A spec that resolves fully-replicated must not constrain."""
+    mesh = make_demo_mesh()
+    x = jnp.ones((3, 5))   # 3 and 5 divide nothing on a 16-way axis
+    with hints.activate(mesh, sh.BASE_RULES):
+        y = hints.hint(x, ("experts", "mlp"))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_mixed_precision_attend_matches_fp32():
+    """§Perf H-A1: bf16-operand attention == fp32-upcast attention."""
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (2, 8, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 16, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 16, 2, 32), jnp.float32)
+    mask = jnp.ones((1, 1, 1, 8, 16), bool)
+    old = attn.MIXED_PRECISION
+    try:
+        attn.MIXED_PRECISION = True
+        a = attn.attend(q, k, v, mask)
+        attn.MIXED_PRECISION = False
+        b = attn.attend(q, k, v, mask)
+    finally:
+        attn.MIXED_PRECISION = old
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_decode_blockwise_matches_full():
+    ks = jax.random.split(jax.random.key(5), 3)
+    B, T, S = 2, 4, 4096
+    q = jax.random.normal(ks[0], (B, T, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, 2, 32), jnp.float32)
+    lengths = jnp.array([1000, 3000], jnp.int32)
+    pad = jnp.array([7, 0], jnp.int32)
+    ref = attn.decode_attend(q, k, v, lengths, pad)
+    out = attn.decode_attend_blockwise(q, k, v, lengths, pad,
+                                       block_kv=512)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,116 @@
+"""Roofline extraction: HLO collective parser + term math + workload
+generator sanity."""
+import numpy as np
+import pytest
+
+from repro.launch import roofline as rf
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[8,2048,128]{2,1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %rs = f32[512,16]{1,0} reduce-scatter(%y), replica_groups=[16,16]<=[256], dimensions={0}
+  %cp = bf16[4,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = (bf16[64,64]{1,0}, u32[]) all-gather-start(%w), replica_groups={{0,1}}
+  %agd = bf16[64,64]{1,0} all-gather-done(%ags)
+  %not_a_collective = f32[2,2]{1,0} add(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_counts():
+    st = rf.parse_collectives(HLO_SAMPLE)
+    assert st.counts["all-gather"] == 2       # ag + ag-start (done skipped)
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+
+
+def test_parse_collectives_traffic():
+    st = rf.parse_collectives(HLO_SAMPLE)
+    ag_bytes = 8 * 2048 * 128 * 2
+    assert st.bytes_by_kind["all-gather"] == pytest.approx(
+        ag_bytes * 3 / 4 + 64 * 64 * 2 * 1 / 2)
+    ar = 1024 * 4
+    assert st.bytes_by_kind["all-reduce"] == pytest.approx(
+        ar * 2 * 7 / 8)
+    rs = 512 * 16 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == pytest.approx(
+        rs * 15 / 16)
+    assert st.bytes_by_kind["collective-permute"] == 4 * 128 * 2
+
+
+def test_roofline_terms_and_dominance():
+    r = rf.Roofline(flops=197e12, hbm_bytes=819e9 * 2,
+                    collective_bytes=50e9 * 0.5, chips=256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.step_s == pytest.approx(2.0)
+
+
+def test_model_flops():
+    import repro.configs as C
+    cfg = C.get("deepseek-v3-671b")
+    mf = rf.model_flops(cfg, "train", 1000)
+    assert mf == pytest.approx(6 * cfg.active_param_count() * 1000)
+    mf_dec = rf.model_flops(cfg, "decode", 4)
+    assert mf_dec == pytest.approx(2 * cfg.active_param_count() * 4)
+
+
+def test_workload_domains_disjoint_and_shifting():
+    from repro.data.workloads import Phase, WorkloadStream, make_domains
+    doms = make_domains(512, ["a", "b", "c", "d"], seed=0)
+    ranges = [(d.vocab_lo, d.vocab_hi) for d in doms.values()]
+    for i, (lo1, hi1) in enumerate(ranges):
+        for lo2, hi2 in ranges[i + 1:]:
+            assert hi1 <= lo2 or hi2 <= lo1     # disjoint vocab regions
+    stream = WorkloadStream(doms, [Phase("a", 6), Phase("b", 6)], seed=1)
+    items = list(stream)
+    assert len(items) == 12
+    for name, prompt in items[:6]:
+        assert name == "a"
+        assert all(doms["a"].vocab_lo <= t < doms["a"].vocab_hi
+                   for t in prompt)
+    waves = list(stream.batches(4))
+    assert len(waves) == 3 and all(len(w) == 4 for w in waves)
+
+
+def test_shape_applicability_rules():
+    import repro.configs as C
+    from repro.configs import shapes as shp
+    ok, why = shp.applicable(C.get("whisper-base"), "long_500k")
+    assert not ok and "capped" in why
+    ok, _ = shp.applicable(C.get("rwkv6-3b"), "long_500k")
+    assert ok
+    # dense arch gets a sliding window for long_500k
+    cfg = shp.shape_cfg(C.get("glm4-9b"), "long_500k")
+    assert cfg.window == shp.LONG_CONTEXT_WINDOW
+    # but not for decode_32k
+    assert shp.shape_cfg(C.get("glm4-9b"), "decode_32k").window == 0
+    # ssm needs no window
+    assert shp.shape_cfg(C.get("rwkv6-3b"), "long_500k").window == 0
+
+
+def test_input_specs_shapes():
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.configs import shapes as shp
+    cfg = C.get("glm4-9b")
+    tr = shp.input_specs(cfg, "train_4k")
+    assert tr["batch"]["tokens"].shape == (256, 4096)
+    pf = shp.input_specs(cfg, "prefill_32k")
+    assert pf["tokens"].shape == (32, 32768)
+    dc = shp.input_specs(cfg, "decode_32k")
+    assert dc["tokens"].shape == (128, 4)
+    kv = dc["cache"]["body"]["pos0"]["k"]
+    assert kv.shape == (40, 128, 32768 + 16, 2, 128)
+    assert kv.shape[2] % 16 == 0        # model-axis divisibility
+    # audio: frames stand in for the stubbed conv frontend
+    au = shp.input_specs(C.get("whisper-base"), "train_4k")
+    assert au["batch"]["frames"].shape == (256, 4096, 512)
+    assert au["batch"]["tokens"].shape == (256, 448)
+    # vlm: image embeds stand in for the stubbed ViT
+    vl = shp.input_specs(C.get("llama-3.2-vision-11b"), "prefill_32k")
+    assert vl["extra"]["image_embeds"].shape == (32, 4096, 4096)

@@ -1,0 +1,144 @@
+"""Speculative decoding correctness: greedy exactness, stochastic
+distribution preservation, verification/commit bookkeeping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import eagle, speculative as spec
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.get("tide-tiny")
+    dcfg = eagle.draft_config(cfg)
+    params = T.init(cfg, jax.random.key(0))
+    dparams = eagle.draft_init(dcfg, jax.random.key(1))
+    return cfg, dcfg, params, dparams
+
+
+def _spec_generate(cfg, dcfg, params, dparams, toks, n_steps, gamma=3,
+                   greedy=True, seed=0):
+    B, S = toks.shape
+    MAX = S + (gamma + 1) * (n_steps + 2)
+    pre = T.prefill(cfg, params, toks, max_len=MAX)
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    dcache = eagle.init_draft_cache(dcfg, B, MAX)
+    dcache = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache, pre,
+                                   toks)
+    carry = spec.init_carry(cfg, dcfg, pre, first, gamma)
+    cache = pre["cache"]
+    seqs = [[int(first[b])] for b in range(B)]
+    for i in range(n_steps):
+        out = spec.spec_decode_step(cfg, dcfg, params, dparams, cache,
+                                    dcache, carry, gamma=gamma,
+                                    greedy=greedy,
+                                    key=jax.random.key(seed + i))
+        cache, dcache, carry = out["cache"], out["dcache"], out["carry"]
+        for b in range(B):
+            n = int(out["n_commit"][b])
+            seqs[b].extend(int(t) for t in out["tokens"][b, :n])
+    return seqs
+
+
+def _greedy_generate(cfg, params, toks, n_tokens):
+    B, S = toks.shape
+    pre = T.prefill(cfg, params, toks, max_len=S + n_tokens + 4)
+    cache = pre["cache"]
+    cur = pre["logits"].argmax(-1).astype(jnp.int32)
+    seqs = [[int(cur[b])] for b in range(B)]
+    for _ in range(n_tokens):
+        out = spec.plain_decode_step(cfg, params, cache, cur)
+        cache, cur = out["cache"], out["token"]
+        for b in range(B):
+            seqs[b].append(int(cur[b]))
+    return seqs
+
+
+def test_greedy_spec_exactness(setup):
+    """Speculative greedy output ≡ autoregressive greedy output."""
+    cfg, dcfg, params, dparams = setup
+    toks = jax.random.randint(jax.random.key(2), (3, 20), 0,
+                              cfg.vocab_size)
+    spec_seqs = _spec_generate(cfg, dcfg, params, dparams, toks, 8)
+    ref_seqs = _greedy_generate(cfg, params, toks, 40)
+    for b in range(3):
+        n = len(spec_seqs[b])
+        assert spec_seqs[b] == ref_seqs[b][:n], f"req {b} diverged"
+
+
+def test_verify_greedy_unit():
+    V = 11
+    tl = jnp.zeros((1, 4, V)).at[0, 0, 3].set(9.).at[0, 1, 5].set(9.) \
+        .at[0, 2, 7].set(9.).at[0, 3, 2].set(9.)
+    # drafts match at 0,1 then diverge
+    n, bonus = spec.verify_greedy(tl, jnp.array([[3, 5, 9]]))
+    assert int(n[0]) == 2 and int(bonus[0]) == 7
+    # all match -> bonus from the last position
+    n, bonus = spec.verify_greedy(tl, jnp.array([[3, 5, 7]]))
+    assert int(n[0]) == 3 and int(bonus[0]) == 2
+    # immediate mismatch
+    n, bonus = spec.verify_greedy(tl, jnp.array([[4, 5, 7]]))
+    assert int(n[0]) == 0 and int(bonus[0]) == 3
+
+
+def test_verify_sample_preserves_distribution():
+    """Committed first tokens from stochastic verification follow the
+    target distribution regardless of a (mismatched) draft."""
+    V, N = 8, 4000
+    key = jax.random.key(0)
+    t_logits = jnp.array([0.5, 2.0, -1.0, 0.0, 1.0, -2.0, 0.3, 0.7])
+    d_logits = jnp.array([2.0, -1.0, 0.5, 1.5, -0.5, 0.0, 1.0, -2.0])
+    tl = jnp.broadcast_to(t_logits, (N, 4, V))
+    dl = jnp.broadcast_to(d_logits, (N, 3, V))
+    keys = jax.random.split(key, N)
+
+    def one(k):
+        kd, kv = jax.random.split(k)
+        draft = jax.random.categorical(kd, dl[0])       # (3,)
+        n_acc, bonus = spec.verify_sample(kv, tl[:1], dl[:1],
+                                          draft[None])
+        first = jnp.where(n_acc[0] > 0, draft[0], bonus[0])
+        return first
+
+    firsts = jax.vmap(one)(keys)
+    emp = np.bincount(np.asarray(firsts), minlength=V) / N
+    expected = np.asarray(jax.nn.softmax(t_logits))
+    # chi-square-ish bound: max deviation small for N=4000
+    assert np.max(np.abs(emp - expected)) < 0.035, (emp, expected)
+
+
+def test_spec_commit_bookkeeping(setup):
+    cfg, dcfg, params, dparams = setup
+    B, S, G = 2, 12, 3
+    toks = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)
+    pre = T.prefill(cfg, params, toks, max_len=64)
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    dcache = eagle.init_draft_cache(dcfg, B, 64)
+    dcache = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache, pre,
+                                   toks)
+    assert dcache["lengths"].tolist() == [S - 1, S - 1]
+    carry = spec.init_carry(cfg, dcfg, pre, first, G)
+    out = spec.spec_decode_step(cfg, dcfg, params, dparams, pre["cache"],
+                                dcache, carry, gamma=G)
+    n = np.asarray(out["n_commit"])
+    assert ((1 <= n) & (n <= G + 1)).all()
+    assert np.asarray(out["cache"]["lengths"]).tolist() == \
+        (S + n).tolist()
+    # draft cache advanced by exactly the pairs ingested (1 first round)
+    assert out["dcache"]["lengths"].tolist() == [S, S]
+    # accept_mask consistent with n_commit
+    am = np.asarray(out["accept_mask"])
+    assert (am.sum(1) == n).all()
+
+
+def test_sampled_spec_runs(setup):
+    cfg, dcfg, params, dparams = setup
+    toks = jax.random.randint(jax.random.key(4), (2, 16), 0,
+                              cfg.vocab_size)
+    seqs = _spec_generate(cfg, dcfg, params, dparams, toks, 4,
+                          greedy=False, seed=11)
+    assert all(len(s) >= 5 for s in seqs)
+    assert all(0 <= t < cfg.vocab_size for s in seqs for t in s)

@@ -25,6 +25,7 @@ import time
 import traceback
 
 MODULES = [
+    ("hotloop", "benchmarks.bench_hotloop"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -40,20 +41,38 @@ MODULES = [
 ]
 
 
+# Fast CI perf-smoke gate: the serving hot-loop overhead bench (reduced
+# shapes) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
+SMOKE_MODULES = [
+    ("hotloop", "benchmarks.bench_hotloop"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
 def main() -> None:
+    import inspect
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on the bench tag")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI perf-smoke: hotloop + kernels only, "
+                         "reduced shapes")
     args = ap.parse_args()
+    modules = SMOKE_MODULES if args.smoke else MODULES
     print("name,us_per_call,derived")
     failed = []
-    for tag, module in MODULES:
+    for tag, module in modules:
         if args.only and args.only not in tag:
             continue
         t0 = time.perf_counter()
         print(f"# === {tag} ({module}) ===", flush=True)
         try:
-            __import__(module, fromlist=["run"]).run()
+            fn = __import__(module, fromlist=["run"]).run
+            kw = {}
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                kw["smoke"] = True
+            fn(**kw)
         except Exception:
             failed.append(tag)
             print(f"# {tag} FAILED:", file=sys.stderr)

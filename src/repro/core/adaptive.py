@@ -95,6 +95,33 @@ def min_accept_len_for_gain(gamma: int, profile: LatencyProfile,
     return margin * (profile.c(batch) * gamma + profile.beta(batch, gamma))
 
 
+def accept_threshold_table(profile: LatencyProfile, gamma: int,
+                           max_batch: int, margin: float = 1.0) -> np.ndarray:
+    """Eq. 5 break-even E[l] for every possible active-request count.
+
+    The pure functional core of the Adaptive Drafter: index ``b`` holds
+    ``min_accept_len_for_gain(gamma, profile, b)``, so the speculate-vs-
+    plain choice becomes a device-side table lookup + compare — the
+    fused decode superstep evaluates it in-graph with ``lax.cond``
+    instead of syncing to the host every step.  Index 0 is a sentinel
+    (no active requests → the round is skipped anyway)."""
+    return np.array(
+        [min_accept_len_for_gain(gamma, profile, max(b, 1), margin)
+         for b in range(max_batch + 1)], np.float32)
+
+
+def drafter_decide(threshold_table, n_active, accept_len_ema):
+    """In-graph Eq. 5 decision (jnp; traceable).
+
+    threshold_table: (B+1,) from ``accept_threshold_table``;
+    n_active: () int32 active-request count; accept_len_ema: () f32.
+    Returns a traced bool: speculate iff the EMA acceptance length
+    clears the break-even threshold at this effective batch size."""
+    import jax.numpy as jnp
+    idx = jnp.clip(n_active, 0, threshold_table.shape[0] - 1)
+    return accept_len_ema >= threshold_table[idx]
+
+
 @dataclasses.dataclass
 class AdaptiveDrafter:
     """Runtime enable/disable decision for speculative decoding."""
@@ -104,11 +131,19 @@ class AdaptiveDrafter:
     enabled: bool = True
 
     def update(self, batch: int, accept_len_ema: float) -> bool:
-        """Decide from the *observed* EMA acceptance length (E[l])."""
+        """Decide from the *observed* EMA acceptance length (E[l]).
+        The compare runs in float32 to match the in-graph decision of
+        the fused superstep (``drafter_decide`` on the f32 table)."""
         threshold = min_accept_len_for_gain(self.gamma, self.profile, batch,
                                             self.margin)
-        self.enabled = accept_len_ema >= threshold
+        self.enabled = bool(np.float32(accept_len_ema)
+                            >= np.float32(threshold))
         return self.enabled
+
+    def threshold_table(self, max_batch: int) -> np.ndarray:
+        """Device-side decision table for the fused superstep."""
+        return accept_threshold_table(self.profile, self.gamma, max_batch,
+                                      self.margin)
 
     def predicted_speedup(self, batch: int, accept_len: float) -> float:
         alpha = alpha_from_accept_len(accept_len, self.gamma)

@@ -83,6 +83,15 @@ class TrainingController:
         })
         return decision
 
+    def observe_gated(self, alpha: float, n_new_samples: int) -> Decision:
+        """`observe` with the serving-loop gating applied internally:
+        signal rows only count if collection was already enabled *before*
+        this observation.  The per-step loop and the fused superstep's
+        deferred telemetry replay share this entry point so Algorithm 1
+        sees an identical measurement sequence in both modes."""
+        collecting_before = self.collection_enabled
+        return self.observe(alpha, n_new_samples if collecting_before else 0)
+
     @property
     def alpha_train(self) -> float:
         """Average acceptance over the collected window (Alg. 1's

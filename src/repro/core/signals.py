@@ -106,6 +106,27 @@ class SignalExtractor:
         if prev is not None:
             self._collect(*prev)
 
+    # ------------------------------------------------- superstep path
+    def ingest_packed(self, rids, feats, tokens, counts):
+        """Ingest one round of kernel-packed signals (host arrays).
+
+        Row layout per the ``extract_pack`` kernel: accepted entries
+        compacted to the front — ``counts[i]`` valid rows of
+        ``feats[i]``/``tokens[i]`` for request ``rids[i]``, in original
+        step order, so windows match the per-step ``offer`` path
+        byte-for-byte.  Rows are copied out: a view would pin the whole
+        superstep telemetry buffer until the window fills."""
+        if not self.enabled:
+            return
+        for i, rid in enumerate(rids):
+            n = int(counts[i])
+            if n == 0:
+                continue
+            acc = self._acc.setdefault(rid, [])
+            acc.extend(zip(np.array(feats[i, :n]), np.array(tokens[i, :n])))
+            if len(acc) >= self.window:
+                self._emit(rid)
+
     def flush(self):
         if self._pending is not None:
             prev, self._pending = self._pending, None

@@ -201,3 +201,203 @@ def plain_decode_step(cfg: ModelConfig, tparams, cache, carry_token, *,
                            jnp.ones(carry_token.shape, jnp.int32))
     return {"token": nxt, "cache": cache, "captures": out["captures"],
             "logits": logits}
+
+
+def plain_step_from_carry(cfg: ModelConfig, tparams, cache,
+                          carry: SpecCarry, *, gamma: int = 3,
+                          greedy: bool = True, key=None,
+                          moe_impl: str = "sort"):
+    """Plain decode step driven by the spec carry (not a separate
+    last-token variable): t0 is pair index ``advance-1`` of the carry, so
+    the step is correct even directly after a speculative round (where a
+    separately-tracked plain token would be stale).  Returns the same
+    pytree layout as ``spec_decode_step`` so the two are `lax.cond`-
+    compatible inside the fused superstep."""
+    b, gp1 = carry.tokens.shape
+    t0 = jnp.take_along_axis(carry.tokens, (carry.advance - 1)[:, None],
+                             axis=1)[:, 0]
+    out = plain_decode_step(cfg, tparams, cache, t0, greedy=greedy,
+                            key=key, moe_impl=moe_impl)
+    nxt, caps1 = out["token"], out["captures"]            # (B,), (B,1,3D)
+    feats = jnp.zeros((b, gp1, caps1.shape[-1]), caps1.dtype
+                      ).at[:, 0].set(caps1[:, 0])
+    tokens = jnp.zeros((b, gp1), jnp.int32).at[:, 0].set(nxt)
+    n_commit = jnp.ones((b,), jnp.int32)
+    accept_mask = jnp.arange(gp1)[None, :] < n_commit[:, None]
+    new_carry = SpecCarry(feats, tokens, n_commit)
+    return {"tokens": tokens, "n_commit": n_commit, "cache": out["cache"],
+            "carry": new_carry, "captures": feats,
+            "accept_mask": accept_mask}
+
+
+# ===================================================== fused superstep
+class SuperstepState(NamedTuple):
+    """Device-resident serving state threaded across fused supersteps.
+
+    Everything the per-step host loop used to keep in Python lives here
+    so K speculative rounds run inside one compiled function with zero
+    host syncs."""
+    carry: SpecCarry
+    active: jnp.ndarray       # (B,) bool — request still generating
+    gen_count: jnp.ndarray    # (B,) int32 — committed tokens (incl. first)
+    accept_ema: jnp.ndarray   # () f32 — EMA of acceptance length E[l]
+    key_data: jnp.ndarray     # raw PRNG key data (one split per round)
+
+
+def init_superstep_state(carry: SpecCarry, first_token, key, *,
+                         accept_ema: float = 1.0,
+                         eos_id: Optional[int] = None) -> SuperstepState:
+    b = first_token.shape[0]
+    active = jnp.ones((b,), bool)
+    if eos_id is not None:
+        active = active & (first_token != eos_id)
+    return SuperstepState(
+        carry=carry, active=active,
+        gen_count=jnp.ones((b,), jnp.int32),
+        accept_ema=jnp.float32(accept_ema),
+        key_data=jax.random.key_data(key))
+
+
+def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
+                     cache, dcache, state: SuperstepState, max_new,
+                     threshold_table=None, *, rounds: int = 8,
+                     gamma: int = 3, greedy: bool = True,
+                     ema_decay: float = 0.9, eos_id: Optional[int] = None,
+                     collect_signals: bool = True, moe_impl: str = "sort"):
+    """K speculative rounds fused into one compiled function.
+
+    ``lax.scan`` over ``rounds``; each round
+      1. decides speculate-vs-plain in-graph (Eq. 5 threshold table +
+         acceptance-EMA, ``lax.cond``) — no host round-trip,
+      2. runs the selected step (``spec_decode_step`` or
+         ``plain_step_from_carry``),
+      3. commits tokens on device: per-request max-token clamp, optional
+         EOS cut, active-mask update,
+      4. compacts accepted-position training signals with the
+         ``extract_pack`` kernel so one (counts, feats, tokens) buffer
+         per round crosses to the host per *superstep*, not per step.
+
+    Rounds after all requests finish are skipped via an outer
+    ``lax.cond`` (state, caches and the PRNG chain pass through
+    untouched, so host-side key accounting matches the per-step loop).
+
+    max_new: (B,) int32 per-request budgets; threshold_table: (B+1,) f32
+    from ``adaptive.accept_threshold_table`` or None (always speculate).
+    Returns dict(cache, dcache, state, rounds) where ``rounds`` holds
+    (K, ...)-stacked per-round telemetry + packed signal buffers.
+    """
+    from repro.kernels.extract_pack.ops import pack_signals
+
+    gp1 = gamma + 1
+
+    def _round(carry_in, _):
+        cache, dcache, st = carry_in
+
+        def _skip(op):
+            cache, dcache, st = op
+            b = st.active.shape[0]
+            f = st.carry.feats.shape[-1]
+            ys = {
+                "tokens": jnp.zeros((b, gp1), jnp.int32),
+                "n_commit": jnp.zeros((b,), jnp.int32),
+                "n_eff": jnp.zeros((b,), jnp.int32),
+                "active_after": st.active,
+                "use_spec": jnp.bool_(False),
+                "alpha": jnp.float32(0.0),
+                "ell": jnp.float32(0.0),
+                "n_sig": jnp.int32(0),
+                "ema": st.accept_ema,
+            }
+            if collect_signals:
+                ys["sig_feats"] = jnp.zeros((b, gp1, f), st.carry.feats.dtype)
+                ys["sig_tokens"] = jnp.zeros((b, gp1), jnp.int32)
+                ys["sig_counts"] = jnp.zeros((b,), jnp.int32)
+            return (cache, dcache, st), ys
+
+        def _run(op):
+            cache, dcache, st = op
+            key = jax.random.wrap_key_data(st.key_data)
+            knext, kuse = jax.random.split(key)
+            n_active = st.active.sum().astype(jnp.int32)
+
+            def _spec(args):
+                cache, dcache, carry = args
+                out = spec_decode_step(cfg, dcfg, tparams, dparams, cache,
+                                       dcache, carry, gamma=gamma,
+                                       greedy=greedy, key=kuse,
+                                       moe_impl=moe_impl)
+                return (out["cache"], out["dcache"], out["carry"],
+                        out["tokens"], out["n_commit"], out["captures"],
+                        out["accept_mask"])
+
+            def _plain(args):
+                cache, dcache, carry = args
+                out = plain_step_from_carry(cfg, tparams, cache, carry,
+                                            gamma=gamma, greedy=greedy,
+                                            key=kuse, moe_impl=moe_impl)
+                return (out["cache"], dcache, out["carry"], out["tokens"],
+                        out["n_commit"], out["captures"],
+                        out["accept_mask"])
+
+            if threshold_table is None:
+                use_spec = jnp.bool_(True)
+                sel = _spec((cache, dcache, st.carry))
+            else:
+                from repro.core.adaptive import drafter_decide
+                use_spec = drafter_decide(threshold_table, n_active,
+                                          st.accept_ema)
+                sel = jax.lax.cond(use_spec, _spec, _plain,
+                                   (cache, dcache, st.carry))
+            cache, dcache, carry, tokens, n_commit, captures, accept_mask \
+                = sel
+
+            act = st.active
+            n_act_f = jnp.maximum(n_active.astype(jnp.float32), 1.0)
+            ncf = n_commit.astype(jnp.float32)
+            ell = jnp.where(act, ncf, 0.0).sum() / n_act_f
+            alpha = jnp.where(act, ncf - 1.0, 0.0).sum() / n_act_f / gamma
+            # EMA tracks acceptance of *speculative* rounds only (a plain
+            # round's l=1 carries no draft-quality information)
+            ema = jnp.where(use_spec,
+                            ema_decay * st.accept_ema
+                            + (1.0 - ema_decay) * ell,
+                            st.accept_ema)
+
+            remaining = jnp.maximum(max_new - st.gen_count, 0)
+            n_eff = jnp.where(act, jnp.minimum(n_commit, remaining), 0)
+            if eos_id is not None:
+                pos = jnp.arange(gp1)[None, :]
+                is_eos = (tokens == eos_id) & (pos < n_eff[:, None])
+                has_eos = is_eos.any(axis=1)
+                n_eff = jnp.where(has_eos, is_eos.argmax(axis=1) + 1, n_eff)
+            else:
+                has_eos = jnp.zeros_like(act)
+            gen_new = st.gen_count + n_eff
+            active_after = act & (gen_new < max_new) & ~has_eos
+            n_sig = jnp.where(active_after, n_commit, 0).sum()
+
+            ys = {"tokens": tokens, "n_commit": n_commit, "n_eff": n_eff,
+                  "active_after": active_after, "use_spec": use_spec,
+                  "alpha": alpha, "ell": ell,
+                  "n_sig": n_sig.astype(jnp.int32), "ema": ema}
+            if collect_signals:
+                # only tokens actually kept (post EOS/budget cut) become
+                # training signals — never continuations past the end
+                sig_mask = jnp.arange(gp1)[None, :] < n_eff[:, None]
+                pf, pt, cnt = pack_signals(captures, tokens, sig_mask)
+                ys["sig_feats"], ys["sig_tokens"], ys["sig_counts"] = \
+                    pf, pt, cnt
+            st = SuperstepState(carry, active_after, gen_new, ema,
+                                jax.random.key_data(knext))
+            return (cache, dcache, st), ys
+
+        valid = st.active.any()
+        (cache, dcache, st), ys = jax.lax.cond(valid, _run, _skip,
+                                               (cache, dcache, st))
+        ys["valid"] = valid
+        return (cache, dcache, st), ys
+
+    (cache, dcache, state), rounds_out = jax.lax.scan(
+        _round, (cache, dcache, state), None, length=rounds)
+    return {"cache": cache, "dcache": dcache, "state": state,
+            "rounds": rounds_out}

@@ -1,4 +1,12 @@
-"""Jitted public wrapper for the training-signal pack kernel."""
+"""Jitted public wrapper for the training-signal pack kernel.
+
+``pack_signals`` is the superstep's per-round signal compactor
+(core/speculative.decode_superstep): inside the fused scan it squeezes
+accepted-position (feature, token) pairs to the front of each row so a
+single dense (counts, feats, tokens) buffer per superstep crosses to
+the host.  On TPU it lowers to the Pallas kernel; elsewhere the jnp
+oracle is byte-exact and fuses into the surrounding XLA program.
+"""
 from __future__ import annotations
 
 import functools
@@ -13,10 +21,24 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _fit_block(f: int, block_f: int) -> int:
+    """Largest divisor of ``f`` that is ≤ ``block_f``, preferring
+    lane-aligned (×128) blocks so arbitrary capture widths (3·d_model)
+    work without caller-side tuning."""
+    b = min(block_f, f)
+    for cand in range(b - b % 128, 0, -128):
+        if f % cand == 0:
+            return cand
+    while f % b:
+        b -= 1
+    return b
+
+
 @functools.partial(jax.jit, static_argnames=("block_f", "force_kernel"))
 def pack_signals(feats, tokens, mask, *, block_f: int = 512,
                  force_kernel: bool = False):
     if _on_tpu() or force_kernel:
-        return extract_pack(feats, tokens, mask, block_f=block_f,
+        return extract_pack(feats, tokens, mask,
+                            block_f=_fit_block(feats.shape[-1], block_f),
                             interpret=not _on_tpu())
     return extract_pack_ref(feats, tokens, mask)

@@ -1,11 +1,34 @@
-"""TIDE Inference Serving Engine (paper Fig. 1/2, left box).
+"""TIDE Inference Serving Engine — fused on-device decode superstep.
 
-Wave-scheduled continuous batching: a wave of B requests is left-padded to
-a common prefill length, prefilled once, then speculatively decoded with
-the Adaptive Drafter deciding per-step whether to speculate (Eq. 5
-threshold) and the Acceptance Length Monitor feeding Algorithm 1.  The
-Training Signal Extractor captures accepted-position features with
-one-step-deferred device→host transfer (async-dispatch overlap, Fig. 3).
+Wave-scheduled continuous batching: a wave of B requests is left-padded
+to a common prefill length, prefilled once, then decoded by a jitted
+**superstep** — ``lax.scan`` over K speculative rounds inside one
+compiled function (``core.speculative.decode_superstep``).  Everything
+the old per-step loop did on the host now happens in-graph:
+
+  * the Adaptive Drafter's speculate-vs-plain choice (Eq. 5) is a
+    device-side threshold-table lookup selected with ``lax.cond``
+    (``core.adaptive.accept_threshold_table`` / ``drafter_decide``),
+  * the acceptance-length EMA feeding that choice updates in-graph,
+  * per-request token commit (max-token clamp, optional EOS cut,
+    active-mask update) runs on masks in the scan body,
+  * accepted-position training signals are compacted per round by the
+    ``extract_pack`` kernel, so one packed (counts, feats, tokens)
+    buffer crosses to the host per superstep.
+
+``serve_wave`` is reduced to superstep dispatch + deferred host unpack:
+superstep t+1 is dispatched *before* superstep t's telemetry is pulled
+to the host (JAX async dispatch), so the single device→host sync per K
+rounds overlaps with device compute — the Fig. 3 overlap at superstep
+granularity, with the per-token host overhead measured by
+``benchmarks/bench_hotloop.py``.  ``EngineStats``/timeline and the
+Algorithm 1 controller decisions are reconstructed host-side from the
+per-round device telemetry (``TrainingController.observe_gated`` keeps
+the measurement sequence identical to the per-step loop).
+
+``superstep_rounds=0`` selects the legacy per-step host loop, kept as
+the parity reference (tests/test_superstep.py asserts byte-identical
+token streams and SignalStore contents between the two).
 
 All device steps are jitted with fixed shapes; per-request raggedness is
 handled with masks (pads, finished requests).
@@ -13,6 +36,7 @@ handled with masks (pads, finished requests).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -34,6 +58,7 @@ class EngineStats:
     tokens_out: int = 0
     steps: int = 0
     spec_steps: int = 0
+    dispatches: int = 0      # device-program launches the host blocked on
     wall_s: float = 0.0
     accept_len_sum: float = 0.0
     accept_len_n: int = 0
@@ -55,7 +80,9 @@ class ServingEngine:
                  drafter: Optional[AdaptiveDrafter] = None,
                  controller: Optional[TrainingController] = None,
                  extractor: Optional[SignalExtractor] = None,
-                 ema: float = 0.9, seed: int = 0):
+                 ema: float = 0.9, seed: int = 0,
+                 superstep_rounds: int = 8,
+                 eos_id: Optional[int] = None):
         self.cfg, self.dcfg = cfg, dcfg
         self.params, self.dparams = params, dparams
         self.gamma, self.max_len, self.batch = gamma, max_len, batch_size
@@ -65,6 +92,8 @@ class ServingEngine:
         self.extractor = extractor
         self.accept_ema = 1.0
         self._ema = ema
+        self.superstep_rounds = superstep_rounds
+        self.eos_id = eos_id
         self.stats = EngineStats()
         self._key = jax.random.key(seed)
         self._build_steps()
@@ -95,14 +124,44 @@ class ServingEngine:
                 gamma=gamma, greedy=self.greedy, key=key)
 
         @jax.jit
-        def _plain_step(params, cache, token, key):
-            return spec.plain_decode_step(cfg, params, cache, token,
-                                          greedy=self.greedy, key=key)
+        def _plain_step(params, cache, carry, key):
+            return spec.plain_step_from_carry(cfg, params, cache, carry,
+                                              gamma=gamma,
+                                              greedy=self.greedy, key=key)
+
+        decay = self._ema
+
+        @jax.jit
+        def _ema_step(ema, ell):
+            # same compiled f32 mul-add as the superstep's in-scan EMA:
+            # numpy emulation differs by an FMA ulp, which could flip an
+            # Eq. 5 threshold compare between the two engine modes
+            return decay * ema + (1.0 - decay) * ell
 
         self._prefill_fn = _prefill
         self._seed_fn = _seed_draft
         self._spec_fn = _spec_step
         self._plain_fn = _plain_step
+        self._ema_fn = _ema_step
+
+        self._superstep_fn = None
+        if self.superstep_rounds > 0:
+            table = None
+            if self.drafter is not None:
+                table = jnp.asarray(self.drafter.threshold_table(self.batch))
+            ss = functools.partial(
+                spec.decode_superstep, cfg, dcfg,
+                rounds=self.superstep_rounds, gamma=gamma,
+                greedy=self.greedy, ema_decay=self._ema,
+                eos_id=self.eos_id,
+                collect_signals=self.extractor is not None)
+
+            @jax.jit
+            def _superstep(params, dparams, cache, dcache, state, max_new):
+                return ss(params, dparams, cache, dcache, state, max_new,
+                          table)
+
+            self._superstep_fn = _superstep
 
     def deploy_draft(self, dparams):
         """Hot-swap the draft (no target reload — TIDE's C2)."""
@@ -113,10 +172,9 @@ class ServingEngine:
         return k
 
     # ------------------------------------------------------------- waves
-    def serve_wave(self, requests: List[Request]) -> List[Request]:
-        """Serve one wave to completion. Mutates and returns requests."""
-        assert len(requests) == self.batch
-        t0 = time.perf_counter()
+    def _prologue(self, requests: List[Request]):
+        """Pad + prefill + draft seed for one wave.  Returns the initial
+        device serving state (cache, dcache, carry, first_token)."""
         b = self.batch
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((b, plen), np.int32)
@@ -132,11 +190,127 @@ class ServingEngine:
         dcache = self._seed_fn(self.params, self.dparams, dcache,
                                pre["captures"], toks_j, pad_j)
         carry = spec.init_carry(self.cfg, self.dcfg, pre, first, self.gamma)
-        for i, r in enumerate(requests):
-            r.generated.append(int(first[i]))
+        return cache, dcache, carry, first
 
-        active = np.ones((b,), bool)
-        token_plain = first
+    def serve_wave(self, requests: List[Request]) -> List[Request]:
+        """Serve one wave to completion. Mutates and returns requests."""
+        assert len(requests) == self.batch
+        t0 = time.perf_counter()
+        cache, dcache, carry, first = self._prologue(requests)
+        first_np = np.asarray(first)
+        for i, r in enumerate(requests):
+            r.generated.append(int(first_np[i]))
+            if self.eos_id is not None and int(first_np[i]) == self.eos_id:
+                r.finish()
+
+        if self._superstep_fn is not None:
+            self._serve_superstep(requests, cache, dcache, carry, first, t0)
+        else:
+            self._serve_stepwise(requests, cache, dcache, carry, t0)
+        if self.extractor is not None:
+            self.extractor.flush()
+        self.stats.wall_s += time.perf_counter() - t0
+        return requests
+
+    # ----------------------------------------------- superstep hot path
+    @staticmethod
+    def _materialize(prev):
+        """Pull telemetry to host; the bulky packed signal buffers stay
+        device-side and are fetched lazily in ``_unpack_superstep`` only
+        if the controller actually has collection enabled."""
+        return {k: v if k.startswith("sig_") else np.asarray(v)
+                for k, v in prev.items()}
+
+    def _serve_superstep(self, requests, cache, dcache, carry, first, t0):
+        K = self.superstep_rounds
+        rids = [r.rid for r in requests]
+        max_new = jnp.asarray([r.max_new_tokens for r in requests],
+                              jnp.int32)
+        state = spec.init_superstep_state(
+            carry, first, self._key, accept_ema=self.accept_ema,
+            eos_id=self.eos_id)
+        max_steps = max(r.max_new_tokens for r in requests) + 2
+        limit = -(-max_steps // K) + 1
+        all_done = False
+        # one-superstep double buffer (local: the payload must never
+        # outlive this wave): superstep t+1 is dispatched before t's
+        # telemetry is pulled, so the D2H sync overlaps device compute
+        pending = None
+        for _ in range(limit):
+            if all_done:
+                break
+            out = self._superstep_fn(self.params, self.dparams, cache,
+                                     dcache, state, max_new)
+            self.stats.dispatches += 1
+            cache, dcache, state = (out["cache"], out["dcache"],
+                                    out["state"])
+            prev, pending = pending, out["rounds"]
+            if prev is not None:
+                all_done = self._unpack_superstep(
+                    self._materialize(prev), requests, rids, t0)
+        if pending is not None:
+            self._unpack_superstep(self._materialize(pending), requests,
+                                   rids, t0)
+        self._key = jax.random.wrap_key_data(state.key_data)
+
+    def _unpack_superstep(self, ys, requests, rids, t0) -> bool:
+        """Replay one superstep's host-side bookkeeping from device
+        telemetry: token commit, stats/timeline, Algorithm 1 controller
+        and packed-signal ingestion.  Returns True when every request
+        had finished by the end of the superstep."""
+        valid = ys["valid"]
+        sig_np = None            # lazily-fetched packed signal buffers
+        all_done = True          # no valid rounds -> wave was already done
+        for r in range(valid.shape[0]):
+            if not valid[r]:
+                break
+            use_spec = bool(ys["use_spec"][r])
+            ell = float(ys["ell"][r])
+            alpha = float(ys["alpha"][r])
+            n_eff = ys["n_eff"][r]
+            toks = ys["tokens"][r]
+            active_after = ys["active_after"][r]
+            for i, req in enumerate(requests):
+                n = int(n_eff[i])
+                if n:
+                    req.generated.extend(int(t) for t in toks[i, :n])
+                if not active_after[i] and req.finish_t is None:
+                    req.finish()
+            self.stats.tokens_out += int(n_eff.sum())
+            self.stats.steps += 1
+            self.stats.spec_steps += int(use_spec)
+            self.stats.accept_len_sum += ell
+            self.stats.accept_len_n += 1
+            self.accept_ema = float(ys["ema"][r])
+            if self.drafter is not None:
+                self.drafter.enabled = use_spec
+            decision = Decision.NONE
+            if self.controller is not None:
+                decision = self.controller.observe_gated(
+                    alpha, int(ys["n_sig"][r]))
+                if self.extractor is not None:
+                    self.extractor.enabled = \
+                        self.controller.collection_enabled
+            if (self.extractor is not None and self.extractor.enabled
+                    and "sig_feats" in ys):
+                if sig_np is None:
+                    sig_np = tuple(np.asarray(ys[k]) for k in
+                                   ("sig_feats", "sig_tokens",
+                                    "sig_counts"))
+                self.extractor.ingest_packed(
+                    rids, sig_np[0][r], sig_np[1][r], sig_np[2][r])
+            self.stats.timeline.append({
+                "t": time.perf_counter() - t0, "spec": use_spec,
+                "accept_len": ell, "alpha": alpha,
+                "decision": decision.value,
+            })
+            all_done = not bool(active_after.any())
+        return all_done
+
+    # ------------------------------------------ per-step reference loop
+    def _serve_stepwise(self, requests, cache, dcache, carry, t0):
+        b = self.batch
+        active = np.array([r.finish_t is None for r in requests], bool)
         max_steps = max(r.max_new_tokens for r in requests) + 2
         rids = [r.rid for r in requests]
         for _ in range(max_steps):
@@ -146,6 +320,7 @@ class ServingEngine:
             if self.drafter is not None:
                 use_spec = self.drafter.update(int(active.sum()),
                                                self.accept_ema)
+            self.stats.dispatches += 1
             if use_spec:
                 out = self._spec_fn(self.params, self.dparams, cache,
                                     dcache, carry, self._next_key())
@@ -153,61 +328,65 @@ class ServingEngine:
                                         out["carry"])
                 n_commit = np.asarray(out["n_commit"])
                 toks_np = np.asarray(out["tokens"])
-                alpha = float((n_commit[active] - 1).mean()) / self.gamma
-                ell = float(n_commit[active].mean())
-                self.accept_ema = (self._ema * self.accept_ema
-                                   + (1 - self._ema) * ell)
+                # f32 arithmetic exactly as the fused superstep computes
+                # in-graph, so the Eq. 5 threshold compare can never
+                # straddle a rounding boundary between the two modes
+                na = np.float32(active.sum())
+                ell32 = np.float32(
+                    np.float32(n_commit[active].sum()) / na)
+                alpha = float(np.float32(
+                    np.float32((n_commit[active] - 1).sum()) / na)
+                    / np.float32(self.gamma))
+                ell = float(ell32)
+                self.accept_ema = float(
+                    self._ema_fn(jnp.float32(self.accept_ema),
+                                 jnp.float32(ell32)))
                 self.stats.spec_steps += 1
-                if self.extractor is not None:
-                    mask = np.asarray(out["accept_mask"]) \
-                        & active[:, None]
-                    self.extractor.offer(rids, out["captures"],
-                                         out["tokens"],
-                                         jnp.asarray(mask))
             else:
-                out = self._plain_fn(self.params, cache, token_plain,
+                out = self._plain_fn(self.params, cache, carry,
                                      self._next_key())
-                cache = out["cache"]
-                token_plain = out["token"]
-                toks_np = np.asarray(token_plain)[:, None]
+                cache, carry = out["cache"], out["carry"]
                 n_commit = np.ones((b,), np.int32)
+                toks_np = np.asarray(out["tokens"])
                 alpha = 0.0
                 ell = 1.0
-                # re-sync the spec carry so speculation can resume later:
-                # pending pair = (capture of the committed token, token)
-                caps = out["captures"]                      # (B, 1, 3D)
-                gp1 = self.gamma + 1
-                feats = jnp.zeros((b, gp1, caps.shape[-1]), caps.dtype
-                                  ).at[:, 0].set(caps[:, 0])
-                tokp = jnp.zeros((b, gp1), jnp.int32
-                                 ).at[:, 0].set(token_plain)
-                carry = spec.SpecCarry(feats, tokp,
-                                       jnp.ones((b,), jnp.int32))
-                if self.extractor is not None:
-                    mask = jnp.asarray(active[:, None])
-                    self.extractor.offer(rids, caps, toks_np, mask)
-
-            new_tokens = 0
+            n_eff = np.zeros((b,), np.int32)
+            eos_hit = np.zeros((b,), bool)
             for i, r in enumerate(requests):
                 if not active[i]:
                     continue
-                n = int(n_commit[i])
-                r.generated.extend(int(t) for t in toks_np[i, :n])
-                new_tokens += min(n, r.max_new_tokens -
-                                  (len(r.generated) - n))
-                if r.done:
+                n = min(int(n_commit[i]),
+                        max(r.max_new_tokens - len(r.generated), 0))
+                if self.eos_id is not None:
+                    eos_pos = np.flatnonzero(
+                        toks_np[i, :n] == self.eos_id)
+                    if eos_pos.size:
+                        n = int(eos_pos[0]) + 1
+                        eos_hit[i] = True
+                n_eff[i] = n
+            if self.extractor is not None:
+                # only tokens actually kept (post EOS/budget cut) become
+                # training signals
+                mask = (np.arange(toks_np.shape[1])[None, :]
+                        < n_eff[:, None])
+                self.extractor.offer(rids, out["captures"], out["tokens"],
+                                     jnp.asarray(mask))
+
+            for i, r in enumerate(requests):
+                if not active[i]:
+                    continue
+                r.generated.extend(int(t) for t in toks_np[i, :n_eff[i]])
+                if eos_hit[i] or r.done:
                     r.finish()
                     active[i] = False
-            self.stats.tokens_out += max(new_tokens, 0)
+            self.stats.tokens_out += int(n_eff.sum())
             self.stats.steps += 1
             self.stats.accept_len_sum += ell
             self.stats.accept_len_n += 1
             n_sig = int(n_commit[active].sum()) if active.any() else 0
             decision = Decision.NONE
             if self.controller is not None:
-                collecting_before = self.controller.collection_enabled
-                decision = self.controller.observe(
-                    alpha, n_sig if collecting_before else 0)
+                decision = self.controller.observe_gated(alpha, n_sig)
                 if self.extractor is not None:
                     self.extractor.enabled = \
                         self.controller.collection_enabled
@@ -216,10 +395,6 @@ class ServingEngine:
                 "accept_len": ell, "alpha": alpha,
                 "decision": decision.value,
             })
-        if self.extractor is not None:
-            self.extractor.flush()
-        self.stats.wall_s += time.perf_counter() - t0
-        return requests
 
     def _pick(self, logits):
         if self.greedy:

@@ -22,7 +22,9 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.max_new_tokens
+        # finish_t covers early termination (EOS) before the token budget
+        return (self.finish_t is not None
+                or len(self.generated) >= self.max_new_tokens)
 
     def finish(self):
         if self.finish_t is None:

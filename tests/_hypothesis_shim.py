@@ -1,0 +1,84 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The container image does not ship hypothesis (and we may not pip
+install).  This shim implements just the surface the test-suite uses —
+``given``, ``settings`` and the ``floats``/``integers``/``lists``
+strategies — by running each property test over a fixed number of
+seeded pseudo-random draws (plus the interval endpoints, which is where
+property violations usually live).  Install ``hypothesis``
+(requirements-dev.txt) to get real shrinking/fuzzing; the tests import
+the genuine library when it is available.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw, endpoints=()):
+        self._draw = draw
+        self.endpoints = tuple(endpoints)
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.`` alias)."""
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         endpoints=(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         endpoints=(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+
+        def draw(rng):
+            n = rng.randint(min_size, hi)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # introspect fn's signature and demand fixtures for the
+        # strategy-supplied parameters.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0x71DE)
+            # endpoint combinations first (aligned, not the full product —
+            # enough to hit the classic boundary bugs cheaply)
+            n_ep = max(len(s.endpoints) for s in strats) if strats else 0
+            for j in range(n_ep):
+                vals = [s.endpoints[min(j, len(s.endpoints) - 1)]
+                        if s.endpoints else s.example(rng) for s in strats]
+                fn(*args, *vals, **kwargs)
+            for _ in range(n):
+                vals = [s.example(rng) for s in strats]
+                fn(*args, *vals, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+    return deco

@@ -8,6 +8,12 @@ from repro.models.config import (ATTN, CROSS, FFN_GELU, FFN_MOE, FFN_SWIGLU,
                                  MAMBA, MLA, RWKV6, BlockDef, ModelConfig)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end test (full TIDE "
+        "adaptation dynamics / dry-run lowering)")
+
+
 def tiny_cfg(**kw):
     base = dict(name="t", num_layers=2, d_model=64, num_heads=4,
                 num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=97,

@@ -4,7 +4,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # not in the container image - deterministic shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.adaptive import (AdaptiveDrafter, LatencyProfile,
                                  alpha_from_accept_len,

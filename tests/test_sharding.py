@@ -3,17 +3,28 @@ cache/param tree alignment (hypothesis property tests)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # not in the container image - deterministic shim
+    from _hypothesis_shim import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_demo_mesh
 
 
+def _amesh(sizes, names):
+    # fake abstract mesh: axis *names* drive the rule logic
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:   # jax<=0.4.x signature: ((name, size), ...)
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
 def _mesh_2d():
     # 1 real device, but axis *names* drive the rule logic; use a fake
     # abstract mesh for spec computation via jax.sharding.AbstractMesh
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return _amesh((16, 16), ("data", "model"))
 
 
 def test_spec_basic_rules():
@@ -44,8 +55,7 @@ def test_spec_axis_reuse_protection():
 
 
 def test_multi_pod_batch_rule():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16),
-                                     ("pod", "data", "model"))
+    mesh = _amesh((2, 16, 16), ("pod", "data", "model"))
     spec = sh.spec_for((256,), ("batch",), mesh, sh.BASE_RULES)
     assert spec == P(("pod", "data"))
     # batch=1 (long_500k) -> fully replicated
@@ -58,8 +68,7 @@ def test_multi_pod_batch_rule():
 def test_autodrop_always_divides(dim, other):
     """Whatever sharding is chosen, the dim must be divisible by the
     total shards (NamedSharding validity invariant)."""
-    mesh = jax.sharding.AbstractMesh((2, 16, 16),
-                                     ("pod", "data", "model"))
+    mesh = _amesh((2, 16, 16), ("pod", "data", "model"))
     for rules in (sh.BASE_RULES, sh.EXPERT_PARALLEL_RULES,
                   sh.LONG_CONTEXT_RULES):
         spec = sh.spec_for((dim, other), ("batch", "kv_seq"), mesh, rules)

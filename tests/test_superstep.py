@@ -1,0 +1,143 @@
+"""Fused decode superstep vs the per-step reference loop.
+
+The superstep engine (``superstep_rounds=K``) must emit byte-identical
+token streams and identical SignalStore contents to the legacy per-step
+host loop (``superstep_rounds=0``) — greedy and sampled verification,
+heterogeneous per-request budgets, EOS early-exit, Algorithm 1
+controller replay, and the mid-wave Adaptive-Drafter fallback from
+speculation to plain decode (Eq. 5 EMA crossing the threshold between
+rounds of one wave)."""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import eagle
+from repro.core.adaptive import (AdaptiveDrafter, LatencyProfile,
+                                 accept_threshold_table)
+from repro.core.controller import TrainingController
+from repro.core.signals import SignalExtractor, SignalStore
+from repro.data.workloads import make_domains, training_corpus
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.training.trainer import pretrain_target
+
+
+@pytest.fixture(scope="module")
+def pretrained():
+    cfg = C.get("tide-tiny")
+    params = T.init(cfg, jax.random.key(0))
+    domains = make_domains(cfg.vocab_size, ["science"], branchings=[2],
+                           seed=3)
+    corpus = training_corpus(domains["science"], 64, 40, 1)
+    params, _ = pretrain_target(cfg, params, corpus, steps=80, lr=3e-3)
+    dcfg = eagle.draft_config(cfg)
+    dparams = eagle.draft_init(dcfg, jax.random.key(7))
+    return cfg, params, dcfg, dparams, domains
+
+
+# threshold ≈ 2.0 at every batch size (flat T(n), slow-ish draft):
+# an engine seeded with accept_ema=3.0 starts speculating, decays
+# towards the observed E[l]≈1.2 and falls back to plain mid-wave.
+_FLAT_PROFILE = LatencyProfile([1, 2, 4, 8], [1.0, 1.0, 1.0, 1.0],
+                               d0_ms=0.33)
+
+
+def _serve(pretrained, rounds, *, greedy=True, drafter=False, ctrl=False,
+           ema0=None, eos_id=None, n_waves=2, max_new=(24, 24)):
+    cfg, params, dcfg, dparams, domains = pretrained
+    store = SignalStore()
+    ext = SignalExtractor(store, window=16)
+    controller = None
+    if ctrl:
+        controller = TrainingController(n_init=4, n_threshold=64)
+        controller.collection_enabled = True
+    dr = AdaptiveDrafter(_FLAT_PROFILE, gamma=3) if drafter else None
+    eng = ServingEngine(cfg, params, dcfg, dparams, batch_size=len(max_new),
+                        max_len=96, gamma=3, greedy=greedy, drafter=dr,
+                        controller=controller, extractor=ext, seed=5,
+                        superstep_rounds=rounds, eos_id=eos_id)
+    if ema0 is not None:
+        eng.accept_ema = ema0
+    rng = np.random.default_rng(0)
+    gens = []
+    for _ in range(n_waves):
+        reqs = [Request(prompt=domains["science"].sample_prompt(rng),
+                        max_new_tokens=m) for m in max_new]
+        eng.serve_wave(reqs)
+        gens.append([list(r.generated) for r in reqs])
+        assert all(r.finish_t is not None for r in reqs)
+    signals = [(b.tokens.tobytes(), b.feats.tobytes())
+               for b in store.drain()]
+    return gens, signals, eng
+
+
+def _assert_parity(pretrained, **kw):
+    g_ref, s_ref, e_ref = _serve(pretrained, 0, **kw)
+    g_ss, s_ss, e_ss = _serve(pretrained, 8, **kw)
+    assert g_ss == g_ref, "superstep token stream diverged from per-step"
+    assert s_ss == s_ref, "superstep SignalStore contents diverged"
+    assert e_ss.stats.steps == e_ref.stats.steps
+    assert e_ss.stats.spec_steps == e_ref.stats.spec_steps
+    assert e_ss.stats.tokens_out == e_ref.stats.tokens_out
+    # the acceptance EMA drives the Eq. 5 decision — it must be
+    # bit-identical or threshold compares could diverge between modes
+    assert e_ss.accept_ema == e_ref.accept_ema
+    return e_ref, e_ss
+
+
+def test_parity_greedy(pretrained):
+    _assert_parity(pretrained)
+
+
+def test_parity_sampled(pretrained):
+    _assert_parity(pretrained, greedy=False)
+
+
+def test_parity_midwave_drafter_fallback(pretrained):
+    """EMA decays across the Eq. 5 threshold *inside* a wave: the engine
+    must switch spec → plain mid-wave, identically in both modes."""
+    e_ref, e_ss = _assert_parity(pretrained, drafter=True, ema0=3.0)
+    assert 0 < e_ref.stats.spec_steps < e_ref.stats.steps, \
+        "scenario did not actually exercise a mid-wave fallback"
+
+
+def test_parity_controller_and_signals(pretrained):
+    _assert_parity(pretrained, ctrl=True)
+
+
+def test_parity_heterogeneous_budgets(pretrained):
+    _assert_parity(pretrained, max_new=(9, 24))
+
+
+def test_parity_eos(pretrained):
+    # find a token the greedy run actually emits mid-stream, then use it
+    # as EOS: both engines must cut the stream right after it
+    g, _, _ = _serve(pretrained, 0, n_waves=1)
+    stream = g[0][0]
+    eos = stream[len(stream) // 2]
+    g_ref, _, _ = _serve(pretrained, 0, eos_id=eos, n_waves=1)
+    g_ss, _, _ = _serve(pretrained, 8, eos_id=eos, n_waves=1)
+    assert g_ss == g_ref
+    for r in g_ref[0]:
+        assert eos not in r[:-1], "tokens emitted past EOS"
+
+
+def test_superstep_various_k(pretrained):
+    """Token-stream parity must hold for any superstep depth."""
+    g_ref, s_ref, _ = _serve(pretrained, 0, n_waves=1)
+    for k in (1, 3, 16):
+        g_k, s_k, _ = _serve(pretrained, k, n_waves=1)
+        assert g_k == g_ref, f"K={k} diverged"
+        assert s_k == s_ref, f"K={k} signal divergence"
+
+
+def test_threshold_table_matches_host_drafter():
+    table = accept_threshold_table(_FLAT_PROFILE, 3, 8)
+    dr = AdaptiveDrafter(_FLAT_PROFILE, gamma=3)
+    for b in range(1, 9):
+        dr.update(b, 0.0)
+        from repro.core.adaptive import min_accept_len_for_gain
+        assert table[b] == pytest.approx(
+            min_accept_len_for_gain(3, _FLAT_PROFILE, b), rel=1e-6)

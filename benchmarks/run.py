@@ -26,6 +26,7 @@ import traceback
 
 MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
+    ("continuous", "benchmarks.bench_continuous"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -42,9 +43,11 @@ MODULES = [
 
 
 # Fast CI perf-smoke gate: the serving hot-loop overhead bench (reduced
-# shapes) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
+# shapes) + the continuous-batching goodput/parity gate + the kernel
+# oracles.  ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
+    ("continuous", "benchmarks.bench_continuous"),
     ("kernels", "benchmarks.bench_kernels"),
 ]
 

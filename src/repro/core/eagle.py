@@ -213,6 +213,59 @@ def reset_propose(dcache, gamma: int):
     return dict(dcache, lengths=dcache["lengths"] - gamma)
 
 
+def seed_prompt_pairs(dcfg: ModelConfig, dparams, embed_params, dcache,
+                      captures, tokens, pad):
+    """The draft 'prefill' recipe, in one place: set the cache's pad and
+    ingest the prompt pairs (caps[i], t_{i+1}) for i < S-1 so the draft
+    has full context before the first propose.  Every seeding path (wave
+    prologue, slot refill, offline tools) must go through this — the
+    pair/advance convention here is load-bearing for the refilled-slot
+    == served-alone parity."""
+    b, s, _ = captures.shape
+    dcache = dict(dcache, pad=pad)
+    _, _, dcache = draft_extend(
+        dcfg, dparams, embed_params, dcache,
+        captures[:, :s - 1], tokens[:, 1:],
+        jnp.full((b,), s - 1, jnp.int32))
+    return dcache
+
+
+def seed_refill_cache(dcfg: ModelConfig, dparams, embed_params, captures,
+                      tokens, pad, max_len: int):
+    """Build a fresh draft cache for a refill batch and seed it — the
+    per-slot equivalent of the wave prologue's draft seed, batched over
+    the refilled slots only.
+
+    captures: (R, S, 3D) target prefill captures; tokens: (R, S) padded
+    prompt; pad: (R,) left-pad lengths.  Returns the seeded cache
+    (R-batch), ready to be scattered into the live cache lanes."""
+    dcache = init_draft_cache(dcfg, captures.shape[0], max_len)
+    return seed_prompt_pairs(dcfg, dparams, embed_params, dcache,
+                             captures, tokens, pad)
+
+
+def scatter_batch_rows(live, new, mask, src, axis: int = 0):
+    """Overwrite the batch rows of ``live`` selected by ``mask`` with
+    rows gathered from ``new`` at ``src``; batch dimension at ``axis``.
+
+    A gather+where instead of a scatter: the refill count varies per
+    call but the live batch is fixed, so the compiled graph has fixed
+    shapes and never depends on scatter ordering.  ``src`` is arbitrary
+    where ``mask`` is False."""
+    rows = jnp.take(new, src, axis=axis)
+    shp = [1] * rows.ndim
+    shp[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shp), rows.astype(live.dtype), live)
+
+
+def scatter_draft_rows(live, new, mask, src):
+    """Replace the masked batch lanes of a live draft cache with lanes of
+    a refill-batch cache (all draft-cache leaves carry batch at axis 0)."""
+    return jax.tree.map(
+        lambda l, n: scatter_batch_rows(l, n, mask, src, axis=0),
+        live, new)
+
+
 # ------------------------------------------------------------- training
 def draft_train_loss(dcfg: ModelConfig, dparams, embed_params, feats, tokens,
                      *, ttt: bool = True, mask=None):

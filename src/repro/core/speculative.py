@@ -106,14 +106,11 @@ def init_carry(cfg: ModelConfig, dcfg: ModelConfig, prefill_out,
 def seed_draft_cache(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
                      dcache, prefill_out, prompt_tokens):
     """Draft 'prefill': ingest the prompt pairs (caps[i], t_{i+1}) for
-    i < S-1 so the draft has full context before the first propose."""
-    caps = prefill_out["captures"]                         # (B, S, 3D)
-    b, s, _ = caps.shape
-    _, _, dcache = eagle.draft_extend(
+    i < S-1 so the draft has full context before the first propose
+    (delegates to the shared ``eagle.seed_prompt_pairs`` recipe)."""
+    return eagle.seed_prompt_pairs(
         dcfg, dparams, tparams["embed"], dcache,
-        caps[:, :s - 1], prompt_tokens[:, 1:],
-        jnp.full((b,), s - 1, jnp.int32))
-    return dcache
+        prefill_out["captures"], prompt_tokens, dcache["pad"])
 
 
 # ------------------------------------------------------------ fused step
@@ -246,9 +243,13 @@ class SuperstepState(NamedTuple):
 
 def init_superstep_state(carry: SpecCarry, first_token, key, *,
                          accept_ema: float = 1.0,
-                         eos_id: Optional[int] = None) -> SuperstepState:
+                         eos_id: Optional[int] = None,
+                         active0=None) -> SuperstepState:
+    """``active0`` (B,) bool masks slots that are born finished (inert
+    padding of a partial wave, pre-finished requests); default all-on."""
     b = first_token.shape[0]
-    active = jnp.ones((b,), bool)
+    active = jnp.ones((b,), bool) if active0 is None else \
+        jnp.asarray(active0, bool)
     if eos_id is not None:
         active = active & (first_token != eos_id)
     return SuperstepState(
@@ -256,6 +257,51 @@ def init_superstep_state(carry: SpecCarry, first_token, key, *,
         gen_count=jnp.ones((b,), jnp.int32),
         accept_ema=jnp.float32(accept_ema),
         key_data=jax.random.key_data(key))
+
+
+# ============================================== slot refill (continuous)
+# the masked row-replace primitive lives in eagle (this module already
+# depends on it); re-exported here for the target-cache/carry scatters
+scatter_rows = eagle.scatter_batch_rows
+
+
+def scatter_target_cache(cache, new, mask, src):
+    """Replace the masked batch lanes of a live target decode cache with
+    lanes from a freshly prefilled cache (same max_len).  ``lengths`` /
+    ``pad`` carry batch at axis 0; stacked layer-group leaves at axis 1
+    (leaves are (repeats, B, ...))."""
+    out = {}
+    for k, v in cache.items():
+        if k in ("lengths", "pad"):
+            out[k] = scatter_rows(v, new[k], mask, src, axis=0)
+        else:
+            out[k] = jax.tree.map(
+                lambda l, n: scatter_rows(l, n, mask, src, axis=1),
+                v, new[k])
+    return out
+
+
+def scatter_carry(live: SpecCarry, new: SpecCarry, mask, src) -> SpecCarry:
+    """Replace the masked lanes of the spec carry (batch at axis 0)."""
+    return SpecCarry(*(scatter_rows(l, n, mask, src, axis=0)
+                       for l, n in zip(live, new)))
+
+
+def refill_superstep_state(state: SuperstepState, carry_new: SpecCarry,
+                           first_token, budgets, mask, src, *,
+                           eos_id: Optional[int] = None) -> SuperstepState:
+    """Reset the masked slots of the superstep state for freshly admitted
+    requests: carry ← prefill carry, gen_count ← 1 (the first sampled
+    token), active ← alive unless first token is EOS or the budget is
+    zero.  The acceptance EMA and PRNG chain are engine-global and pass
+    through untouched."""
+    carry = scatter_carry(state.carry, carry_new, mask, src)
+    alive = budgets >= 1
+    if eos_id is not None:
+        alive = alive & (first_token != eos_id)
+    active = jnp.where(mask, jnp.take(alive, src), state.active)
+    gen_count = jnp.where(mask, 1, state.gen_count)
+    return state._replace(carry=carry, active=active, gen_count=gen_count)
 
 
 def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,

@@ -116,6 +116,28 @@ class TideSystem:
             self._maybe_train()
         return done
 
+    def run_stream(self, requests: Iterable[Request]) -> List[Request]:
+        """Serve a request stream with continuous batching: the engine
+        keeps its device state resident and refills slots in-flight;
+        the training engine is polled at request-completion boundaries,
+        so a passing draft hot-swaps in mid-stream (C2) instead of
+        waiting for a wave boundary."""
+        return self.engine.serve_stream(
+            requests, on_complete=lambda _r: self._maybe_train())
+
+    def requests_from_trace(self, trace) -> List[Request]:
+        """Materialize ``data.workloads.ArrivalEvent`` records as engine
+        requests.  Arrival *order* is preserved; arrival *times* are
+        not replayed — every request's ``arrival_t`` is its
+        materialization time, so the trace is served as a backlog and
+        the reported TTFT/latency measure queueing + drain from stream
+        start, not wall-clock arrival-relative latency (arrival-time
+        gating is a ROADMAP open item; ``ArrivalEvent.t`` is retained
+        for it)."""
+        return [Request(prompt=ev.prompt, domain=ev.domain,
+                        max_new_tokens=ev.max_new_tokens)
+                for ev in trace]
+
     # ------------------------------------------------------------- stats
     def summary(self) -> Dict:
         st = self.engine.stats
@@ -125,6 +147,10 @@ class TideSystem:
             "accept_len": st.accept_len,
             "steps": st.steps,
             "spec_steps": st.spec_steps,
+            "refills": st.refills,
+            "occupancy": st.occupancy,
+            "ttft_p50_s": st.ttft_p50,
+            "latency_p95_s": st.latency_p95,
             "train_cycles": len([e for e in self.events
                                  if e["kind"] == "train_cycle"]),
             "deployed": self.gate.version,

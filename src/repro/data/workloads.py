@@ -107,6 +107,78 @@ class WorkloadStream:
             yield buf
 
 
+# ------------------------------------------------------- arrival traces
+@dataclasses.dataclass
+class ArrivalEvent:
+    """One request of an arrival trace: when it arrives, what it asks.
+
+    ``max_new_tokens`` is ragged by design — heterogeneous budgets are
+    what makes run-to-completion waves convoy behind their longest
+    member, the workload continuous batching exists for."""
+    t: float                  # arrival time (seconds since trace start)
+    domain: str
+    prompt: List[int]
+    max_new_tokens: int
+
+
+def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
+                  mode: str = "poisson", rate: float = 16.0,
+                  burst_size: int = 4, burst_gap: float = 1.0,
+                  max_new_range: Tuple[int, int] = (8, 96),
+                  long_frac: float = 0.0,
+                  long_range: Tuple[int, int] = (80, 96),
+                  prompt_len: Optional[Tuple[int, int]] = None,
+                  schedule: Optional[List[Phase]] = None,
+                  seed: int = 0) -> List[ArrivalEvent]:
+    """Generate a request arrival trace with ragged budgets and prompts.
+
+    mode="poisson": exponential inter-arrivals at ``rate`` req/s;
+    mode="bursty": bursts of ``burst_size`` simultaneous arrivals every
+    ``burst_gap`` seconds (the worst case for wave scheduling: every
+    burst mixes short and long requests into one convoy).
+
+    Domains follow ``schedule`` phases (temporal locality, as in
+    ``WorkloadStream``) or round-robin over ``domains`` when omitted.
+    ``max_new_tokens`` is uniform over ``max_new_range`` inclusive;
+    with probability ``long_frac`` it is drawn from ``long_range``
+    instead — the bimodal short-chat / long-tail budget mix of real
+    request streams (and the degenerate case for run-to-completion
+    waves: one long member convoys the whole batch).  Prompt lengths
+    come from each domain's ``prompt_len`` unless overridden.
+    Timestamps are bookkeeping for latency metrics — the serving engine
+    admits in trace order, as fast as slots free up.
+    """
+    rng = np.random.default_rng(seed)
+    if schedule is not None:
+        doms = [p.domain for p in schedule for _ in range(p.n_requests)]
+        doms = doms[:n_requests]
+        while len(doms) < n_requests:
+            doms.append(doms[-1] if doms else next(iter(domains)))
+    else:
+        names = list(domains)
+        doms = [names[i % len(names)] for i in range(n_requests)]
+    events = []
+    t = 0.0
+    for i, name in enumerate(doms):
+        if mode == "poisson":
+            t += float(rng.exponential(1.0 / rate))
+        elif mode == "bursty":
+            t = (i // burst_size) * burst_gap
+        else:
+            raise ValueError(f"unknown arrival mode {mode!r}")
+        dom = domains[name]
+        if prompt_len is not None:
+            length = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+            prompt = dom.sample(rng, length)
+        else:
+            prompt = dom.sample_prompt(rng)
+        rng_range = (long_range if long_frac > 0
+                     and rng.random() < long_frac else max_new_range)
+        mx = int(rng.integers(rng_range[0], rng_range[1] + 1))
+        events.append(ArrivalEvent(t, name, prompt, mx))
+    return events
+
+
 def training_corpus(domain: Domain, n_seqs: int, seq_len: int,
                     seed: int = 0) -> np.ndarray:
     """Token matrix for target-model pretraining / draft offline training."""

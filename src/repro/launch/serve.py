@@ -5,7 +5,13 @@ on the production mesh instead.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tide-tiny --requests 48
+  PYTHONPATH=src python -m repro.launch.serve --arch tide-tiny --continuous
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b --dryrun
+
+``--continuous`` serves a ragged Poisson arrival trace through the
+continuous-batching ``serve_stream`` loop (in-flight slot refill)
+instead of run-to-completion waves, and reports goodput, slot
+occupancy, and TTFT/latency percentiles.
 """
 from __future__ import annotations
 
@@ -22,6 +28,9 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=32)
     ap.add_argument("--pretrain-steps", type=int, default=120)
     ap.add_argument("--no-adaptive", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a ragged Poisson arrival trace with "
+                         "in-flight slot refill instead of waves")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     args = ap.parse_args()
@@ -41,8 +50,8 @@ def main():
     import repro.configs as configs
     from repro.core.adaptive import analytic_tpu_profile
     from repro.core.tide import TideConfig, TideSystem
-    from repro.data.workloads import (Phase, WorkloadStream, make_domains,
-                                      training_corpus)
+    from repro.data.workloads import (Phase, WorkloadStream, arrival_trace,
+                                      make_domains, training_corpus)
     from repro.models import transformer as T
     from repro.training.trainer import pretrain_target
 
@@ -65,16 +74,28 @@ def main():
     print(f"  loss {losses[0]:.2f} -> {losses[-1]:.2f}")
 
     n = args.requests
-    stream = WorkloadStream(domains, [Phase("science", n // 2),
-                                      Phase("code", n - n // 2)], seed=1)
-    tc = TideConfig(gamma=args.gamma, batch_size=args.batch, max_len=96,
+    tc = TideConfig(gamma=args.gamma, batch_size=args.batch,
+                    max_len=96 if not args.continuous else 160,
                     n_threshold=4, signal_window=16,
                     adaptive_spec=not args.no_adaptive)
     profile = analytic_tpu_profile(cfg, chips=1)
     sys_ = TideSystem(cfg, params, tc, profile=profile)
     t0 = time.perf_counter()
-    sys_.run(stream.batches(args.batch),
-             max_new_tokens=args.max_new_tokens)
+    if args.continuous:
+        # ragged budgets never exceed the user's --max-new-tokens cap
+        mx = max(args.max_new_tokens, 1)
+        trace = arrival_trace(
+            domains, n, mode="poisson", rate=16.0,
+            max_new_range=(min(8, mx), mx),
+            schedule=[Phase("science", n // 2), Phase("code", n - n // 2)],
+            seed=1)
+        sys_.run_stream(sys_.requests_from_trace(trace))
+    else:
+        stream = WorkloadStream(domains, [Phase("science", n // 2),
+                                          Phase("code", n - n // 2)],
+                                seed=1)
+        sys_.run(stream.batches(args.batch),
+                 max_new_tokens=args.max_new_tokens)
     s = sys_.summary()
     print(f"\n== TIDE summary ({time.perf_counter()-t0:.1f}s wall) ==")
     for k, v in s.items():

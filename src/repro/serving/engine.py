@@ -1,44 +1,59 @@
-"""TIDE Inference Serving Engine — fused on-device decode superstep.
+"""TIDE Inference Serving Engine — continuous batching over a fused
+on-device decode superstep.
 
-Wave-scheduled continuous batching: a wave of B requests is left-padded
-to a common prefill length, prefilled once, then decoded by a jitted
-**superstep** — ``lax.scan`` over K speculative rounds inside one
-compiled function (``core.speculative.decode_superstep``).  Everything
-the old per-step loop did on the host now happens in-graph:
+Architecture (slot lifecycle):
 
-  * the Adaptive Drafter's speculate-vs-plain choice (Eq. 5) is a
-    device-side threshold-table lookup selected with ``lax.cond``
-    (``core.adaptive.accept_threshold_table`` / ``drafter_decide``),
-  * the acceptance-length EMA feeding that choice updates in-graph,
-  * per-request token commit (max-token clamp, optional EOS cut,
-    active-mask update) runs on masks in the scan body,
-  * accepted-position training signals are compacted per round by the
-    ``extract_pack`` kernel, so one packed (counts, feats, tokens)
-    buffer crosses to the host per superstep.
+  * The device holds B resident batch lanes ("slots"): target KV/SSM
+    cache, EAGLE draft cache, and the superstep carry/state.  Decode
+    runs as a jitted **superstep** — ``lax.scan`` over K speculative
+    rounds in one compiled function (``core.speculative.decode_superstep``)
+    with the Eq. 5 speculate-vs-plain choice, token commit/EOS/budget
+    masks, acceptance-EMA, and per-round ``extract_pack`` signal
+    compaction all in-graph.  One device→host sync per K rounds.
+  * A host-side ``serving.scheduler.Scheduler`` owns slot admission:
+    ``serve_stream(request_iter)`` keeps the engine resident across an
+    entire request stream, and between supersteps **refills** finished
+    slots from the pending queue — no wave teardown, no convoy effect
+    from one long request holding B-1 idle lanes.
+  * A refill is a jitted per-slot op: the new prompt is prefilled and
+    its cache lanes are written into the *live* device state
+    (``speculative.scatter_target_cache`` / ``eagle.scatter_draft_rows``
+    — gather+where with fixed shapes), and that slot's superstep carry
+    (position, budget, EOS flag, acceptance bookkeeping) is reset
+    in-graph (``speculative.refill_superstep_state``).  Refill batches
+    over all slots freed in the same gap.
+  * Pipelining is preserved: superstep t+1 is dispatched *before*
+    superstep t's telemetry is pulled to the host; completions observed
+    in t schedule refills that are enqueued behind t+1 and take effect
+    in t+2.  The refilled requests' first tokens ride along with the
+    next telemetry pull, so refill adds **zero** extra host syncs.
+    ``ServingStats``/timeline and the Algorithm 1 controller decisions
+    are reconstructed host-side from per-round device telemetry
+    (``TrainingController.observe_gated`` keeps the measurement sequence
+    identical to the per-step loop).
 
-``serve_wave`` is reduced to superstep dispatch + deferred host unpack:
-superstep t+1 is dispatched *before* superstep t's telemetry is pulled
-to the host (JAX async dispatch), so the single device→host sync per K
-rounds overlaps with device compute — the Fig. 3 overlap at superstep
-granularity, with the per-token host overhead measured by
-``benchmarks/bench_hotloop.py``.  ``EngineStats``/timeline and the
-Algorithm 1 controller decisions are reconstructed host-side from the
-per-round device telemetry (``TrainingController.observe_gated`` keeps
-the measurement sequence identical to the per-step loop).
-
-``superstep_rounds=0`` selects the legacy per-step host loop, kept as
-the parity reference (tests/test_superstep.py asserts byte-identical
-token streams and SignalStore contents between the two).
+``serve_wave`` is a thin compatibility wrapper over ``serve_stream``
+(a stream containing exactly one wave); waves smaller than the engine
+batch are padded with inert zero-budget slots.  ``superstep_rounds=0``
+selects the legacy per-step host loop, kept as the parity reference —
+with greedy decoding every scheduling policy emits byte-identical
+per-request token streams (tests/test_continuous.py,
+tests/test_superstep.py).  Under sampled decoding the two modes match
+on refill-free streams; refill timing differs by design (the stepwise
+loop refills instantly, the superstep pipeline with one-superstep lag),
+so sampled streams are only guaranteed identical per-request when
+greedy.
 
 All device steps are jitted with fixed shapes; per-request raggedness is
-handled with masks (pads, finished requests).
+handled with masks (pads, finished requests), and refill prompt lengths
+are bucketed to multiples of 8 to bound recompilation.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,18 +65,29 @@ from repro.core.controller import Decision, TrainingController
 from repro.core.signals import SignalExtractor
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.request import Request
+from repro.serving.request import Request, inert_request
+from repro.serving.scheduler import Scheduler
 
 
 @dataclasses.dataclass
-class EngineStats:
+class ServingStats:
+    """Engine counters.  ``tokens_out`` counts exactly the tokens that
+    survive in ``Request.generated`` after ``Request.finish()``'s budget
+    truncation — the first sampled token included — so it always equals
+    the sum of emitted stream lengths."""
     tokens_out: int = 0
     steps: int = 0
     spec_steps: int = 0
-    dispatches: int = 0      # device-program launches the host blocked on
+    dispatches: int = 0      # decode-step/superstep launches (sync points)
+    refills: int = 0         # slots refilled in-flight (async, no sync)
+    completed: int = 0
     wall_s: float = 0.0
     accept_len_sum: float = 0.0
     accept_len_n: int = 0
+    lane_rounds: int = 0      # batch lanes x executed rounds
+    busy_lane_rounds: int = 0  # lanes that committed >=1 token that round
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    latencies: List[float] = dataclasses.field(default_factory=list)
     timeline: List[Dict] = dataclasses.field(default_factory=list)
 
     @property
@@ -71,6 +97,31 @@ class EngineStats:
     @property
     def throughput(self) -> float:
         return self.tokens_out / max(self.wall_s, 1e-9)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of lane-rounds that committed tokens — the slot
+        utilization continuous batching exists to maximize."""
+        return self.busy_lane_rounds / max(self.lane_rounds, 1)
+
+    def _pct(self, xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttfts, 50)
+
+    @property
+    def latency_p50(self) -> float:
+        return self._pct(self.latencies, 50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self._pct(self.latencies, 95)
+
+
+# Back-compat alias (pre-continuous-batching name).
+EngineStats = ServingStats
 
 
 class ServingEngine:
@@ -94,8 +145,13 @@ class ServingEngine:
         self._ema = ema
         self.superstep_rounds = superstep_rounds
         self.eos_id = eos_id
-        self.stats = EngineStats()
+        self.stats = ServingStats()
         self._key = jax.random.key(seed)
+        # refills draw from their own chain: the superstep's round chain
+        # lives on device (SuperstepState.key_data) and cannot be forked
+        # host-side without a sync, so both engine modes consume this
+        # dedicated host chain for refill first-token sampling instead
+        self._refill_key = jax.random.key(seed + 104729)
         self._build_steps()
 
     # ------------------------------------------------------------ jit fns
@@ -109,13 +165,8 @@ class ServingEngine:
 
         @jax.jit
         def _seed_draft(params, dparams, dcache, caps, tokens, pad):
-            b, s, _ = caps.shape
-            dcache = dict(dcache, pad=pad)
-            _, _, dcache = eagle.draft_extend(
-                dcfg, dparams, params["embed"], dcache,
-                caps[:, :s - 1], tokens[:, 1:],
-                jnp.full((b,), s - 1, jnp.int32))
-            return dcache
+            return eagle.seed_prompt_pairs(dcfg, dparams, params["embed"],
+                                           dcache, caps, tokens, pad)
 
         @jax.jit
         def _spec_step(params, dparams, cache, dcache, carry, key):
@@ -144,6 +195,54 @@ class ServingEngine:
         self._plain_fn = _plain_step
         self._ema_fn = _ema_step
 
+        def _refill_core(params, dparams, cache, dcache, toks, pad, mask,
+                         src, key):
+            """Prefill a refill batch of R new prompts and write their
+            lanes into the live device state.  ``mask``/``src`` are the
+            host-built (B,) lane map (padded refill rows are simply
+            never gathered).  Returns the updated (cache, dcache), the
+            R-batch prefill carry, and the R first sampled tokens."""
+            pre = T.prefill(cfg, params, toks, max_len=self.max_len,
+                            pad=pad)
+            if self.greedy:
+                first = pre["logits"].argmax(-1).astype(jnp.int32)
+            else:
+                first = jax.random.categorical(
+                    key, pre["logits"]).astype(jnp.int32)
+            rdc = eagle.seed_refill_cache(dcfg, dparams, params["embed"],
+                                          pre["captures"], toks, pad,
+                                          self.max_len)
+            cache = spec.scatter_target_cache(cache, pre["cache"], mask,
+                                              src)
+            dcache = eagle.scatter_draft_rows(dcache, rdc, mask, src)
+            carry_r = spec.init_carry(cfg, dcfg, pre, first, gamma)
+            return cache, dcache, carry_r, first
+
+        @jax.jit
+        def _refill_superstep(params, dparams, cache, dcache, state,
+                              max_new, toks, pad, mask, src, budgets,
+                              key):
+            cache, dcache, carry_r, first = _refill_core(
+                params, dparams, cache, dcache, toks, pad, mask, src,
+                key)
+            state = spec.refill_superstep_state(
+                state, carry_r, first, budgets, mask, src,
+                eos_id=self.eos_id)
+            max_new = jnp.where(mask, jnp.take(budgets, src), max_new)
+            return cache, dcache, state, max_new, first
+
+        @jax.jit
+        def _refill_stepwise(params, dparams, cache, dcache, carry, toks,
+                             pad, mask, src, key):
+            cache, dcache, carry_r, first = _refill_core(
+                params, dparams, cache, dcache, toks, pad, mask, src,
+                key)
+            carry = spec.scatter_carry(carry, carry_r, mask, src)
+            return cache, dcache, carry, first
+
+        self._refill_ss_fn = _refill_superstep
+        self._refill_step_fn = _refill_stepwise
+
         self._superstep_fn = None
         if self.superstep_rounds > 0:
             table = None
@@ -164,17 +263,53 @@ class ServingEngine:
             self._superstep_fn = _superstep
 
     def deploy_draft(self, dparams):
-        """Hot-swap the draft (no target reload — TIDE's C2)."""
+        """Hot-swap the draft (no target reload — TIDE's C2).  Under
+        ``serve_stream`` the swap lands between supersteps, mid-stream.
+
+        Caveat: lanes resident at swap time keep draft-cache K/V built
+        by the *old* draft until they retire (their captures are gone,
+        so they cannot be re-seeded).  Token streams stay correct — the
+        target verifies every draft — but those lanes' acceptance length
+        may dip until refilled, briefly muddying the acceptance-EMA.
+        Wave mode is unaffected (the draft cache is rebuilt per wave)."""
         self.dparams = dparams
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
 
-    # ------------------------------------------------------------- waves
+    def _next_refill_key(self):
+        self._refill_key, k = jax.random.split(self._refill_key)
+        return k
+
+    # -------------------------------------------------- request accounting
+    def _finish(self, r: Request):
+        if r.finish_t is None:
+            r.finish()
+            self.stats.completed += 1
+            if r.latency is not None:
+                self.stats.latencies.append(r.latency)
+
+    def _commit_first(self, r: Request, tok: int):
+        """Commit a freshly (pre)filled slot's first sampled token."""
+        if r.finish_t is not None:       # inert padding / pre-finished
+            return
+        if r.max_new_tokens < 1:
+            self._finish(r)
+            return
+        r.generated.append(tok)
+        if r.first_token_t is None:
+            r.first_token_t = time.perf_counter()
+            self.stats.ttfts.append(r.ttft)
+        self.stats.tokens_out += 1
+        if self.eos_id is not None and tok == self.eos_id:
+            self._finish(r)
+
+    # ------------------------------------------------------------- prologue
     def _prologue(self, requests: List[Request]):
-        """Pad + prefill + draft seed for one wave.  Returns the initial
-        device serving state (cache, dcache, carry, first_token)."""
+        """Pad + prefill + draft seed for one full batch of B slots.
+        Returns the initial device serving state (cache, dcache, carry,
+        first_token)."""
         b = self.batch
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((b, plen), np.int32)
@@ -192,25 +327,87 @@ class ServingEngine:
         carry = spec.init_carry(self.cfg, self.dcfg, pre, first, self.gamma)
         return cache, dcache, carry, first
 
+    # ------------------------------------------------------------- serving
     def serve_wave(self, requests: List[Request]) -> List[Request]:
-        """Serve one wave to completion. Mutates and returns requests."""
-        assert len(requests) == self.batch
-        t0 = time.perf_counter()
-        cache, dcache, carry, first = self._prologue(requests)
-        first_np = np.asarray(first)
-        for i, r in enumerate(requests):
-            r.generated.append(int(first_np[i]))
-            if self.eos_id is not None and int(first_np[i]) == self.eos_id:
-                r.finish()
+        """Serve one wave to completion (compat wrapper over
+        ``serve_stream``).  Waves smaller than the engine batch are
+        padded internally with inert zero-budget slots.  Mutates and
+        returns the requests."""
+        assert len(requests) <= self.batch, \
+            f"wave of {len(requests)} exceeds engine batch {self.batch}"
+        self.serve_stream(requests)
+        return requests
 
+    def serve_stream(self, requests: Iterable[Request], *,
+                     on_complete: Optional[Callable[[Request], None]] = None
+                     ) -> List[Request]:
+        """Serve an entire request stream with in-flight slot refill.
+
+        Pulls lazily from ``requests`` (any iterable), keeps the device
+        state resident, and refills slots as requests finish.
+        ``on_complete`` fires on the host once per finished request (at
+        telemetry-drain boundaries) — the TIDE system uses it to poll
+        the training controller mid-stream.  Returns the completed
+        requests in completion order."""
+        sched = Scheduler(self.batch, requests)
+        t0 = time.perf_counter()
+        if not sched.admit():
+            return []
+        reqs0 = [r if r is not None else inert_request()
+                 for r in sched.slots]
+        cache, dcache, carry, first = self._prologue(reqs0)
+        first_np = np.asarray(first)
+        for i, r in enumerate(reqs0):
+            self._commit_first(r, int(first_np[i]))
         if self._superstep_fn is not None:
-            self._serve_superstep(requests, cache, dcache, carry, first, t0)
+            self._stream_superstep(sched, reqs0, cache, dcache, carry,
+                                   first, t0, on_complete)
         else:
-            self._serve_stepwise(requests, cache, dcache, carry, t0)
+            self._stream_stepwise(sched, cache, dcache, carry, t0,
+                                  on_complete)
         if self.extractor is not None:
             self.extractor.flush()
         self.stats.wall_s += time.perf_counter() - t0
-        return requests
+        return sched.completed
+
+    def _retire_and_admit(self, sched: Scheduler, on_complete):
+        """Release finished slots, then admit pending requests into them.
+        Returns the new (slot, request) assignments to refill."""
+        for r in sched.release_finished():
+            if on_complete is not None:
+                on_complete(r)
+        return sched.admit()
+
+    def _refill_arrays(self, admitted: List[Tuple[int, Request]]):
+        """Host-side packing of a refill batch, shape-bucketed to bound
+        jit retraces to (log2 B widths) x (few prompt-length buckets):
+        the row count is padded to the next power of two (pad rows
+        replicate row 0 and are never gathered — the (B,) mask/src lane
+        map is built here, so they cannot touch live state) and the
+        prompt width to a multiple of 8 (which also guarantees >=2
+        columns for the draft seed)."""
+        plen = max(len(r.prompt) for _, r in admitted)
+        plen = max(8, -(-plen // 8) * 8)
+        n = len(admitted)
+        width = 1
+        while width < n:
+            width *= 2
+        toks = np.zeros((width, plen), np.int32)
+        pad = np.zeros((width,), np.int32)
+        budgets = np.zeros((width,), np.int32)
+        for row, (_, r) in enumerate(admitted):
+            pad[row] = plen - len(r.prompt)
+            toks[row, pad[row]:] = r.prompt
+            budgets[row] = r.max_new_tokens
+        toks[n:] = toks[0]
+        pad[n:] = pad[0]
+        mask = np.zeros((self.batch,), bool)
+        src = np.zeros((self.batch,), np.int32)
+        for row, (slot, _) in enumerate(admitted):
+            mask[slot] = True
+            src[slot] = row
+        return (jnp.asarray(toks), jnp.asarray(pad), jnp.asarray(mask),
+                jnp.asarray(src), jnp.asarray(budgets))
 
     # ----------------------------------------------- superstep hot path
     @staticmethod
@@ -221,49 +418,91 @@ class ServingEngine:
         return {k: v if k.startswith("sig_") else np.asarray(v)
                 for k, v in prev.items()}
 
-    def _serve_superstep(self, requests, cache, dcache, carry, first, t0):
-        K = self.superstep_rounds
-        rids = [r.rid for r in requests]
-        max_new = jnp.asarray([r.max_new_tokens for r in requests],
-                              jnp.int32)
+    def _stream_superstep(self, sched, reqs0, cache, dcache, carry, first,
+                          t0, on_complete):
+        max_new = jnp.asarray([r.max_new_tokens for r in reqs0], jnp.int32)
+        active0 = jnp.asarray([r.finish_t is None for r in reqs0], bool)
         state = spec.init_superstep_state(
             carry, first, self._key, accept_ema=self.accept_ema,
-            eos_id=self.eos_id)
-        max_steps = max(r.max_new_tokens for r in requests) + 2
-        limit = -(-max_steps // K) + 1
-        all_done = False
-        # one-superstep double buffer (local: the payload must never
-        # outlive this wave): superstep t+1 is dispatched before t's
-        # telemetry is pulled, so the D2H sync overlaps device compute
+            eos_id=self.eos_id, active0=active0)
+        # one-superstep double buffer: superstep t+1 is dispatched before
+        # t's telemetry is pulled, so the D2H sync overlaps device
+        # compute; refills scheduled after draining t are enqueued behind
+        # t+1 and take effect in t+2, their first tokens riding along
+        # with t's... drained record ("refill" attachment below)
         pending = None
-        for _ in range(limit):
-            if all_done:
-                break
-            out = self._superstep_fn(self.params, self.dparams, cache,
-                                     dcache, state, max_new)
-            self.stats.dispatches += 1
-            cache, dcache, state = (out["cache"], out["dcache"],
-                                    out["state"])
-            prev, pending = pending, out["rounds"]
-            if prev is not None:
-                all_done = self._unpack_superstep(
-                    self._materialize(prev), requests, rids, t0)
-        if pending is not None:
-            self._unpack_superstep(self._materialize(pending), requests,
-                                   rids, t0)
+        stall = 0
+        while True:
+            dispatched = False
+            if sched.has_work():
+                out = self._superstep_fn(self.params, self.dparams, cache,
+                                         dcache, state, max_new)
+                self.stats.dispatches += 1
+                cache, dcache, state = (out["cache"], out["dcache"],
+                                        out["state"])
+                prev, pending = pending, {"rounds": out["rounds"],
+                                          "slots": list(sched.slots),
+                                          "refill": None}
+                dispatched = True
+            else:
+                prev, pending = pending, None
+            if prev is None:
+                if not dispatched:
+                    break
+                continue
+            progressed = self._drain(prev, t0)
+            admitted = self._retire_and_admit(sched, on_complete)
+            if admitted:
+                args = self._refill_arrays(admitted)
+                cache, dcache, state, max_new, fdev = self._refill_ss_fn(
+                    self.params, self.dparams, cache, dcache, state,
+                    max_new, *args, self._next_refill_key())
+                self.stats.refills += len(admitted)
+                if pending is not None:
+                    # first tokens materialize with the next telemetry
+                    # pull — zero extra host syncs
+                    pending["refill"] = (fdev, admitted)
+                else:
+                    first_np = np.asarray(fdev)
+                    for row, (_, req) in enumerate(admitted):
+                        self._commit_first(req, int(first_np[row]))
+            # defensive stall guard: every drained superstep must either
+            # commit rounds, retire requests, or admit new ones
+            stall = 0 if (progressed or admitted) else stall + 1
+            if stall > 4:
+                raise RuntimeError(
+                    "serve_stream made no progress over 5 supersteps "
+                    "(device/host slot state diverged)")
         self._key = jax.random.wrap_key_data(state.key_data)
+
+    def _drain(self, rec, t0) -> bool:
+        """Unpack one in-flight superstep record: replay its telemetry,
+        then commit the first tokens of any refill that was enqueued
+        behind it.  Returns True if any round was valid (progress)."""
+        ys = self._materialize(rec["rounds"])
+        rids = [r.rid if r is not None else -1 for r in rec["slots"]]
+        progressed = self._unpack_superstep(ys, rec["slots"], rids, t0)
+        if rec["refill"] is not None:
+            fdev, admitted = rec["refill"]
+            first_np = np.asarray(fdev)
+            for row, (_, req) in enumerate(admitted):
+                self._commit_first(req, int(first_np[row]))
+        return progressed
 
     def _unpack_superstep(self, ys, requests, rids, t0) -> bool:
         """Replay one superstep's host-side bookkeeping from device
         telemetry: token commit, stats/timeline, Algorithm 1 controller
-        and packed-signal ingestion.  Returns True when every request
-        had finished by the end of the superstep."""
+        and packed-signal ingestion.  ``requests`` is the per-slot
+        residency snapshot taken at dispatch (None = free lane).
+        Returns True if any round was valid (i.e. the superstep did
+        work; False means every lane was already done at entry)."""
         valid = ys["valid"]
         sig_np = None            # lazily-fetched packed signal buffers
-        all_done = True          # no valid rounds -> wave was already done
+        any_valid = False
         for r in range(valid.shape[0]):
             if not valid[r]:
                 break
+            any_valid = True
             use_spec = bool(ys["use_spec"][r])
             ell = float(ys["ell"][r])
             alpha = float(ys["alpha"][r])
@@ -271,16 +510,21 @@ class ServingEngine:
             toks = ys["tokens"][r]
             active_after = ys["active_after"][r]
             for i, req in enumerate(requests):
+                if req is None:
+                    continue
                 n = int(n_eff[i])
                 if n:
                     req.generated.extend(int(t) for t in toks[i, :n])
                 if not active_after[i] and req.finish_t is None:
-                    req.finish()
+                    self._finish(req)
+            busy = int((n_eff > 0).sum())
             self.stats.tokens_out += int(n_eff.sum())
             self.stats.steps += 1
             self.stats.spec_steps += int(use_spec)
             self.stats.accept_len_sum += ell
             self.stats.accept_len_n += 1
+            self.stats.lane_rounds += len(requests)
+            self.stats.busy_lane_rounds += busy
             self.accept_ema = float(ys["ema"][r])
             if self.drafter is not None:
                 self.drafter.enabled = use_spec
@@ -302,19 +546,34 @@ class ServingEngine:
             self.stats.timeline.append({
                 "t": time.perf_counter() - t0, "spec": use_spec,
                 "accept_len": ell, "alpha": alpha,
-                "decision": decision.value,
+                "decision": decision.value, "busy_lanes": busy,
             })
-            all_done = not bool(active_after.any())
-        return all_done
+        return any_valid
 
     # ------------------------------------------ per-step reference loop
-    def _serve_stepwise(self, requests, cache, dcache, carry, t0):
+    def _stream_stepwise(self, sched, cache, dcache, carry, t0,
+                         on_complete):
         b = self.batch
-        active = np.array([r.finish_t is None for r in requests], bool)
-        max_steps = max(r.max_new_tokens for r in requests) + 2
-        rids = [r.rid for r in requests]
-        for _ in range(max_steps):
+        slots = list(sched.slots)
+        active = np.array([r is not None and r.finish_t is None
+                           for r in slots], bool)
+        while True:
+            admitted = self._retire_and_admit(sched, on_complete)
+            if admitted:
+                args = self._refill_arrays(admitted)
+                cache, dcache, carry, fdev = self._refill_step_fn(
+                    self.params, self.dparams, cache, dcache, carry,
+                    args[0], args[1], args[2], args[3],
+                    self._next_refill_key())
+                self.stats.refills += len(admitted)
+                first_np = np.asarray(fdev)
+                for row, (slot, req) in enumerate(admitted):
+                    self._commit_first(req, int(first_np[row]))
+                    active[slot] = req.finish_t is None
+                slots = list(sched.slots)
             if not active.any():
+                if sched.has_work():
+                    continue     # residents all EOS'd at refill; admit more
                 break
             use_spec = True
             if self.drafter is not None:
@@ -352,8 +611,8 @@ class ServingEngine:
                 ell = 1.0
             n_eff = np.zeros((b,), np.int32)
             eos_hit = np.zeros((b,), bool)
-            for i, r in enumerate(requests):
-                if not active[i]:
+            for i, r in enumerate(slots):
+                if r is None or not active[i]:
                     continue
                 n = min(int(n_commit[i]),
                         max(r.max_new_tokens - len(r.generated), 0))
@@ -367,22 +626,26 @@ class ServingEngine:
             if self.extractor is not None:
                 # only tokens actually kept (post EOS/budget cut) become
                 # training signals
+                rids = [r.rid if r is not None else -1 for r in slots]
                 mask = (np.arange(toks_np.shape[1])[None, :]
                         < n_eff[:, None])
                 self.extractor.offer(rids, out["captures"], out["tokens"],
                                      jnp.asarray(mask))
 
-            for i, r in enumerate(requests):
-                if not active[i]:
+            for i, r in enumerate(slots):
+                if r is None or not active[i]:
                     continue
                 r.generated.extend(int(t) for t in toks_np[i, :n_eff[i]])
                 if eos_hit[i] or r.done:
-                    r.finish()
+                    self._finish(r)
                     active[i] = False
             self.stats.tokens_out += int(n_eff.sum())
             self.stats.steps += 1
             self.stats.accept_len_sum += ell
             self.stats.accept_len_n += 1
+            self.stats.lane_rounds += b
+            busy = int((n_eff > 0).sum())
+            self.stats.busy_lane_rounds += busy
             n_sig = int(n_commit[active].sum()) if active.any() else 0
             decision = Decision.NONE
             if self.controller is not None:
@@ -393,7 +656,7 @@ class ServingEngine:
             self.stats.timeline.append({
                 "t": time.perf_counter() - t0, "spec": use_spec,
                 "accept_len": ell, "alpha": alpha,
-                "decision": decision.value,
+                "decision": decision.value, "busy_lanes": busy,
             })
 
     def _pick(self, logits):

@@ -18,6 +18,7 @@ class Request:
     arrival_t: float = dataclasses.field(default_factory=time.perf_counter)
     # filled by the engine
     generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
 
     @property
@@ -26,7 +27,33 @@ class Request:
         return (self.finish_t is not None
                 or len(self.generated) >= self.max_new_tokens)
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (seconds since arrival), as observed by the
+        host — under the fused superstep the first token materializes with
+        the next superstep's telemetry, so this includes up to one
+        superstep of pipelining lag."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def latency(self) -> Optional[float]:
+        """End-to-end completion latency (seconds since arrival)."""
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.arrival_t
+
     def finish(self):
         if self.finish_t is None:
             self.finish_t = time.perf_counter()
             del self.generated[self.max_new_tokens:]
+
+
+def inert_request() -> Request:
+    """A pre-finished zero-budget placeholder: pads partial waves and
+    unoccupied slots so every device batch lane has a definite (masked)
+    state.  Never returned to callers."""
+    r = Request(prompt=[0], max_new_tokens=0)
+    r.finish()
+    return r

@@ -1,0 +1,85 @@
+"""Slot-level admission control for continuous batching.
+
+The ``Scheduler`` owns the mapping between device batch lanes ("slots")
+and live requests.  The serving engine asks it, between decode
+supersteps, which finished slots can be refilled from the pending
+queue; the engine then writes the new prompts into the resident device
+state without tearing it down (``ServingEngine.serve_stream``).
+
+Requests are admitted in arrival order (the queue is FIFO and is topped
+up lazily from the request iterator, so an unbounded stream never has to
+be materialized).  Arrival *timestamps* are bookkeeping only — the
+scheduler does not gate admission on wall-clock arrival times; a trace
+is replayed as fast as the engine can drain it (the goodput measurement
+of ``benchmarks/bench_continuous.py``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Iterable, Iterator, List, Optional, Tuple
+
+from repro.serving.request import Request
+
+
+class Scheduler:
+    """FIFO admission queue + slot occupancy for one serving engine."""
+
+    def __init__(self, batch_size: int,
+                 requests: Optional[Iterable[Request]] = None):
+        self.batch = batch_size
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self._queue: Deque[Request] = deque()
+        self._iter: Optional[Iterator[Request]] = (
+            iter(requests) if requests is not None else None)
+        self._exhausted = requests is None
+        self.admitted = 0
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------ queue
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _pull(self) -> bool:
+        """Top the queue up with one request from the iterator."""
+        if self._exhausted:
+            return False
+        try:
+            self._queue.append(next(self._iter))
+            return True
+        except StopIteration:
+            self._exhausted = True
+            return False
+
+    def has_pending(self) -> bool:
+        return bool(self._queue) or (not self._exhausted and self._pull())
+
+    def has_work(self) -> bool:
+        """True while any slot is occupied or any request waits."""
+        return any(s is not None for s in self.slots) or self.has_pending()
+
+    # ------------------------------------------------------------ slots
+    def release_finished(self) -> List[Request]:
+        """Free every slot whose request has finished; returns them in
+        slot order (the engine records latency stats before calling)."""
+        freed = []
+        for i, r in enumerate(self.slots):
+            if r is not None and r.finish_t is not None:
+                self.slots[i] = None
+                self.completed.append(r)
+                freed.append(r)
+        return freed
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the pending queue (FIFO).  Returns the
+        (slot, request) assignments made — the engine's refill batch."""
+        out = []
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                continue
+            if not self._queue and not self._pull():
+                break
+            req = self._queue.popleft()
+            self.slots[i] = req
+            self.admitted += 1
+            out.append((i, req))
+        return out

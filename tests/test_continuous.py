@@ -1,0 +1,316 @@
+"""Continuous batching (serve_stream + in-flight slot refill).
+
+Greedy decoding makes per-request token streams scheduling-invariant:
+whatever slots a request shares a batch with, and whenever it is
+admitted, its stream must be byte-identical.  That is the core oracle
+here — wave scheduling, the superstep stream, the stepwise stream, and
+serving a request alone must all agree token for token, and a saturated
+single batch must reproduce ``serve_wave`` exactly (streams, SignalStore
+contents, stats).
+
+Also covers the satellite fixes: partial waves (inert slot padding),
+``_unpack_superstep`` edge cases (zero valid rounds, wave done at entry,
+EOS landing on the last round of a superstep, first-token EOS), and the
+``ServingStats`` TTFT / completion-latency / occupancy accounting.
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import eagle
+from repro.core.signals import SignalExtractor, SignalStore
+from repro.data.workloads import arrival_trace, make_domains, training_corpus
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine, ServingStats
+from repro.serving.request import Request, inert_request
+from repro.serving.scheduler import Scheduler
+from repro.training.trainer import pretrain_target
+
+
+@pytest.fixture(scope="module")
+def pretrained():
+    cfg = C.get("tide-tiny")
+    params = T.init(cfg, jax.random.key(0))
+    domains = make_domains(cfg.vocab_size, ["science"], branchings=[2],
+                           seed=3)
+    corpus = training_corpus(domains["science"], 64, 40, 1)
+    params, _ = pretrain_target(cfg, params, corpus, steps=80, lr=3e-3)
+    dcfg = eagle.draft_config(cfg)
+    dparams = eagle.draft_init(dcfg, jax.random.key(7))
+    return cfg, params, dcfg, dparams, domains
+
+
+def _engine(pretrained, rounds, *, batch=4, extractor=True, eos_id=None,
+            max_len=96):
+    cfg, params, dcfg, dparams, domains = pretrained
+    store = SignalStore()
+    ext = SignalExtractor(store, window=16) if extractor else None
+    eng = ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
+                        max_len=max_len, gamma=3, extractor=ext, seed=5,
+                        superstep_rounds=rounds, eos_id=eos_id)
+    return eng, store
+
+
+def _requests(pretrained, budgets, seed=0):
+    domains = pretrained[4]
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=domains["science"].sample_prompt(rng),
+                    max_new_tokens=m) for m in budgets]
+
+
+def _signals(store):
+    return [(b.tokens.tobytes(), b.feats.tobytes()) for b in store.drain()]
+
+
+# ------------------------------------------------- saturated-batch parity
+@pytest.mark.parametrize("rounds", [0, 8])
+def test_saturated_stream_matches_wave(pretrained, rounds):
+    """A saturated same-arrival batch through serve_stream must be
+    byte-identical to serve_wave: streams, SignalStore, stats."""
+    e_wave, s_wave = _engine(pretrained, rounds)
+    r_wave = _requests(pretrained, (9, 24, 24, 15))
+    e_wave.serve_wave(r_wave)
+
+    e_str, s_str = _engine(pretrained, rounds)
+    r_str = _requests(pretrained, (9, 24, 24, 15))
+    done = e_str.serve_stream(r_str)
+
+    assert [r.generated for r in r_str] == [r.generated for r in r_wave]
+    assert _signals(s_str) == _signals(s_wave)
+    assert len(done) == 4 and all(r.finish_t is not None for r in r_str)
+    for attr in ("tokens_out", "steps", "spec_steps", "dispatches",
+                 "refills"):
+        assert getattr(e_str.stats, attr) == getattr(e_wave.stats, attr)
+    assert e_str.accept_ema == e_wave.accept_ema
+    assert e_wave.stats.tokens_out == sum(
+        len(r.generated) for r in r_wave)
+
+
+# --------------------------------------------------- refill-stream parity
+def test_refill_stream_parity_and_alone(pretrained):
+    """A ragged stream through both engine modes and through wave
+    chunks: per-request streams identical everywhere, and every
+    *refilled* request matches serving it alone on a fresh engine."""
+    budgets = (5, 18, 7, 12, 16, 4, 9, 20, 6, 11)
+    r_ss = _requests(pretrained, budgets)
+    e_ss, _ = _engine(pretrained, 8)
+    e_ss.serve_stream(list(r_ss))
+    assert e_ss.stats.refills == len(budgets) - e_ss.batch
+    assert all(r.done and r.finish_t is not None for r in r_ss)
+    assert e_ss.stats.tokens_out == sum(len(r.generated) for r in r_ss)
+
+    r_st = _requests(pretrained, budgets)
+    e_st, _ = _engine(pretrained, 0)
+    e_st.serve_stream(list(r_st))
+    assert [r.generated for r in r_st] == [r.generated for r in r_ss]
+
+    r_wv = _requests(pretrained, budgets)
+    e_wv, _ = _engine(pretrained, 8)
+    for i in range(0, len(r_wv), 4):
+        e_wv.serve_wave(r_wv[i:i + 4])
+    assert [r.generated for r in r_wv] == [r.generated for r in r_ss]
+
+    # refilled slots (everything admitted after the initial batch)
+    e_alone, _ = _engine(pretrained, 8, batch=1)
+    for req in r_ss[e_ss.batch:]:
+        solo = Request(prompt=list(req.prompt),
+                       max_new_tokens=req.max_new_tokens)
+        e_alone.serve_wave([solo])
+        assert solo.generated == req.generated, \
+            "refilled slot diverged from serving the request alone"
+
+
+def test_stream_stats_and_latency(pretrained):
+    """ServingStats: TTFT/latency recorded per request, occupancy in
+    (0, 1], lane accounting consistent."""
+    budgets = (6, 15, 8, 10, 12, 5)
+    reqs = _requests(pretrained, budgets)
+    eng, _ = _engine(pretrained, 8)
+    eng.serve_stream(list(reqs))
+    st = eng.stats
+    assert st.completed == len(budgets)
+    assert len(st.ttfts) == len(budgets)
+    assert len(st.latencies) == len(budgets)
+    assert all(t >= 0 for t in st.ttfts)
+    assert st.latency_p50 <= st.latency_p95
+    assert 0.0 < st.occupancy <= 1.0
+    assert st.busy_lane_rounds <= st.lane_rounds
+    assert st.lane_rounds == st.steps * eng.batch
+    for r in reqs:
+        assert r.ttft is not None and r.latency is not None
+        assert r.ttft <= r.latency
+    # timeline rounds carry lane-occupancy telemetry
+    assert all("busy_lanes" in e for e in st.timeline)
+
+
+# ----------------------------------------------------------- partial waves
+@pytest.mark.parametrize("rounds", [0, 8])
+def test_partial_wave(pretrained, rounds):
+    """serve_wave accepts waves smaller than the engine batch: inert
+    zero-budget slots pad the batch and leak nothing."""
+    reqs = _requests(pretrained, (7, 11))
+    eng, store = _engine(pretrained, rounds, batch=4)
+    eng.serve_wave(reqs)
+    assert all(r.done and len(r.generated) == r.max_new_tokens
+               for r in reqs)
+    assert eng.stats.tokens_out == sum(len(r.generated) for r in reqs)
+
+    # parity: the same two requests on a batch-2 engine
+    ref = _requests(pretrained, (7, 11))
+    e2, _ = _engine(pretrained, rounds, batch=2)
+    e2.serve_wave(ref)
+    assert [r.generated for r in ref] == [r.generated for r in reqs]
+
+
+def test_zero_budget_request(pretrained):
+    """A zero-budget request completes immediately with no tokens."""
+    reqs = _requests(pretrained, (0, 8))
+    eng, _ = _engine(pretrained, 8)
+    eng.serve_wave(reqs)
+    assert reqs[0].generated == [] and reqs[0].finish_t is not None
+    assert len(reqs[1].generated) == 8
+    assert eng.stats.tokens_out == 8
+
+
+# ----------------------------------------------------------- EOS handling
+def test_first_token_eos_stream(pretrained):
+    """EOS as the very first sampled token: one-token stream, immediate
+    finish, identical across modes, and the slot is refilled."""
+    probe = _requests(pretrained, (12, 12, 12, 12, 12, 12))
+    ref = [Request(prompt=list(r.prompt), max_new_tokens=12)
+           for r in probe]
+    e1, _ = _engine(pretrained, 8)
+    e1.serve_stream(ref)
+    # request 0's first sampled token as EOS: its stream collapses to a
+    # single token, freeing the slot for an immediate refill
+    eos = ref[0].generated[0]
+
+    outs = {}
+    for rounds in (0, 8):
+        reqs = [Request(prompt=list(r.prompt), max_new_tokens=12)
+                for r in probe]
+        eng, _ = _engine(pretrained, rounds, eos_id=eos)
+        eng.serve_stream(reqs)
+        outs[rounds] = [list(r.generated) for r in reqs]
+        assert reqs[0].generated == [eos], \
+            "first-token EOS must cut the stream to one token"
+        assert reqs[0].finish_t is not None
+        for r in reqs:
+            assert eos not in r.generated[:-1], "tokens emitted past EOS"
+            assert r.done
+    assert outs[0] == outs[8]
+
+
+# ----------------------------------------- _unpack_superstep edge cases
+def _bare_engine(pretrained):
+    eng, _ = _engine(pretrained, 8, batch=2, extractor=False)
+    return eng
+
+
+def _ys(valid, n_eff, tokens, active_after, K, B, gp1):
+    """Craft a superstep telemetry dict as _materialize would return."""
+    return {
+        "valid": np.asarray(valid, bool),
+        "use_spec": np.ones((K,), bool),
+        "ell": np.full((K,), 2.0, np.float32),
+        "alpha": np.full((K,), 0.5, np.float32),
+        "n_eff": np.asarray(n_eff, np.int32),
+        "n_commit": np.asarray(n_eff, np.int32),
+        "tokens": np.asarray(tokens, np.int32),
+        "active_after": np.asarray(active_after, bool),
+        "n_sig": np.zeros((K,), np.int32),
+        "ema": np.full((K,), 1.5, np.float32),
+    }
+
+
+def test_unpack_zero_valid_rounds(pretrained):
+    """A superstep dispatched after the wave finished: every round is
+    skipped; nothing may change host-side."""
+    eng = _bare_engine(pretrained)
+    reqs = [Request(prompt=[1, 2], max_new_tokens=4) for _ in range(2)]
+    K, B, gp1 = 3, 2, 4
+    ys = _ys([False] * K, np.zeros((K, B)), np.zeros((K, B, gp1)),
+             np.ones((K, B)), K, B, gp1)
+    progressed = eng._unpack_superstep(ys, reqs, [r.rid for r in reqs], 0.0)
+    assert progressed is False
+    assert eng.stats.steps == 0 and eng.stats.tokens_out == 0
+    assert all(r.generated == [] and r.finish_t is None for r in reqs)
+
+
+def test_unpack_wave_done_at_entry_engine_level(pretrained):
+    """Budgets small enough that the wave completes inside the first
+    superstep: the pipelined second superstep must contribute zero
+    rounds (valid=False throughout)."""
+    eng, _ = _engine(pretrained, 8)
+    reqs = _requests(pretrained, (3, 3, 3, 3))
+    eng.serve_wave(reqs)
+    assert all(len(r.generated) == 3 for r in reqs)
+    # every *valid* round committed tokens; the trailing all-done
+    # superstep contributed none
+    assert eng.stats.steps < 8
+    assert eng.stats.dispatches >= 2
+
+
+def test_unpack_eos_on_last_round(pretrained):
+    """EOS cut landing on the final round of a superstep: truncation and
+    finish must apply on that very round, not the next superstep."""
+    eng = _bare_engine(pretrained)
+    reqs = [Request(prompt=[1, 2], max_new_tokens=10) for _ in range(2)]
+    K, B, gp1 = 2, 2, 4
+    n_eff = [[2, 2], [1, 3]]
+    tokens = np.arange(K * B * gp1).reshape(K, B, gp1) % 97
+    active_after = [[True, True], [False, True]]   # req0 EOS-cut on last
+    ys = _ys([True, True], n_eff, tokens, active_after, K, B, gp1)
+    progressed = eng._unpack_superstep(ys, reqs, [r.rid for r in reqs], 0.0)
+    assert progressed is True
+    assert eng.stats.steps == 2
+    assert len(reqs[0].generated) == 3 and reqs[0].finish_t is not None
+    assert len(reqs[1].generated) == 5 and reqs[1].finish_t is None
+    assert eng.stats.tokens_out == 8
+    assert eng.stats.completed == 1
+
+
+def test_unpack_free_slot_rows_ignored(pretrained):
+    """Telemetry rows of free lanes (None residency snapshot) must not
+    be attributed to anyone."""
+    eng = _bare_engine(pretrained)
+    req = Request(prompt=[1, 2], max_new_tokens=10)
+    K, B, gp1 = 1, 2, 4
+    # a free lane is inactive on device, so its n_eff is always 0
+    ys = _ys([True], [[2, 0]], np.ones((K, B, gp1)), [[True, False]],
+             K, B, gp1)
+    eng._unpack_superstep(ys, [req, None], [req.rid, -1], 0.0)
+    assert len(req.generated) == 2
+    assert eng.stats.tokens_out == 2
+
+
+# -------------------------------------------------------------- scheduler
+def test_scheduler_fifo_and_lazy_pull():
+    pulled = []
+
+    def gen():
+        for i in range(6):
+            pulled.append(i)
+            yield Request(prompt=[1, 2], max_new_tokens=4)
+
+    s = Scheduler(2, gen())
+    first = s.admit()
+    assert [slot for slot, _ in first] == [0, 1]
+    assert len(pulled) == 2, "scheduler must pull lazily"
+    assert s.has_work()
+    # nothing free -> no admission
+    assert s.admit() == []
+    # finish slot 1 -> exactly one refill, FIFO order
+    s.slots[1].finish()
+    freed = s.release_finished()
+    assert len(freed) == 1
+    nxt = s.admit()
+    assert [slot for slot, _ in nxt] == [1]
+    assert len(pulled) <= 4
+
+
+def test_inert_request():
+    r = inert_request()
+    assert r.done and r.finish_t is not None and r.generated == []
+    assert r.max_new_tokens == 0

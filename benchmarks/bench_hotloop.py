@@ -66,12 +66,23 @@ def _device_us_per_dispatch(eng, domains, *, batch, max_new):
     key = eng._next_key()
     if eng._superstep_fn is not None:
         state = spec.init_superstep_state(carry, first, key)
-        mx = jnp.asarray([max_new] * batch, jnp.int32)
-        fn = lambda: eng._superstep_fn(eng.params, eng.dparams, cache,
-                                       dcache, state, mx)
+        # huge budgets keep every lane active across the probe calls so
+        # no round is skipped (skipped rounds would flatter the timing)
+        mx = jnp.asarray([10 ** 6] * batch, jnp.int32)
+        # the engine donates the cache/state buffers per dispatch, so
+        # the probe must chain each call's outputs into the next call
+        # instead of re-passing consumed buffers
+        holder = {"c": cache, "d": dcache, "s": state}
+
+        def fn():
+            out = eng._superstep_fn(eng.params, eng.dparams, holder["c"],
+                                    holder["d"], holder["s"], mx)
+            holder.update(c=out["cache"], d=out["dcache"],
+                          s=out["state"])
+            return out["rounds"]["n_eff"]
     else:
         fn = lambda: eng._spec_fn(eng.params, eng.dparams, cache, dcache,
-                                  carry, key)
+                                  carry, eng._null_keys)
     return timeit(fn, warmup=2, iters=5) * 1e6
 
 

@@ -27,6 +27,7 @@ import traceback
 MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
     ("continuous", "benchmarks.bench_continuous"),
+    ("decoupled", "benchmarks.bench_decoupled"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -43,11 +44,13 @@ MODULES = [
 
 
 # Fast CI perf-smoke gate: the serving hot-loop overhead bench (reduced
-# shapes) + the continuous-batching goodput/parity gate + the kernel
-# oracles.  ``python -m benchmarks.run --smoke``.
+# shapes) + the continuous-batching goodput/parity gate + the decoupled
+# async-training gate (>=1.2x serving vs blocking training + drain
+# parity) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
     ("continuous", "benchmarks.bench_continuous"),
+    ("decoupled", "benchmarks.bench_decoupled"),
     ("kernels", "benchmarks.bench_kernels"),
 ]
 

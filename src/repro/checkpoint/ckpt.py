@@ -69,6 +69,12 @@ class DraftDeployGate:
         with self._lock:
             return self._params, self.version
 
+    def reset(self, initial_params):
+        with self._lock:
+            self._params = initial_params
+            self.version = 0
+            self.deploy_log = []
+
     def offer(self, new_params, eval_acc: float, baseline_acc: float) -> bool:
         """Deploy iff eval acceptance improved."""
         deploy = eval_acc > baseline_acc

@@ -40,6 +40,18 @@ class TrainingController:
     # bookkeeping for experiments
     history: List[dict] = dataclasses.field(default_factory=list)
 
+    def reset(self):
+        """Back to the post-construction state (fresh shift detector,
+        empty collection window)."""
+        self.collection_enabled = False
+        self.alpha_short = None
+        self.alpha_long = None
+        self.stored_samples = 0
+        self.collected_alpha_sum = 0.0
+        self.collected_alpha_n = 0
+        self._init_buf = []
+        self.history = []
+
     # ---- Algorithm 1, line by line -------------------------------------
     def observe(self, alpha: float, n_new_samples: int = 0) -> Decision:
         """Feed one acceptance-rate measurement (per engine step).

@@ -169,9 +169,14 @@ def draft_extend(dcfg: ModelConfig, dparams, embed_params, dcache,
 
 def draft_propose(dcfg: ModelConfig, dparams, embed_params, dcache,
                   h_last, first_logits, gamma: int, *,
-                  greedy: bool = True, key=None):
+                  greedy: bool = True, key=None, keys=None):
     """Chain-draft γ tokens.  h_last: (B, D) draft hidden at the last
     verified position; first_logits: (B, V) draft logits there.
+
+    ``keys``: optional (B,) per-lane key array — chain-step j for lane b
+    samples with ``fold_in(keys[b], j)``, so draft randomness is
+    per-request (scheduling-invariant); ``key`` is the legacy
+    batch-global scalar.
 
     Returns (draft_tokens (B, γ), draft_logits (B, γ, V), dcache') —
     dcache' has the speculative entries written but its *lengths advanced
@@ -184,10 +189,17 @@ def draft_propose(dcfg: ModelConfig, dparams, embed_params, dcache,
     def pick(logits, k):
         if greedy:
             return logits.argmax(-1).astype(jnp.int32)
+        if keys is not None:
+            kj = jax.vmap(lambda kk: jax.random.fold_in(kk, k))(keys)
+            return jax.vmap(jax.random.categorical)(kj, logits
+                                                    ).astype(jnp.int32)
         return jax.random.categorical(k, logits).astype(jnp.int32)
 
-    keys = (jax.random.split(key, gamma) if key is not None
-            else jnp.zeros((gamma, 2), jnp.uint32))
+    if keys is not None:
+        xs = jnp.arange(gamma)                    # fold-in indices
+    else:
+        xs = (jax.random.split(key, gamma) if key is not None
+              else jnp.zeros((gamma, 2), jnp.uint32))
 
     def step(carry, k):
         h, logits, cache = carry
@@ -202,7 +214,7 @@ def draft_propose(dcfg: ModelConfig, dparams, embed_params, dcache,
         return (h_new, logits_new, cache), (tok, logits)
 
     (h_f, logits_f, cache_f), (toks, logitss) = jax.lax.scan(
-        step, (h_last, first_logits, dcache), keys)
+        step, (h_last, first_logits, dcache), xs)
     draft_tokens = toks.T                                    # (B, γ)
     draft_logits = logitss.transpose(1, 0, 2)                # (B, γ, V)
     return draft_tokens, draft_logits, cache_f
@@ -264,6 +276,49 @@ def scatter_draft_rows(live, new, mask, src):
     return jax.tree.map(
         lambda l, n: scatter_batch_rows(l, n, mask, src, axis=0),
         live, new)
+
+
+def reseed_draft_rows_from_ring(dcfg: ModelConfig, dparams, embed_params,
+                                dcache, cap_feats, cap_toks, cap_count):
+    """Rebuild the trailing draft-cache K/V rows under new ``dparams``
+    from the rolling capture ring (deploy-time in-place re-seed).
+
+    The draft's K/V at cache slot p is a pure per-position function of
+    the ingested pair (f_p, u_p) and its RoPE position, so the last
+    ``n = min(cap_count, W)`` slots — exactly the pairs the ring holds —
+    can be recomputed exactly for a freshly deployed draft.  Slots older
+    than the window (and the prompt-seed region) keep the previous
+    draft's K/V: token streams stay correct either way (the target
+    verifies every draft), this only restores the new draft's acceptance
+    gain on resident lanes immediately instead of at lane retirement.
+
+    cap_feats: (B, W, 3D) ring of pair features; cap_toks: (B, W) ring
+    of pair tokens; cap_count: (B,) pairs ingested since lane admission
+    (ring write head).  Returns the re-seeded draft cache."""
+    b, w = cap_toks.shape
+    dt = dcfg.act_dtype
+    lengths = dcache["lengths"]
+    n = jnp.minimum(cap_count, w)
+    j = jnp.arange(w)[None, :]
+    slot = ((cap_count - n)[:, None] + j) % w      # ring → time order
+    feats = jnp.take_along_axis(cap_feats, slot[..., None], axis=1)
+    toks = jnp.take_along_axis(cap_toks, slot, axis=1)
+    start = lengths - n
+    x = _fuse_inputs(dcfg, dparams, feats, embed(embed_params, toks, dt))
+    # run the decode layer purely for its K/V cache writes: entries land
+    # at slots start + [0..W) with the exact RoPE positions the original
+    # ingestion used (lengths=start, same pad); the attention output and
+    # any out-of-range scratch writes are discarded
+    _, kc, vc = _layer(dcfg, dparams, x,
+                       jnp.zeros_like(dcache["k"]),
+                       jnp.zeros_like(dcache["v"]),
+                       start, dcache["pad"])
+    pos = jnp.arange(dcache["k"].shape[1])[None, :]
+    sel = ((pos >= start[:, None])
+           & (pos < lengths[:, None]))[..., None, None]
+    return dict(dcache,
+                k=jnp.where(sel, kc, dcache["k"]),
+                v=jnp.where(sel, vc, dcache["v"]))
 
 
 # ------------------------------------------------------------- training

@@ -7,6 +7,12 @@ speedup *s* unlocked by draft training, should low-end devices train the
 draft or serve?  It reproduces the paper's GPU numbers and adds TPU
 presets (the TPU-native analogue is disjoint submesh allocation —
 DESIGN.md §2.1).
+
+This model is now *live*, not just analytical:
+``core.transport.pick_training_device`` calls ``plan_tpu_submesh`` over
+the local jax device set to place the decoupled training service
+(``training/service.py``) on its own device(s), falling back to
+background-thread interleaving on single-device hosts.
 """
 from __future__ import annotations
 

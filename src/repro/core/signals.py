@@ -98,6 +98,12 @@ class SignalExtractor:
         self._acc: Dict[int, List] = {}   # rid -> [(feat, tok), ...]
         self.enabled = True
 
+    def reset(self):
+        """Drop pending device arrays and partial windows (fresh run)."""
+        self._pending = None
+        self._acc = {}
+        self.enabled = True
+
     def offer(self, rids, feats, tokens, mask):
         """feats (B,T,3D), tokens (B,T), mask (B,T) — device arrays for the
         just-dispatched step; the previous step's arrays are collected now

@@ -42,12 +42,18 @@ def verify_greedy(target_logits, draft_tokens):
 
 
 def verify_sample(key, target_logits, draft_logits, draft_tokens,
-                  temperature: float = 1.0):
+                  temperature: float = 1.0, keys=None):
     """Stochastic speculative sampling (Leviathan et al. 2023).
 
     target_logits: (B, γ+1, V); draft_logits: (B, γ, V);
     draft_tokens: (B, γ).  Returns (n_acc, bonus) with the guarantee that
     committed tokens are distributed exactly as target samples.
+
+    ``keys`` — optional (B,) per-lane key array (per-request PRNG
+    streams): every random draw for lane b derives from ``keys[b]``
+    only, so a request's acceptance/resample randomness is independent
+    of which lanes it shares a batch with.  When omitted, the scalar
+    ``key`` is consumed batch-globally (legacy behaviour).
     """
     b, gp1, v = target_logits.shape
     gamma = gp1 - 1
@@ -55,8 +61,13 @@ def verify_sample(key, target_logits, draft_logits, draft_tokens,
     q = jax.nn.softmax(draft_logits / temperature, axis=-1)
     p_tok = jnp.take_along_axis(p, draft_tokens[..., None], axis=-1)[..., 0]
     q_tok = jnp.take_along_axis(q, draft_tokens[..., None], axis=-1)[..., 0]
-    k_acc, k_res = jax.random.split(key)
-    u = jax.random.uniform(k_acc, (b, gamma))
+    if keys is None:
+        k_acc, k_res = jax.random.split(key)
+        u = jax.random.uniform(k_acc, (b, gamma))
+    else:
+        k_acc = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+        k_res = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (gamma,)))(k_acc)
     ok = u < jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-20))
     n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
     # residual distribution at the first rejected slot (or plain target
@@ -72,8 +83,12 @@ def verify_sample(key, target_logits, draft_logits, draft_tokens,
     use_residual = (n_acc < gamma)[:, None]
     dist = jnp.where(use_residual, residual, p_rej)
     dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-20)
-    bonus = jax.random.categorical(k_res, jnp.log(dist + 1e-20)
-                                   ).astype(jnp.int32)
+    logd = jnp.log(dist + 1e-20)
+    if keys is None:
+        bonus = jax.random.categorical(k_res, logd).astype(jnp.int32)
+    else:
+        bonus = jax.vmap(jax.random.categorical)(k_res, logd
+                                                 ).astype(jnp.int32)
     return n_acc, bonus
 
 
@@ -116,7 +131,7 @@ def seed_draft_cache(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
 # ------------------------------------------------------------ fused step
 def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
                      cache, dcache, carry: SpecCarry, *, gamma: int = 3,
-                     greedy: bool = True, key=None,
+                     greedy: bool = True, key=None, keys=None,
                      moe_impl: str = "sort"):
     """One full speculative serving step (paper Fig. 2 inner loop).
 
@@ -125,13 +140,22 @@ def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
     3. target verify block [t0, d1..dγ],
     4. accept, commit caches, emit training-signal captures.
 
+    ``keys`` — optional (B,) per-lane key array; all sampling for lane b
+    (draft picks, acceptance, resample) derives from ``keys[b]``, making
+    sampled streams per-request deterministic regardless of batch
+    composition.  ``key`` is the legacy batch-global scalar chain.
+
     Returns dict(tokens (B, γ+1) committed tokens (scratch beyond
     n_commit), n_commit (B,), cache, dcache, carry, captures, accept_mask).
     """
     b = carry.tokens.shape[0]
-    if key is None:
-        key = jax.random.key(0)
-    k_draft, k_ver = jax.random.split(key)
+    if keys is not None:
+        k_draft = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+        k_ver = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
+    else:
+        if key is None:
+            key = jax.random.key(0)
+        k_draft, k_ver = jax.random.split(key)
 
     # 1) draft catches up on everything committed last round
     ext_logits, ext_h, dcache = eagle.draft_extend(
@@ -144,7 +168,9 @@ def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
     # 2) chain-draft γ tokens
     draft_tokens, draft_logits, dcache = eagle.draft_propose(
         dcfg, dparams, tparams["embed"], dcache, h_last, first_logits,
-        gamma, greedy=greedy, key=k_draft)
+        gamma, greedy=greedy,
+        key=None if keys is not None else k_draft,
+        keys=k_draft if keys is not None else None)
 
     # 3) target verify: t0 = last committed token (pair index advance-1)
     t0 = jnp.take_along_axis(carry.tokens, (carry.advance - 1)[:, None],
@@ -156,6 +182,9 @@ def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
     # 4) acceptance
     if greedy:
         n_acc, bonus = verify_greedy(tl, draft_tokens)
+    elif keys is not None:
+        n_acc, bonus = verify_sample(None, tl, draft_logits, draft_tokens,
+                                     keys=k_ver)
     else:
         n_acc, bonus = verify_sample(k_ver, tl, draft_logits, draft_tokens)
     n_commit = n_acc + 1
@@ -184,14 +213,19 @@ def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
 
 
 def plain_decode_step(cfg: ModelConfig, tparams, cache, carry_token, *,
-                      greedy: bool = True, key=None, moe_impl: str = "sort"):
+                      greedy: bool = True, key=None, keys=None,
+                      moe_impl: str = "sort"):
     """Baseline autoregressive step (speculation disabled — the TIDE
-    Adaptive Drafter falls back to this when Eq. 5 predicts no gain)."""
+    Adaptive Drafter falls back to this when Eq. 5 predicts no gain).
+    ``keys``: optional (B,) per-lane keys (see ``spec_decode_step``)."""
     out = T.decode_step(cfg, tparams, cache, carry_token[:, None],
                         moe_impl=moe_impl)
     logits = out["logits"][:, 0]
     if greedy:
         nxt = logits.argmax(-1).astype(jnp.int32)
+    elif keys is not None:
+        nxt = jax.vmap(jax.random.categorical)(keys, logits
+                                               ).astype(jnp.int32)
     else:
         nxt = jax.random.categorical(key, logits).astype(jnp.int32)
     cache = T.commit_cache(cfg, out["cache"],
@@ -202,7 +236,7 @@ def plain_decode_step(cfg: ModelConfig, tparams, cache, carry_token, *,
 
 def plain_step_from_carry(cfg: ModelConfig, tparams, cache,
                           carry: SpecCarry, *, gamma: int = 3,
-                          greedy: bool = True, key=None,
+                          greedy: bool = True, key=None, keys=None,
                           moe_impl: str = "sort"):
     """Plain decode step driven by the spec carry (not a separate
     last-token variable): t0 is pair index ``advance-1`` of the carry, so
@@ -214,7 +248,7 @@ def plain_step_from_carry(cfg: ModelConfig, tparams, cache,
     t0 = jnp.take_along_axis(carry.tokens, (carry.advance - 1)[:, None],
                              axis=1)[:, 0]
     out = plain_decode_step(cfg, tparams, cache, t0, greedy=greedy,
-                            key=key, moe_impl=moe_impl)
+                            key=key, keys=keys, moe_impl=moe_impl)
     nxt, caps1 = out["token"], out["captures"]            # (B,), (B,1,3D)
     feats = jnp.zeros((b, gp1, caps1.shape[-1]), caps1.dtype
                       ).at[:, 0].set(caps1[:, 0])
@@ -233,30 +267,61 @@ class SuperstepState(NamedTuple):
 
     Everything the per-step host loop used to keep in Python lives here
     so K speculative rounds run inside one compiled function with zero
-    host syncs."""
+    host syncs.
+
+    PRNG: ``key_data`` holds the engine's *base* key (constant — never
+    split); lane b's sampling key for a round is
+    ``fold_in(fold_in(base, sid[b]), step_idx[b])``, so a request's
+    sampled stream depends only on its admission ordinal and per-request
+    step count, never on batch composition or refill timing.
+
+    ``cap_*`` (present only when deploy re-seeding is enabled) is a
+    rolling per-lane ring of the (feature, token) pairs the draft cache
+    ingested — enough to rebuild the last-window draft K/V rows under a
+    freshly deployed draft (``eagle.reseed_draft_rows_from_ring``)."""
     carry: SpecCarry
     active: jnp.ndarray       # (B,) bool — request still generating
     gen_count: jnp.ndarray    # (B,) int32 — committed tokens (incl. first)
     accept_ema: jnp.ndarray   # () f32 — EMA of acceptance length E[l]
-    key_data: jnp.ndarray     # raw PRNG key data (one split per round)
+    key_data: jnp.ndarray     # raw base-key data (per-request streams)
+    sid: jnp.ndarray          # (B,) int32 — sampling-stream id per lane
+    step_idx: jnp.ndarray     # (B,) int32 — per-lane decode-step counter
+    cap_feats: Optional[jnp.ndarray] = None   # (B, W, F) ring of pair feats
+    cap_toks: Optional[jnp.ndarray] = None    # (B, W) ring of pair tokens
+    cap_count: Optional[jnp.ndarray] = None   # (B,) pairs ingested
 
 
 def init_superstep_state(carry: SpecCarry, first_token, key, *,
                          accept_ema: float = 1.0,
                          eos_id: Optional[int] = None,
-                         active0=None) -> SuperstepState:
+                         active0=None, sids=None,
+                         capture_window: int = 0) -> SuperstepState:
     """``active0`` (B,) bool masks slots that are born finished (inert
-    padding of a partial wave, pre-finished requests); default all-on."""
+    padding of a partial wave, pre-finished requests); default all-on.
+    ``sids``: per-lane sampling-stream ids (default ``arange(B)``);
+    ``capture_window`` > 0 allocates the deploy-re-seed capture ring."""
     b = first_token.shape[0]
     active = jnp.ones((b,), bool) if active0 is None else \
         jnp.asarray(active0, bool)
     if eos_id is not None:
         active = active & (first_token != eos_id)
+    sid = (jnp.arange(b, dtype=jnp.int32) if sids is None
+           else jnp.asarray(sids, jnp.int32))
+    ring = {}
+    if capture_window:
+        ring = dict(
+            cap_feats=jnp.zeros((b, capture_window, carry.feats.shape[-1]),
+                                carry.feats.dtype),
+            cap_toks=jnp.zeros((b, capture_window), jnp.int32),
+            cap_count=jnp.zeros((b,), jnp.int32))
     return SuperstepState(
         carry=carry, active=active,
         gen_count=jnp.ones((b,), jnp.int32),
         accept_ema=jnp.float32(accept_ema),
-        key_data=jax.random.key_data(key))
+        # copy: the engine donates the state buffers per dispatch, and
+        # the caller's key (a long-lived engine attribute) must survive
+        key_data=jnp.array(jax.random.key_data(key)),
+        sid=sid, step_idx=jnp.ones((b,), jnp.int32), **ring)
 
 
 # ============================================== slot refill (continuous)
@@ -289,11 +354,13 @@ def scatter_carry(live: SpecCarry, new: SpecCarry, mask, src) -> SpecCarry:
 
 def refill_superstep_state(state: SuperstepState, carry_new: SpecCarry,
                            first_token, budgets, mask, src, *,
-                           eos_id: Optional[int] = None) -> SuperstepState:
+                           eos_id: Optional[int] = None,
+                           sids=None) -> SuperstepState:
     """Reset the masked slots of the superstep state for freshly admitted
     requests: carry ← prefill carry, gen_count ← 1 (the first sampled
     token), active ← alive unless first token is EOS or the budget is
-    zero.  The acceptance EMA and PRNG chain are engine-global and pass
+    zero, sampling stream ← (sid, step 1), capture ring ← empty.  The
+    acceptance EMA and the base PRNG key are engine-global and pass
     through untouched."""
     carry = scatter_carry(state.carry, carry_new, mask, src)
     alive = budgets >= 1
@@ -301,7 +368,15 @@ def refill_superstep_state(state: SuperstepState, carry_new: SpecCarry,
         alive = alive & (first_token != eos_id)
     active = jnp.where(mask, jnp.take(alive, src), state.active)
     gen_count = jnp.where(mask, 1, state.gen_count)
-    return state._replace(carry=carry, active=active, gen_count=gen_count)
+    repl = dict(carry=carry, active=active, gen_count=gen_count,
+                step_idx=jnp.where(mask, 1, state.step_idx))
+    if sids is not None:
+        repl["sid"] = jnp.where(mask, jnp.take(jnp.asarray(sids, jnp.int32),
+                                               src), state.sid)
+    if state.cap_count is not None:
+        # ring content is garbage once count resets — never gathered
+        repl["cap_count"] = jnp.where(mask, 0, state.cap_count)
+    return state._replace(**repl)
 
 
 def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
@@ -362,15 +437,24 @@ def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
 
         def _run(op):
             cache, dcache, st = op
-            key = jax.random.wrap_key_data(st.key_data)
-            knext, kuse = jax.random.split(key)
             n_active = st.active.sum().astype(jnp.int32)
+            if greedy:
+                keys = None
+            else:
+                # per-request streams: fold the constant base key by
+                # (sid, per-lane step counter) — identical to the
+                # per-step loop's host-side derivation, bit for bit
+                base = jax.random.wrap_key_data(st.key_data)
+                keys = jax.vmap(
+                    lambda s, c: jax.random.fold_in(
+                        jax.random.fold_in(base, s), c))(st.sid,
+                                                         st.step_idx)
 
             def _spec(args):
                 cache, dcache, carry = args
                 out = spec_decode_step(cfg, dcfg, tparams, dparams, cache,
                                        dcache, carry, gamma=gamma,
-                                       greedy=greedy, key=kuse,
+                                       greedy=greedy, keys=keys,
                                        moe_impl=moe_impl)
                 return (out["cache"], out["dcache"], out["carry"],
                         out["tokens"], out["n_commit"], out["captures"],
@@ -380,7 +464,7 @@ def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
                 cache, dcache, carry = args
                 out = plain_step_from_carry(cfg, tparams, cache, carry,
                                             gamma=gamma, greedy=greedy,
-                                            key=kuse, moe_impl=moe_impl)
+                                            keys=keys, moe_impl=moe_impl)
                 return (out["cache"], dcache, out["carry"], out["tokens"],
                         out["n_commit"], out["captures"],
                         out["accept_mask"])
@@ -396,6 +480,25 @@ def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
                                    (cache, dcache, st.carry))
             cache, dcache, carry, tokens, n_commit, captures, accept_mask \
                 = sel
+
+            # rolling capture ring (deploy re-seed): mirror the pairs the
+            # draft cache just ingested (spec rounds run draft_extend on
+            # the previous round's carry; plain rounds ingest nothing)
+            cap_feats, cap_toks, cap_count = (st.cap_feats, st.cap_toks,
+                                              st.cap_count)
+            if cap_feats is not None:
+                w = cap_toks.shape[1]
+                bsz = cap_toks.shape[0]
+                adv = jnp.where(use_spec, st.carry.advance, 0)
+                j = jnp.arange(gp1)[None, :]
+                slot = (cap_count[:, None] + j) % w
+                slot = jnp.where(j < adv[:, None], slot, w)  # OOB → drop
+                bidx = jnp.arange(bsz)[:, None]
+                cap_feats = cap_feats.at[bidx, slot].set(
+                    st.carry.feats.astype(cap_feats.dtype), mode="drop")
+                cap_toks = cap_toks.at[bidx, slot].set(
+                    st.carry.tokens, mode="drop")
+                cap_count = cap_count + adv
 
             act = st.active
             n_act_f = jnp.maximum(n_active.astype(jnp.float32), 1.0)
@@ -434,7 +537,10 @@ def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
                 ys["sig_feats"], ys["sig_tokens"], ys["sig_counts"] = \
                     pf, pt, cnt
             st = SuperstepState(carry, active_after, gen_new, ema,
-                                jax.random.key_data(knext))
+                                st.key_data, st.sid,
+                                jnp.where(st.active, st.step_idx + 1,
+                                          st.step_idx),
+                                cap_feats, cap_toks, cap_count)
             return (cache, dcache, st), ys
 
         valid = st.active.any()

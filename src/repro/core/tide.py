@@ -2,32 +2,49 @@
 Engine, Training Signal Extractor, Acceptance Length Monitor, Adaptive
 Drafter, and Draft Model Training Engine into the full adaptive loop.
 
-On real hardware the two engines live on disjoint device sets (serving
-submesh / training submesh — DESIGN.md §2.1); in this CPU container the
-trainer runs interleaved between serving waves, which preserves every
-control decision of the paper (the asynchrony is an interface property:
-the serving engine never blocks on training, it just receives deploys).
+Decoupled architecture (paper §3.3/§5.5): serving and training are
+separate engines joined by two one-way, never-blocking seams —
+
+  * **signals out**: the engine's superstep unpack pushes packed
+    hidden-state windows into a bounded drop-oldest
+    ``core.transport.SignalChannel`` (backpressure drops oldest, never
+    stalls serving);
+  * **drafts in**: the ``training.service.TrainingService`` runs
+    ``DraftTrainer.train_cycle`` off-path — on its own device/submesh
+    when the host has one (``transport.pick_training_device``), else on
+    a background thread whose jitted train steps release the GIL and
+    fill superstep-boundary + arrival-gap slack — and publishes each
+    gate-accepted draft as a versioned ``DraftVersion`` into a
+    lock-free deploy slot that the engine polls once per superstep
+    (zero extra host↔device syncs; resident lanes' draft caches are
+    re-seeded in place from the rolling capture ring).
+
+Two training modes: ``async_train=False`` (default) calls
+``service.drain()`` at request-completion boundaries — blocking, fully
+deterministic, byte-compatible with the legacy synchronous scheduler —
+while ``async_train=True`` starts the background loop and serving never
+waits on training.  Every control decision of the paper (Algorithm 1
+collection gating, deploy-if-improved) is identical in both modes; the
+asynchrony is an interface property.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Iterable, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.ckpt import DraftDeployGate
 from repro.core import eagle
 from repro.core.adaptive import AdaptiveDrafter, LatencyProfile
-from repro.core.controller import Decision, TrainingController
-from repro.core.signals import SignalExtractor, SignalStore
-from repro.models import transformer as T
+from repro.core.controller import TrainingController
+from repro.core.signals import SignalExtractor
+from repro.core.transport import SignalChannel, pick_training_device
 from repro.models.config import ModelConfig
 from repro.serving.engine import ServingEngine
 from repro.serving.request import Request
 from repro.training.draft_trainer import DraftTrainer
+from repro.training.service import TrainingService
 
 
 @dataclasses.dataclass
@@ -41,7 +58,15 @@ class TideConfig:
     signal_window: int = 24
     n_threshold: int = 96             # samples per training cycle (tiny scale)
     train_epochs: int = 2
+    train_min_steps: int = 80         # optimizer-step floor per cycle
     seed: int = 0
+    # ---- decoupled-training subsystem
+    async_train: bool = False         # background service vs drain-at-
+    #                                   completion-boundaries (sync parity)
+    channel_capacity: int = 512       # SignalChannel bound (batches)
+    reseed_window: int = 0            # >0: re-seed resident draft caches
+    #                                   on deploy from a W-pair ring
+    gate_arrivals: bool = False       # respect trace arrival timestamps
 
 
 class TideSystem:
@@ -54,8 +79,17 @@ class TideSystem:
         if dparams is None:
             dparams = eagle.draft_init(self.dcfg,
                                        jax.random.key(tide_cfg.seed + 7))
-        self.store = SignalStore()
-        self.extractor = SignalExtractor(self.store,
+        self._dparams0 = dparams
+        train_device = (pick_training_device()
+                        if tide_cfg.async_train else None)
+        serve_device = jax.devices()[0] if train_device is not None else None
+        # the channel must be able to buffer at least one cycle's worth
+        # of windows or training starves behind the drop-oldest bound
+        self.channel = SignalChannel(
+            capacity=max(tide_cfg.channel_capacity, tide_cfg.n_threshold),
+            device=train_device)
+        self.store = self.channel     # back-compat alias (shared storage)
+        self.extractor = SignalExtractor(self.channel,
                                          window=tide_cfg.signal_window)
         self.controller = TrainingController(
             n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
@@ -63,43 +97,44 @@ class TideSystem:
         drafter = None
         if tide_cfg.adaptive_spec and profile is not None:
             drafter = AdaptiveDrafter(profile, gamma=tide_cfg.gamma)
+        self.trainer = DraftTrainer(cfg, self.dcfg, params["embed"])
+        self.gate = DraftDeployGate(dparams)
+        self.service = TrainingService(
+            self.trainer, self.gate, self.channel,
+            controller=self.controller,
+            selective=tide_cfg.selective_training,
+            n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
+            signal_window=tide_cfg.signal_window,
+            train_epochs=tide_cfg.train_epochs,
+            train_min_steps=tide_cfg.train_min_steps, seed=tide_cfg.seed,
+            device=train_device, publish_device=serve_device,
+            engine_steps_fn=lambda: self.engine.stats.steps)
+        self.events = self.service.events
         self.engine = ServingEngine(
             cfg, params, self.dcfg, dparams, gamma=tide_cfg.gamma,
             max_len=tide_cfg.max_len, batch_size=tide_cfg.batch_size,
             greedy=tide_cfg.greedy, drafter=drafter,
             controller=self.controller if tide_cfg.selective_training
             else None,
-            extractor=self.extractor, seed=tide_cfg.seed)
-        self.trainer = DraftTrainer(cfg, self.dcfg, params["embed"])
-        self.gate = DraftDeployGate(dparams)
-        self.events: List[Dict] = []
+            extractor=self.extractor, seed=tide_cfg.seed,
+            deploy_source=(self.service.poll if tide_cfg.async_train
+                           else None),
+            reseed_window=(tide_cfg.reseed_window if tide_cfg.async_train
+                           else 0),
+            gate_arrivals=tide_cfg.gate_arrivals)
         # start in collection mode so the cold draft trains immediately
         self.controller.collection_enabled = True
+        if tide_cfg.async_train:
+            self.service.start()
 
     # ----------------------------------------------------------- training
-    def _maybe_train(self):
-        need = self.store.peek_count() * self.tcfg.signal_window
-        if need < self.controller.n_threshold:
-            return
-        batches = self.store.drain()
-        baseline = self.controller.alpha_train
-        dparams, _ = self.gate.current()
-        result = self.trainer.train_cycle(dparams, batches,
-                                          epochs=self.tcfg.train_epochs,
-                                          seed=self.tcfg.seed)
-        deployed = self.gate.offer(result["dparams"], result["eval_acc"],
-                                   baseline)
-        if self.tcfg.selective_training:
-            self.controller.training_result(result["eval_acc"])
-        if deployed:
-            self.engine.deploy_draft(result["dparams"])
-        self.events.append({
-            "kind": "train_cycle", "eval_acc": result["eval_acc"],
-            "train_acc": result["train_acc"], "baseline": baseline,
-            "deployed": deployed, "steps": result["steps"],
-            "seconds": result["seconds"],
-            "engine_steps": self.engine.stats.steps,
-        })
+    def _drain_train(self, _req=None):
+        """Synchronous parity mode: run every cycle the buffered signals
+        allow, blocking serving (the legacy training schedule), then
+        deploy immediately so the next dispatch uses the new draft
+        (same pickup protocol as the async per-superstep poll)."""
+        self.service.drain()
+        self.engine._poll_deploy(self.service.poll)
 
     # ------------------------------------------------------------ serving
     def run(self, waves: Iterable[List], max_new_tokens: int = 48
@@ -107,36 +142,64 @@ class TideSystem:
         """Serve a workload stream (already grouped into waves of
         (domain, prompt) pairs). Returns all completed requests."""
         done: List[Request] = []
+        sync = not self.tcfg.async_train
         for wave in waves:
             reqs = [Request(prompt=p, domain=d,
                             max_new_tokens=max_new_tokens)
                     for d, p in wave]
             self.engine.serve_wave(reqs)
             done.extend(reqs)
-            self._maybe_train()
+            if sync:
+                self._drain_train()
         return done
 
     def run_stream(self, requests: Iterable[Request]) -> List[Request]:
-        """Serve a request stream with continuous batching: the engine
-        keeps its device state resident and refills slots in-flight;
-        the training engine is polled at request-completion boundaries,
-        so a passing draft hot-swaps in mid-stream (C2) instead of
-        waiting for a wave boundary."""
-        return self.engine.serve_stream(
-            requests, on_complete=lambda _r: self._maybe_train())
+        """Serve a request stream with continuous batching.  In sync
+        mode the training service is drained at request-completion
+        boundaries (blocking, deterministic — a passing draft hot-swaps
+        in mid-stream exactly as the legacy scheduler did); in async
+        mode serving never waits — the service trains in the
+        background and the engine picks deploys up from the lock-free
+        slot once per superstep."""
+        on_complete = (self._drain_train if not self.tcfg.async_train
+                       else None)
+        return self.engine.serve_stream(requests, on_complete=on_complete)
 
     def requests_from_trace(self, trace) -> List[Request]:
         """Materialize ``data.workloads.ArrivalEvent`` records as engine
-        requests.  Arrival *order* is preserved; arrival *times* are
-        not replayed — every request's ``arrival_t`` is its
-        materialization time, so the trace is served as a backlog and
-        the reported TTFT/latency measure queueing + drain from stream
-        start, not wall-clock arrival-relative latency (arrival-time
-        gating is a ROADMAP open item; ``ArrivalEvent.t`` is retained
-        for it)."""
+        requests.  Arrival *order* is always preserved; arrival *times*
+        (``ArrivalEvent.t`` → ``Request.arrives_at``) are replayed only
+        when ``gate_arrivals`` is set — otherwise the trace is served as
+        a backlog, as fast as slots free up."""
         return [Request(prompt=ev.prompt, domain=ev.domain,
-                        max_new_tokens=ev.max_new_tokens)
+                        max_new_tokens=ev.max_new_tokens,
+                        arrives_at=ev.t)
                 for ev in trace]
+
+    # ----------------------------------------------------------- lifecycle
+    def close(self):
+        """Stop the background training service (async mode); buffered
+        signals remain drainable.  Idempotent."""
+        self.service.close()
+
+    def reset_adaptation(self):
+        """Reset every adaptation-side component to its
+        post-construction state — draft params, deploy gate, controller,
+        channel, signal windows, serving stats — while keeping all
+        compiled functions warm.  Benchmarks use this to measure a cold
+        adaptive run without paying recompilation.  Holds the service's
+        train lock throughout, so an in-flight background cycle
+        completes (against the pre-reset gate) before anything is
+        cleared and can never publish a stale draft into the fresh
+        run."""
+        with self.service._train_lock:
+            self.channel.reset()
+            self.extractor.reset()
+            self.controller.reset()
+            self.controller.collection_enabled = True   # as in __init__
+            self.gate.reset(self._dparams0)
+            self.service.reset()
+            self.engine.reset_adaptation(self._dparams0)
 
     # ------------------------------------------------------------- stats
     def summary(self) -> Dict:
@@ -151,9 +214,13 @@ class TideSystem:
             "occupancy": st.occupancy,
             "ttft_p50_s": st.ttft_p50,
             "latency_p95_s": st.latency_p95,
+            "idle_supersteps": st.idle_supersteps,
+            "deploys": st.deploys,
+            "reseeds": st.reseeds,
             "train_cycles": len([e for e in self.events
                                  if e["kind"] == "train_cycle"]),
             "deployed": self.gate.version,
-            "signals_collected": self.store.total_added,
-            "signal_bytes": self.store.total_bytes,
+            "signals_collected": self.channel.total_added,
+            "signal_bytes": self.channel.total_bytes,
+            "signals_dropped": self.channel.dropped,
         }

@@ -31,6 +31,15 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="serve a ragged Poisson arrival trace with "
                          "in-flight slot refill instead of waves")
+    ap.add_argument("--async-train", action="store_true",
+                    help="decoupled draft training: background service, "
+                         "zero-sync versioned deploys + draft-cache "
+                         "re-seed (default: synchronous drain at "
+                         "completion boundaries)")
+    ap.add_argument("--gate-arrivals", action="store_true",
+                    help="replay trace arrival timestamps (idle "
+                         "supersteps in gaps) instead of serving the "
+                         "trace as a backlog; implies --continuous")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     args = ap.parse_args()
@@ -74,10 +83,14 @@ def main():
     print(f"  loss {losses[0]:.2f} -> {losses[-1]:.2f}")
 
     n = args.requests
+    args.continuous = args.continuous or args.gate_arrivals
     tc = TideConfig(gamma=args.gamma, batch_size=args.batch,
                     max_len=96 if not args.continuous else 160,
                     n_threshold=4, signal_window=16,
-                    adaptive_spec=not args.no_adaptive)
+                    adaptive_spec=not args.no_adaptive,
+                    async_train=args.async_train,
+                    reseed_window=32 if args.async_train else 0,
+                    gate_arrivals=args.gate_arrivals)
     profile = analytic_tpu_profile(cfg, chips=1)
     sys_ = TideSystem(cfg, params, tc, profile=profile)
     t0 = time.perf_counter()
@@ -96,10 +109,17 @@ def main():
                                 seed=1)
         sys_.run(stream.batches(args.batch),
                  max_new_tokens=args.max_new_tokens)
+    if args.async_train:
+        # finish any training the stream's signals still owe, then stop
+        # the service thread cleanly
+        sys_.service.drain()
+        sys_.close()
     s = sys_.summary()
     print(f"\n== TIDE summary ({time.perf_counter()-t0:.1f}s wall) ==")
     for k, v in s.items():
         print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+    if args.async_train:
+        print(f"  service: {sys_.service.stats()}")
     tl = sys_.engine.stats.timeline
     q = max(len(tl) // 4, 1)
     first = np.mean([x["accept_len"] for x in tl[:q]])

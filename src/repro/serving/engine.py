@@ -32,21 +32,48 @@ Architecture (slot lifecycle):
     (``TrainingController.observe_gated`` keeps the measurement sequence
     identical to the per-step loop).
 
+Decoupled draft training hooks:
+
+  * ``deploy_source`` — a callable polled once per superstep (a host
+    attribute read, zero device syncs) returning the training service's
+    latest published ``DraftVersion``; a new version hot-swaps
+    ``dparams`` for the next dispatch.
+  * ``reseed_window=W`` — the superstep state additionally maintains a
+    per-lane rolling ring of the last W (feature, token) pairs the
+    draft cache ingested; on deploy, one enqueued device op
+    (``eagle.reseed_draft_rows_from_ring``) rebuilds resident lanes'
+    trailing draft K/V under the new draft, so its acceptance gain
+    applies immediately instead of at lane retirement.
+  * ``gate_arrivals`` — the scheduler holds requests until their trace
+    arrival time; with all slots idle the engine emits *idle
+    supersteps* (no dispatch, a bounded sleep) — the slack the
+    single-device background trainer consumes.
+  * ``completion_sink`` + ring-buffered ``ServingStats`` (P² percentile
+    sketches past the retention window) bound host memory on endless
+    streams.
+
+PRNG: sampling uses per-request streams — lane keys are
+``fold_in(fold_in(base_seed, sid), step)`` with ``sid`` the request's
+admission ordinal and ``step`` its private decode-step counter, so
+*sampled* decoding is scheduling-invariant too: stream, wave, stepwise,
+and any refill timing emit byte-identical per-request tokens
+(tests/test_continuous.py::test_sampled_stream_scheduling_invariant).
+The old batch-global key chain made sampled parity hold only on
+refill-free streams.
+
 ``serve_wave`` is a thin compatibility wrapper over ``serve_stream``
 (a stream containing exactly one wave); waves smaller than the engine
 batch are padded with inert zero-budget slots.  ``superstep_rounds=0``
 selects the legacy per-step host loop, kept as the parity reference —
-with greedy decoding every scheduling policy emits byte-identical
-per-request token streams (tests/test_continuous.py,
-tests/test_superstep.py).  Under sampled decoding the two modes match
-on refill-free streams; refill timing differs by design (the stepwise
-loop refills instantly, the superstep pipeline with one-superstep lag),
-so sampled streams are only guaranteed identical per-request when
-greedy.
+every scheduling policy emits byte-identical per-request token streams
+(tests/test_continuous.py, tests/test_superstep.py).
 
 All device steps are jitted with fixed shapes; per-request raggedness is
 handled with masks (pads, finished requests), and refill prompt lengths
-are bucketed to multiples of 8 to bound recompilation.
+are bucketed to multiples of 8 to bound recompilation.  The live
+cache/draft-cache/superstep-state buffers are donated back to each
+dispatch (``donate_argnums``), so steady-state decode re-uses the same
+device allocations instead of re-allocating telemetry buffers per call.
 """
 from __future__ import annotations
 
@@ -67,6 +94,12 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.request import Request, inert_request
 from repro.serving.scheduler import Scheduler
+from repro.serving.stats import P2Quantile, Ring
+
+# sampling-stream id for lanes that never emit (inert padding, free
+# slots) — any fixed value works, it is only ever folded into keys whose
+# samples are discarded; kept positive (fold_in rejects negatives)
+INERT_SID = 0x7FFFFFFF
 
 
 @dataclasses.dataclass
@@ -74,21 +107,50 @@ class ServingStats:
     """Engine counters.  ``tokens_out`` counts exactly the tokens that
     survive in ``Request.generated`` after ``Request.finish()``'s budget
     truncation — the first sampled token included — so it always equals
-    the sum of emitted stream lengths."""
+    the sum of emitted stream lengths.
+
+    Host retention is bounded for endless streams: ``ttfts`` /
+    ``latencies`` / ``timeline`` are drop-oldest rings of the trailing
+    ``retain`` entries, while the percentile properties stay whole-stream
+    accurate through P² sketches (exact until the rings overflow)."""
     tokens_out: int = 0
     steps: int = 0
     spec_steps: int = 0
     dispatches: int = 0      # decode-step/superstep launches (sync points)
     refills: int = 0         # slots refilled in-flight (async, no sync)
+    idle_supersteps: int = 0  # gated-arrival gaps with nothing to dispatch
+    deploys: int = 0         # draft hot-swaps picked up from the deploy slot
+    reseeds: int = 0         # deploy-time draft-cache re-seed dispatches
     completed: int = 0
     wall_s: float = 0.0
     accept_len_sum: float = 0.0
     accept_len_n: int = 0
     lane_rounds: int = 0      # batch lanes x executed rounds
     busy_lane_rounds: int = 0  # lanes that committed >=1 token that round
-    ttfts: List[float] = dataclasses.field(default_factory=list)
-    latencies: List[float] = dataclasses.field(default_factory=list)
-    timeline: List[Dict] = dataclasses.field(default_factory=list)
+    retain: int = 4096
+    ttfts: Ring = None
+    latencies: Ring = None
+    timeline: Ring = None
+
+    def __post_init__(self):
+        if self.ttfts is None:
+            self.ttfts = Ring(self.retain)
+        if self.latencies is None:
+            self.latencies = Ring(self.retain)
+        if self.timeline is None:
+            self.timeline = Ring(self.retain)
+        self._sketches = {("ttft", 50): P2Quantile(0.50),
+                          ("lat", 50): P2Quantile(0.50),
+                          ("lat", 95): P2Quantile(0.95)}
+
+    def record_ttft(self, x: float):
+        self.ttfts.append(x)
+        self._sketches[("ttft", 50)].add(x)
+
+    def record_latency(self, x: float):
+        self.latencies.append(x)
+        self._sketches[("lat", 50)].add(x)
+        self._sketches[("lat", 95)].add(x)
 
     @property
     def accept_len(self) -> float:
@@ -104,20 +166,22 @@ class ServingStats:
         utilization continuous batching exists to maximize."""
         return self.busy_lane_rounds / max(self.lane_rounds, 1)
 
-    def _pct(self, xs: List[float], q: float) -> float:
+    def _pct(self, xs, sketch: P2Quantile, q: float) -> float:
+        if sketch.n_obs > len(xs):      # ring overflowed → whole-stream
+            return sketch.value         # P² estimate
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
     @property
     def ttft_p50(self) -> float:
-        return self._pct(self.ttfts, 50)
+        return self._pct(self.ttfts, self._sketches[("ttft", 50)], 50)
 
     @property
     def latency_p50(self) -> float:
-        return self._pct(self.latencies, 50)
+        return self._pct(self.latencies, self._sketches[("lat", 50)], 50)
 
     @property
     def latency_p95(self) -> float:
-        return self._pct(self.latencies, 95)
+        return self._pct(self.latencies, self._sketches[("lat", 95)], 95)
 
 
 # Back-compat alias (pre-continuous-batching name).
@@ -133,7 +197,13 @@ class ServingEngine:
                  extractor: Optional[SignalExtractor] = None,
                  ema: float = 0.9, seed: int = 0,
                  superstep_rounds: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 deploy_source: Optional[Callable[[], object]] = None,
+                 reseed_window: int = 0,
+                 gate_arrivals: bool = False,
+                 completion_sink: Optional[Callable[[Request], None]]
+                 = None,
+                 idle_wait_s: float = 0.005):
         self.cfg, self.dcfg = cfg, dcfg
         self.params, self.dparams = params, dparams
         self.gamma, self.max_len, self.batch = gamma, max_len, batch_size
@@ -145,13 +215,26 @@ class ServingEngine:
         self._ema = ema
         self.superstep_rounds = superstep_rounds
         self.eos_id = eos_id
+        # decoupled-training deploy slot: a callable returning the latest
+        # published DraftVersion (or None); polled once per superstep —
+        # a host attribute read, zero extra device syncs
+        self.deploy_source = deploy_source
+        self._deploy_seq = 0
+        # >0 enables deploy-time in-place re-seed of resident lanes'
+        # draft cache from the rolling capture ring (superstep mode)
+        self.reseed_window = (max(reseed_window, gamma + 2)
+                              if reseed_window else 0)
+        self.gate_arrivals = gate_arrivals
+        self.completion_sink = completion_sink
+        self.idle_wait_s = idle_wait_s
+        self._sleep = time.sleep           # injectable for tests
         self.stats = ServingStats()
-        self._key = jax.random.key(seed)
-        # refills draw from their own chain: the superstep's round chain
-        # lives on device (SuperstepState.key_data) and cannot be forked
-        # host-side without a sync, so both engine modes consume this
-        # dedicated host chain for refill first-token sampling instead
-        self._refill_key = jax.random.key(seed + 104729)
+        # constant base key for per-request sampling streams: lane keys
+        # are fold_in(fold_in(base, sid), step) with sid the request's
+        # admission ordinal — identical across scheduling policies
+        self._base_key = jax.random.key(seed)
+        self._sid_next = 0
+        self._key = jax.random.key(seed)   # legacy chain (bench probes)
         self._build_steps()
 
     # ------------------------------------------------------------ jit fns
@@ -169,16 +252,40 @@ class ServingEngine:
                                            dcache, caps, tokens, pad)
 
         @jax.jit
-        def _spec_step(params, dparams, cache, dcache, carry, key):
+        def _spec_step(params, dparams, cache, dcache, carry, keys):
             return spec.spec_decode_step(
                 cfg, dcfg, params, dparams, cache, dcache, carry,
-                gamma=gamma, greedy=self.greedy, key=key)
+                gamma=gamma, greedy=self.greedy, keys=keys)
 
         @jax.jit
-        def _plain_step(params, cache, carry, key):
+        def _plain_step(params, cache, carry, keys):
             return spec.plain_step_from_carry(cfg, params, cache, carry,
                                               gamma=gamma,
-                                              greedy=self.greedy, key=key)
+                                              greedy=self.greedy,
+                                              keys=keys)
+
+        base_key = self._base_key
+
+        @jax.jit
+        def _lane_keys(sids, steps):
+            # the per-step loop's host-side twin of the superstep's
+            # in-scan key derivation — same fold_in ops, bit-identical
+            return jax.vmap(lambda s, c: jax.random.fold_in(
+                jax.random.fold_in(base_key, s), c))(sids, steps)
+
+        self._lane_keys_fn = _lane_keys
+        # dummy per-lane keys for the jitted step signature under greedy
+        # decoding (never consumed)
+        self._null_keys = jax.random.split(jax.random.key(0), self.batch)
+
+        @jax.jit
+        def _pick_sampled(logits, sids):
+            # first-token sampling = per-request stream step 0
+            keys = _lane_keys(sids, jnp.zeros_like(sids))
+            return jax.vmap(jax.random.categorical)(keys, logits
+                                                    ).astype(jnp.int32)
+
+        self._pick_sampled_fn = _pick_sampled
 
         decay = self._ema
 
@@ -196,7 +303,7 @@ class ServingEngine:
         self._ema_fn = _ema_step
 
         def _refill_core(params, dparams, cache, dcache, toks, pad, mask,
-                         src, key):
+                         src, sids):
             """Prefill a refill batch of R new prompts and write their
             lanes into the live device state.  ``mask``/``src`` are the
             host-built (B,) lane map (padded refill rows are simply
@@ -207,8 +314,7 @@ class ServingEngine:
             if self.greedy:
                 first = pre["logits"].argmax(-1).astype(jnp.int32)
             else:
-                first = jax.random.categorical(
-                    key, pre["logits"]).astype(jnp.int32)
+                first = _pick_sampled(pre["logits"], sids)
             rdc = eagle.seed_refill_cache(dcfg, dparams, params["embed"],
                                           pre["captures"], toks, pad,
                                           self.max_len)
@@ -218,25 +324,29 @@ class ServingEngine:
             carry_r = spec.init_carry(cfg, dcfg, pre, first, gamma)
             return cache, dcache, carry_r, first
 
-        @jax.jit
+        # the live cache/draft-cache/state buffers are donated on every
+        # dispatch: the superstep, refill and re-seed ops update them
+        # in place instead of re-allocating the full serving state (and
+        # its telemetry buffers) per call
+        @functools.partial(jax.jit, donate_argnums=(2, 3, 4))
         def _refill_superstep(params, dparams, cache, dcache, state,
                               max_new, toks, pad, mask, src, budgets,
-                              key):
+                              sids):
             cache, dcache, carry_r, first = _refill_core(
                 params, dparams, cache, dcache, toks, pad, mask, src,
-                key)
+                sids)
             state = spec.refill_superstep_state(
                 state, carry_r, first, budgets, mask, src,
-                eos_id=self.eos_id)
+                eos_id=self.eos_id, sids=sids)
             max_new = jnp.where(mask, jnp.take(budgets, src), max_new)
             return cache, dcache, state, max_new, first
 
         @jax.jit
         def _refill_stepwise(params, dparams, cache, dcache, carry, toks,
-                             pad, mask, src, key):
+                             pad, mask, src, sids):
             cache, dcache, carry_r, first = _refill_core(
                 params, dparams, cache, dcache, toks, pad, mask, src,
-                key)
+                sids)
             carry = spec.scatter_carry(carry, carry_r, mask, src)
             return cache, dcache, carry, first
 
@@ -255,32 +365,88 @@ class ServingEngine:
                 eos_id=self.eos_id,
                 collect_signals=self.extractor is not None)
 
-            @jax.jit
+            @functools.partial(jax.jit, donate_argnums=(2, 3, 4))
             def _superstep(params, dparams, cache, dcache, state, max_new):
                 return ss(params, dparams, cache, dcache, state, max_new,
                           table)
 
             self._superstep_fn = _superstep
 
+        self._reseed_fn = None
+        if self.reseed_window and self.superstep_rounds > 0:
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _reseed(dparams, dcache, state):
+                return eagle.reseed_draft_rows_from_ring(
+                    dcfg, dparams, self.params["embed"], dcache,
+                    state.cap_feats, state.cap_toks, state.cap_count)
+
+            self._reseed_fn = _reseed
+
     def deploy_draft(self, dparams):
         """Hot-swap the draft (no target reload — TIDE's C2).  Under
         ``serve_stream`` the swap lands between supersteps, mid-stream.
 
-        Caveat: lanes resident at swap time keep draft-cache K/V built
-        by the *old* draft until they retire (their captures are gone,
-        so they cannot be re-seeded).  Token streams stay correct — the
+        Caveat: without a capture ring (``reseed_window=0``), lanes
+        resident at swap time keep draft-cache K/V built by the *old*
+        draft until they retire.  Token streams stay correct — the
         target verifies every draft — but those lanes' acceptance length
-        may dip until refilled, briefly muddying the acceptance-EMA.
-        Wave mode is unaffected (the draft cache is rebuilt per wave)."""
+        may dip until refilled.  With ``reseed_window>0`` the engine
+        re-seeds resident lanes' trailing draft K/V from the rolling
+        capture ring at deploy time (superstep mode), so the new draft's
+        acceptance gain applies immediately."""
         self.dparams = dparams
+
+    def _poll_deploy(self, source=None):
+        """Pick up a freshly published draft version, if any (one host
+        attribute read per superstep — the zero-sync deploy path).
+        ``source`` overrides the engine's own ``deploy_source`` — the
+        TIDE system's synchronous mode pushes through here too, so both
+        modes share one pickup protocol."""
+        source = source or self.deploy_source
+        if source is None:
+            return None
+        ver = source()
+        if ver is None or ver.seq <= self._deploy_seq:
+            return None
+        self._deploy_seq = ver.seq
+        self.dparams = ver.dparams
+        self.stats.deploys += 1
+        return ver
+
+    def reset_adaptation(self, dparams):
+        """Back to the post-construction adaptive state (draft params,
+        acceptance EMA, deploy/sid counters, stats); compiled functions
+        stay warm."""
+        self.dparams = dparams
+        self.accept_ema = 1.0
+        self._deploy_seq = 0
+        self._sid_next = 0
+        self.stats = ServingStats()
+        if self.drafter is not None:
+            self.drafter.enabled = True
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
 
-    def _next_refill_key(self):
-        self._refill_key, k = jax.random.split(self._refill_key)
-        return k
+    def _assign_sids(self, admitted):
+        """Stamp admitted requests with their sampling-stream id — the
+        engine-lifetime admission ordinal, which is identical for a
+        given request stream under every scheduling policy (FIFO pops
+        in queue order everywhere)."""
+        for _, r in admitted:
+            if r.sid is None:
+                r.sid = self._sid_next
+                self._sid_next += 1
+
+    def _idle_tick(self, wait: Optional[float]):
+        """No admissible work but the gated stream has future arrivals:
+        emit an idle superstep — no dispatch, just a bounded host sleep
+        that yields the core to the decoupled draft trainer (this slack
+        is exactly what the single-device async-training fallback
+        consumes)."""
+        self.stats.idle_supersteps += 1
+        self._sleep(min(max(wait or 0.0, 0.0), self.idle_wait_s))
 
     # -------------------------------------------------- request accounting
     def _finish(self, r: Request):
@@ -288,7 +454,7 @@ class ServingEngine:
             r.finish()
             self.stats.completed += 1
             if r.latency is not None:
-                self.stats.latencies.append(r.latency)
+                self.stats.record_latency(r.latency)
 
     def _commit_first(self, r: Request, tok: int):
         """Commit a freshly (pre)filled slot's first sampled token."""
@@ -300,7 +466,7 @@ class ServingEngine:
         r.generated.append(tok)
         if r.first_token_t is None:
             r.first_token_t = time.perf_counter()
-            self.stats.ttfts.append(r.ttft)
+            self.stats.record_ttft(r.ttft)
         self.stats.tokens_out += 1
         if self.eos_id is not None and tok == self.eos_id:
             self._finish(r)
@@ -319,7 +485,7 @@ class ServingEngine:
             toks[i, pad[i]:] = r.prompt
         toks_j, pad_j = jnp.asarray(toks), jnp.asarray(pad)
         pre = self._prefill_fn(self.params, toks_j, pad_j)
-        first = self._pick(pre["logits"])
+        first = self._pick(pre["logits"], self._slot_sids(requests))
         cache = pre["cache"]
         dcache = eagle.init_draft_cache(self.dcfg, b, self.max_len)
         dcache = self._seed_fn(self.params, self.dparams, dcache,
@@ -338,6 +504,11 @@ class ServingEngine:
         self.serve_stream(requests)
         return requests
 
+    @staticmethod
+    def _slot_sids(requests) -> np.ndarray:
+        return np.asarray([INERT_SID if (r is None or r.sid is None)
+                           else r.sid for r in requests], np.int32)
+
     def serve_stream(self, requests: Iterable[Request], *,
                      on_complete: Optional[Callable[[Request], None]] = None
                      ) -> List[Request]:
@@ -346,13 +517,21 @@ class ServingEngine:
         Pulls lazily from ``requests`` (any iterable), keeps the device
         state resident, and refills slots as requests finish.
         ``on_complete`` fires on the host once per finished request (at
-        telemetry-drain boundaries) — the TIDE system uses it to poll
-        the training controller mid-stream.  Returns the completed
-        requests in completion order."""
-        sched = Scheduler(self.batch, requests)
+        telemetry-drain boundaries) — the TIDE system's synchronous
+        training mode uses it to poll the training service.  Returns the
+        completed requests in completion order (empty when a
+        ``completion_sink`` streams them out instead)."""
+        sched = Scheduler(self.batch, requests,
+                          gate_arrivals=self.gate_arrivals,
+                          completion_sink=self.completion_sink)
         t0 = time.perf_counter()
-        if not sched.admit():
-            return []
+        while not sched.has_work():
+            wait = sched.next_arrival_in()
+            if wait is None:
+                return sched.completed
+            self._idle_tick(wait)       # gated stream not yet begun
+        admitted = sched.admit()
+        self._assign_sids(admitted)
         reqs0 = [r if r is not None else inert_request()
                  for r in sched.slots]
         cache, dcache, carry, first = self._prologue(reqs0)
@@ -376,7 +555,9 @@ class ServingEngine:
         for r in sched.release_finished():
             if on_complete is not None:
                 on_complete(r)
-        return sched.admit()
+        admitted = sched.admit()
+        self._assign_sids(admitted)
+        return admitted
 
     def _refill_arrays(self, admitted: List[Tuple[int, Request]]):
         """Host-side packing of a refill batch, shape-bucketed to bound
@@ -395,10 +576,12 @@ class ServingEngine:
         toks = np.zeros((width, plen), np.int32)
         pad = np.zeros((width,), np.int32)
         budgets = np.zeros((width,), np.int32)
+        sids = np.full((width,), INERT_SID, np.int32)
         for row, (_, r) in enumerate(admitted):
             pad[row] = plen - len(r.prompt)
             toks[row, pad[row]:] = r.prompt
             budgets[row] = r.max_new_tokens
+            sids[row] = r.sid
         toks[n:] = toks[0]
         pad[n:] = pad[0]
         mask = np.zeros((self.batch,), bool)
@@ -407,7 +590,8 @@ class ServingEngine:
             mask[slot] = True
             src[slot] = row
         return (jnp.asarray(toks), jnp.asarray(pad), jnp.asarray(mask),
-                jnp.asarray(src), jnp.asarray(budgets))
+                jnp.asarray(src), jnp.asarray(budgets),
+                jnp.asarray(sids))
 
     # ----------------------------------------------- superstep hot path
     @staticmethod
@@ -423,8 +607,10 @@ class ServingEngine:
         max_new = jnp.asarray([r.max_new_tokens for r in reqs0], jnp.int32)
         active0 = jnp.asarray([r.finish_t is None for r in reqs0], bool)
         state = spec.init_superstep_state(
-            carry, first, self._key, accept_ema=self.accept_ema,
-            eos_id=self.eos_id, active0=active0)
+            carry, first, self._base_key, accept_ema=self.accept_ema,
+            eos_id=self.eos_id, active0=active0,
+            sids=self._slot_sids(reqs0),
+            capture_window=self.reseed_window)
         # one-superstep double buffer: superstep t+1 is dispatched before
         # t's telemetry is pulled, so the D2H sync overlaps device
         # compute; refills scheduled after draining t are enqueued behind
@@ -433,6 +619,13 @@ class ServingEngine:
         pending = None
         stall = 0
         while True:
+            # zero-sync deploy pickup: one host attribute read; on a new
+            # version the swap is a reference rebind and the optional
+            # re-seed is one enqueued device op (no telemetry pull)
+            ver = self._poll_deploy()
+            if ver is not None and self._reseed_fn is not None:
+                dcache = self._reseed_fn(self.dparams, dcache, state)
+                self.stats.reseeds += 1
             dispatched = False
             if sched.has_work():
                 out = self._superstep_fn(self.params, self.dparams, cache,
@@ -448,7 +641,13 @@ class ServingEngine:
                 prev, pending = pending, None
             if prev is None:
                 if not dispatched:
-                    break
+                    wait = sched.next_arrival_in()
+                    if wait is None and not sched.more_coming():
+                        break
+                    # gated-arrival gap: no dispatch, yield to the
+                    # trainer; admission resumes via the normal
+                    # drain-then-refill path once the head arrives
+                    self._idle_tick(wait)
                 continue
             progressed = self._drain(prev, t0)
             admitted = self._retire_and_admit(sched, on_complete)
@@ -456,7 +655,7 @@ class ServingEngine:
                 args = self._refill_arrays(admitted)
                 cache, dcache, state, max_new, fdev = self._refill_ss_fn(
                     self.params, self.dparams, cache, dcache, state,
-                    max_new, *args, self._next_refill_key())
+                    max_new, *args)
                 self.stats.refills += len(admitted)
                 if pending is not None:
                     # first tokens materialize with the next telemetry
@@ -473,7 +672,6 @@ class ServingEngine:
                 raise RuntimeError(
                     "serve_stream made no progress over 5 supersteps "
                     "(device/host slot state diverged)")
-        self._key = jax.random.wrap_key_data(state.key_data)
 
     def _drain(self, rec, t0) -> bool:
         """Unpack one in-flight superstep record: replay its telemetry,
@@ -557,32 +755,46 @@ class ServingEngine:
         slots = list(sched.slots)
         active = np.array([r is not None and r.finish_t is None
                            for r in slots], bool)
+        # host-side twin of the superstep's (sid, step_idx) state: lane
+        # keys are derived per step from the engine base key, so sampled
+        # streams are per-request and scheduling-invariant
+        sids = self._slot_sids(slots)
+        steps = np.ones((b,), np.int32)
         while True:
+            self._poll_deploy()      # swap-only (no ring in this mode)
             admitted = self._retire_and_admit(sched, on_complete)
             if admitted:
                 args = self._refill_arrays(admitted)
                 cache, dcache, carry, fdev = self._refill_step_fn(
                     self.params, self.dparams, cache, dcache, carry,
-                    args[0], args[1], args[2], args[3],
-                    self._next_refill_key())
+                    args[0], args[1], args[2], args[3], args[5])
                 self.stats.refills += len(admitted)
                 first_np = np.asarray(fdev)
                 for row, (slot, req) in enumerate(admitted):
                     self._commit_first(req, int(first_np[row]))
                     active[slot] = req.finish_t is None
+                    sids[slot] = req.sid
+                    steps[slot] = 1
                 slots = list(sched.slots)
             if not active.any():
                 if sched.has_work():
                     continue     # residents all EOS'd at refill; admit more
+                if sched.more_coming():
+                    self._idle_tick(sched.next_arrival_in())
+                    continue     # gated arrivals still due
                 break
             use_spec = True
             if self.drafter is not None:
                 use_spec = self.drafter.update(int(active.sum()),
                                                self.accept_ema)
             self.stats.dispatches += 1
+            keys = (self._null_keys if self.greedy else
+                    self._lane_keys_fn(jnp.asarray(sids),
+                                       jnp.asarray(steps)))
+            steps = np.where(active, steps + 1, steps)
             if use_spec:
                 out = self._spec_fn(self.params, self.dparams, cache,
-                                    dcache, carry, self._next_key())
+                                    dcache, carry, keys)
                 cache, dcache, carry = (out["cache"], out["dcache"],
                                         out["carry"])
                 n_commit = np.asarray(out["n_commit"])
@@ -602,8 +814,7 @@ class ServingEngine:
                                  jnp.float32(ell32)))
                 self.stats.spec_steps += 1
             else:
-                out = self._plain_fn(self.params, cache, carry,
-                                     self._next_key())
+                out = self._plain_fn(self.params, cache, carry, keys)
                 cache, carry = out["cache"], out["carry"]
                 n_commit = np.ones((b,), np.int32)
                 toks_np = np.asarray(out["tokens"])
@@ -659,8 +870,7 @@ class ServingEngine:
                 "decision": decision.value, "busy_lanes": busy,
             })
 
-    def _pick(self, logits):
+    def _pick(self, logits, sids):
         if self.greedy:
             return logits.argmax(-1).astype(jnp.int32)
-        return jax.random.categorical(self._next_key(), logits
-                                      ).astype(jnp.int32)
+        return self._pick_sampled_fn(logits, jnp.asarray(sids, jnp.int32))

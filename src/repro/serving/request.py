@@ -16,10 +16,18 @@ class Request:
     domain: str = ""
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
     arrival_t: float = dataclasses.field(default_factory=time.perf_counter)
+    # trace arrival offset (seconds since stream start); admission is
+    # held until then when the scheduler runs with gate_arrivals
+    arrives_at: Optional[float] = None
     # filled by the engine
     generated: List[int] = dataclasses.field(default_factory=list)
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # engine-assigned sampling-stream id (admission ordinal): the
+    # per-request PRNG fold-in key, identical for a given stream across
+    # every scheduling policy — what makes sampled decoding
+    # scheduling-invariant
+    sid: Optional[int] = None
 
     @property
     def done(self) -> bool:

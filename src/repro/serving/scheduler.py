@@ -8,15 +8,29 @@ state without tearing it down (``ServingEngine.serve_stream``).
 
 Requests are admitted in arrival order (the queue is FIFO and is topped
 up lazily from the request iterator, so an unbounded stream never has to
-be materialized).  Arrival *timestamps* are bookkeeping only — the
-scheduler does not gate admission on wall-clock arrival times; a trace
-is replayed as fast as the engine can drain it (the goodput measurement
-of ``benchmarks/bench_continuous.py``).
+be materialized).  Two admission policies:
+
+  * **backlog** (default) — arrival timestamps are bookkeeping only; a
+    trace is replayed as fast as the engine can drain it (the goodput
+    measurement of ``benchmarks/bench_continuous.py``).
+  * **arrival gating** (``gate_arrivals=True``) — a request with
+    ``arrives_at`` set (seconds since stream start) is held back until
+    its arrival time; with all slots idle and the queue empty the
+    engine emits *idle supersteps* instead of dispatching, which is
+    exactly the slack the decoupled draft trainer consumes on
+    single-device hosts.
+
+Endless streams: by default every completed request is retained in
+``completed`` (the engine's return value).  Pass a ``completion_sink``
+callback to stream completions out instead — host retention then stays
+O(batch) no matter how long the stream runs.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import Deque, Iterable, Iterator, List, Optional, Tuple
+from typing import (Callable, Deque, Iterable, Iterator, List, Optional,
+                    Tuple)
 
 from repro.serving.request import Request
 
@@ -25,58 +39,104 @@ class Scheduler:
     """FIFO admission queue + slot occupancy for one serving engine."""
 
     def __init__(self, batch_size: int,
-                 requests: Optional[Iterable[Request]] = None):
+                 requests: Optional[Iterable[Request]] = None, *,
+                 gate_arrivals: bool = False,
+                 clock: Callable[[], float] = time.perf_counter,
+                 completion_sink: Optional[Callable[[Request], None]]
+                 = None):
         self.batch = batch_size
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._queue: Deque[Request] = deque()
         self._iter: Optional[Iterator[Request]] = (
             iter(requests) if requests is not None else None)
         self._exhausted = requests is None
+        self.gate_arrivals = gate_arrivals
+        self._clock = clock
+        self._t0 = clock()
         self.admitted = 0
         self.completed: List[Request] = []
+        self.sink = completion_sink
 
     # ------------------------------------------------------------ queue
     def submit(self, req: Request):
         self._queue.append(req)
+
+    def _now(self) -> float:
+        return self._clock() - self._t0
 
     def _pull(self) -> bool:
         """Top the queue up with one request from the iterator."""
         if self._exhausted:
             return False
         try:
-            self._queue.append(next(self._iter))
-            return True
+            req = next(self._iter)
         except StopIteration:
             self._exhausted = True
             return False
+        if self.gate_arrivals and req.arrives_at is not None:
+            # re-anchor the latency clock to the gated arrival instant
+            # (materialization time would charge queueing that the
+            # trace says hasn't happened yet)
+            req.arrival_t = self._t0 + req.arrives_at
+        self._queue.append(req)
+        return True
+
+    def _arrived(self, req: Request) -> bool:
+        if not self.gate_arrivals or req.arrives_at is None:
+            return True
+        return req.arrives_at <= self._now()
 
     def has_pending(self) -> bool:
-        return bool(self._queue) or (not self._exhausted and self._pull())
+        """A request is admissible right now (arrived, in FIFO order)."""
+        if not self._queue and not self._pull():
+            return False
+        return self._arrived(self._queue[0])
+
+    def more_coming(self) -> bool:
+        """Requests remain that are not yet admissible (future arrivals
+        or an unexhausted iterator)."""
+        return bool(self._queue) or not self._exhausted
+
+    def next_arrival_in(self) -> Optional[float]:
+        """Seconds until the head request becomes admissible; 0.0 if one
+        already is; None if the stream is exhausted."""
+        if not self._queue and not self._pull():
+            return None
+        head = self._queue[0]
+        if self._arrived(head):
+            return 0.0
+        return max(head.arrives_at - self._now(), 0.0)
 
     def has_work(self) -> bool:
-        """True while any slot is occupied or any request waits."""
+        """True while any slot is occupied or any request is admissible."""
         return any(s is not None for s in self.slots) or self.has_pending()
 
     # ------------------------------------------------------------ slots
     def release_finished(self) -> List[Request]:
         """Free every slot whose request has finished; returns them in
-        slot order (the engine records latency stats before calling)."""
+        slot order (the engine records latency stats before calling).
+        With a ``completion_sink``, completions stream to the callback
+        instead of accumulating in ``completed``."""
         freed = []
         for i, r in enumerate(self.slots):
             if r is not None and r.finish_t is not None:
                 self.slots[i] = None
-                self.completed.append(r)
+                if self.sink is not None:
+                    self.sink(r)
+                else:
+                    self.completed.append(r)
                 freed.append(r)
         return freed
 
     def admit(self) -> List[Tuple[int, Request]]:
-        """Fill free slots from the pending queue (FIFO).  Returns the
-        (slot, request) assignments made — the engine's refill batch."""
+        """Fill free slots from the pending queue (FIFO; gated on
+        arrival time when enabled).  Returns the (slot, request)
+        assignments made — the engine's refill batch."""
         out = []
         for i, r in enumerate(self.slots):
             if r is not None:
                 continue
-            if not self._queue and not self._pull():
+            if not self.has_pending():
                 break
             req = self._queue.popleft()
             self.slots[i] = req

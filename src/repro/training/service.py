@@ -1,0 +1,205 @@
+"""Decoupled draft-training service (paper §3.3 + §5.5).
+
+Runs ``DraftTrainer.train_cycle`` *off the serving path*: signals
+arrive through a bounded ``core.transport.SignalChannel``, cycles run
+either on a background thread (single-device hosts — jitted train steps
+release the GIL, so training compute fills superstep-boundary and
+arrival-gap slack) or on a dedicated training device/submesh
+(``transport.pick_training_device``), and every accepted draft is
+published as a versioned ``DraftVersion`` into a lock-free
+"latest deploy" slot.  The serving engine polls that slot once per
+superstep — a Python attribute read, zero extra host↔device syncs —
+and hot-swaps the draft in-graph on the next dispatch.
+
+The ``TrainingController`` (Algorithm 1) still decides *whether* a
+cycle should run (collection gating, deploy-if-improved); the service
+only decides that training never blocks serving.  ``drain()`` is the
+deterministic parity mode: called at request-completion boundaries with
+the thread disabled, it reproduces the legacy synchronous
+``TideSystem`` training schedule byte-for-byte.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+from repro.checkpoint.ckpt import DraftDeployGate
+from repro.core.controller import TrainingController
+from repro.core.transport import SignalChannel
+from repro.training.draft_trainer import DraftTrainer
+
+
+class DraftVersion(NamedTuple):
+    """One published draft deploy: monotonic sequence number (the deploy
+    gate's version counter), the parameters, and the eval acceptance
+    that won the gate."""
+    seq: int
+    dparams: Any
+    eval_acc: float
+
+
+class TrainingService:
+    """Asynchronous draft-training loop around a ``DraftTrainer``.
+
+    Thread-safety: ``train_once``/``drain`` are serialized by an
+    internal lock (the background loop and an explicit ``drain`` can
+    never run a cycle concurrently).  The deploy slot is a single
+    attribute published after the gate accepts — readers (the serving
+    engine, once per superstep) see either the old or the new
+    ``DraftVersion``, never a partial one."""
+
+    def __init__(self, trainer: DraftTrainer, gate: DraftDeployGate,
+                 channel: SignalChannel, *,
+                 controller: Optional[TrainingController] = None,
+                 selective: bool = True,
+                 n_threshold: int = 2048, signal_window: int = 24,
+                 train_epochs: int = 2, train_min_steps: int = 80,
+                 seed: int = 0,
+                 device=None, publish_device=None,
+                 engine_steps_fn: Optional[Callable[[], int]] = None,
+                 poll_s: float = 0.05):
+        self.trainer = trainer
+        self.gate = gate
+        self.channel = channel
+        self.controller = controller
+        self.selective = selective
+        self.n_threshold = n_threshold
+        self.signal_window = signal_window
+        self.train_epochs = train_epochs
+        self.train_min_steps = train_min_steps
+        self.seed = seed
+        self.device = device
+        self.publish_device = publish_device
+        self.engine_steps_fn = engine_steps_fn or (lambda: -1)
+        self.poll_s = poll_s
+        self.events: List[Dict] = []
+        self.cycles = 0
+        self._latest: Optional[DraftVersion] = None   # lock-free slot
+        # reentrant: TideSystem.reset_adaptation holds it across a
+        # compound reset that includes this service's own reset()
+        self._train_lock = threading.RLock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        capacity = getattr(channel, "capacity", None)
+        if capacity is not None and capacity < self._min_batches():
+            raise ValueError(
+                f"SignalChannel capacity {capacity} can never buffer the "
+                f"{self._min_batches()} windows one train cycle needs "
+                f"(n_threshold={n_threshold} / signal_window="
+                f"{signal_window}); training would silently starve")
+
+    # ------------------------------------------------------------ control
+    def should_train(self) -> bool:
+        """The *whether* gate: enough signal windows buffered for one
+        cycle (same trigger arithmetic as the legacy synchronous
+        ``TideSystem._maybe_train``)."""
+        return (self.channel.peek_count() * self.signal_window
+                >= self.n_threshold)
+
+    def _min_batches(self) -> int:
+        return max(-(-self.n_threshold // max(self.signal_window, 1)), 1)
+
+    # ----------------------------------------------------------- training
+    def train_once(self) -> bool:
+        """Run one training cycle if the gate says so; returns whether a
+        cycle ran.  Safe from any thread."""
+        with self._train_lock:
+            if not self.should_train():
+                return False
+            batches = self.channel.drain()
+            baseline = (self.controller.alpha_train
+                        if self.controller is not None else 0.0)
+            dparams, _ = self.gate.current()
+            ctx = contextlib.nullcontext()
+            if self.device is not None:
+                import jax
+                ctx = jax.default_device(self.device)
+            with ctx:
+                result = self.trainer.train_cycle(
+                    dparams, batches, epochs=self.train_epochs,
+                    min_steps=self.train_min_steps, seed=self.seed)
+            deployed = self.gate.offer(result["dparams"],
+                                       result["eval_acc"], baseline)
+            if self.selective and self.controller is not None:
+                self.controller.training_result(result["eval_acc"])
+            if deployed:
+                dp = result["dparams"]
+                if self.publish_device is not None:
+                    # ship the accepted draft back to the serving device
+                    # now, asynchronously — the engine's hot-swap is then
+                    # a pure reference swap with no transfer on-path
+                    import jax
+                    dp = jax.device_put(dp, self.publish_device)
+                self._latest = DraftVersion(self.gate.version, dp,
+                                            result["eval_acc"])
+            self.events.append({
+                "kind": "train_cycle", "eval_acc": result["eval_acc"],
+                "train_acc": result["train_acc"], "baseline": baseline,
+                "deployed": deployed, "steps": result["steps"],
+                "seconds": result["seconds"],
+                "engine_steps": self.engine_steps_fn(),
+            })
+            self.cycles += 1
+            return True
+
+    def drain(self) -> int:
+        """Deterministic parity mode: synchronously run every cycle the
+        buffered signals allow (the legacy blocking-training schedule).
+        Returns the number of cycles run."""
+        n = 0
+        while self.train_once():
+            n += 1
+        return n
+
+    def poll(self) -> Optional[DraftVersion]:
+        """Lock-free read of the latest accepted deploy (or None)."""
+        return self._latest
+
+    def reset(self):
+        """Clear the deploy slot and cycle history (waits for any
+        in-flight cycle; the background thread keeps running)."""
+        with self._train_lock:
+            self._latest = None
+            self.events.clear()
+            self.cycles = 0
+
+    # ------------------------------------------------------------- thread
+    def start(self):
+        """Start (or restart) the background training loop."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name="tide-draft-training", daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            self.channel.wait(self._min_batches(), timeout=self.poll_s)
+            if self._stop.is_set():
+                break
+            if self.should_train():
+                self.train_once()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def close(self, timeout: float = 30.0):
+        """Stop the loop and join the thread.  Idempotent; the channel
+        is closed (waking any blocked waiter) but its buffered signals
+        remain drainable."""
+        self._stop.set()
+        self.channel.close()
+        t, self._thread = self._thread, None
+        if t is not None and t.is_alive():
+            t.join(timeout=timeout)
+            if t.is_alive():
+                raise RuntimeError("training service thread failed to "
+                                   f"stop within {timeout}s")
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict:
+        return {"cycles": self.cycles, "deploy_version": self.gate.version,
+                "running": self.running, **self.channel.stats()}

@@ -42,13 +42,14 @@ def pretrained():
 
 
 def _engine(pretrained, rounds, *, batch=4, extractor=True, eos_id=None,
-            max_len=96):
+            max_len=96, greedy=True):
     cfg, params, dcfg, dparams, domains = pretrained
     store = SignalStore()
     ext = SignalExtractor(store, window=16) if extractor else None
     eng = ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
                         max_len=max_len, gamma=3, extractor=ext, seed=5,
-                        superstep_rounds=rounds, eos_id=eos_id)
+                        greedy=greedy, superstep_rounds=rounds,
+                        eos_id=eos_id)
     return eng, store
 
 
@@ -119,6 +120,33 @@ def test_refill_stream_parity_and_alone(pretrained):
         e_alone.serve_wave([solo])
         assert solo.generated == req.generated, \
             "refilled slot diverged from serving the request alone"
+
+
+def test_sampled_stream_scheduling_invariant(pretrained):
+    """Per-request PRNG streams (fold-in on the admission ordinal) make
+    *sampled* decoding scheduling-invariant too: a ragged stream with
+    in-flight refills must emit byte-identical per-request streams
+    through the superstep engine, the per-step reference loop, and
+    wave-chunked serving — including across the refill-timing skew that
+    previously forced the sampled-parity caveat."""
+    budgets = (5, 18, 7, 12, 16, 4, 9, 20, 6, 11)
+    r_ss = _requests(pretrained, budgets)
+    e_ss, _ = _engine(pretrained, 8, greedy=False)
+    e_ss.serve_stream(list(r_ss))
+    assert e_ss.stats.refills == len(budgets) - e_ss.batch
+
+    r_st = _requests(pretrained, budgets)
+    e_st, _ = _engine(pretrained, 0, greedy=False)
+    e_st.serve_stream(list(r_st))
+    assert [r.generated for r in r_st] == [r.generated for r in r_ss], \
+        "sampled superstep stream diverged from the per-step loop"
+
+    r_wv = _requests(pretrained, budgets)
+    e_wv, _ = _engine(pretrained, 8, greedy=False)
+    for i in range(0, len(r_wv), 4):
+        e_wv.serve_wave(r_wv[i:i + 4])
+    assert [r.generated for r in r_wv] == [r.generated for r in r_ss], \
+        "sampled streams depend on scheduling (wave vs continuous)"
 
 
 def test_stream_stats_and_latency(pretrained):

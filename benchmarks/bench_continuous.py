@@ -31,6 +31,35 @@ Gates (CI):
     1.2x smoke / 1.3x full run; min-of-N damps shared-CPU load spikes,
   * continuous syncs/token <= wave syncs/token (refill must not
     reintroduce per-step host syncs) — deterministic.
+
+Long-prompt chunked-refill scenario (second half): a bimodal
+*prompt-length* trace (short-chat bulk + one long prompt per burst)
+served by ``serve_stream`` with one-shot refill vs chunked refill
+(``prefill_chunk``).  One-shot, every long prompt stalls all resident
+decode lanes for its full prefill and every co-admitted short prompt
+pays the long prompt's padded width; chunked, prefill proceeds one
+bounded chunk per superstep gap in per-width pipelines whose cohort
+commits together.  Gates:
+  * chunked == one-shot byte-identical per-request streams
+    (greedy) — deterministic,
+  * max uninterruptible prefill-op width: chunked <= chunk while
+    one-shot >= the long-prompt tail (the resident-lane stall bound,
+    measured in prompt tokens over executed dispatch gaps, not wall
+    time) — deterministic,
+  * prefill row-token work: chunked <= 0.7x one-shot (per-width
+    pipelines must not pad short prompts to long-tail widths) —
+    deterministic,
+  * goodput >= 1.15x one-shot, on the deterministic device-work model:
+    tokens per row-token work unit, work = prefill row-tokens +
+    executed decode rounds x B x (gamma+1) verify positions.  On this
+    2-vCPU serial host a refill stall costs the same wall whether it
+    runs monolithic or chunked (the device is work-conserving and
+    masked lanes are not free), so raw wall cannot surface the stall
+    that parallel batch lanes absorb — the work model is the
+    load-independent form of the claim, the same device-work modeling
+    the repo's speedup benches use.  Raw min-wall-of-N goodput is
+    emitted alongside and gated only as a loose sanity guard (>= 0.5x:
+    identical workloads measure 0.8-2.5x apart on this shared host).
 """
 from __future__ import annotations
 
@@ -39,7 +68,8 @@ import numpy as np
 from benchmarks.common import demo_target, emit, trained_draft
 
 
-def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len):
+def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len,
+                  prefill_chunk=0):
     from repro.core.signals import SignalExtractor, SignalStore
     from repro.serving.engine import ServingEngine
 
@@ -47,7 +77,8 @@ def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len):
     ext = SignalExtractor(store, window=32)
     return ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
                          max_len=max_len, gamma=3, extractor=ext, seed=11,
-                         superstep_rounds=rounds)
+                         superstep_rounds=rounds,
+                         prefill_chunk=prefill_chunk)
 
 
 def _requests(trace):
@@ -66,6 +97,98 @@ def _serve_waves(eng, reqs, batch):
 def _serve_stream(eng, reqs):
     eng.serve_stream(reqs)
     return reqs              # original arrival order (not completion order)
+
+
+def _long_prompt_scenario(cfg, params, dcfg, dparams, domains,
+                          smoke: bool):
+    """Chunked vs one-shot refill prefill on a bimodal prompt trace."""
+    from repro.data.workloads import arrival_trace
+
+    batch, max_len, chunk, gamma = 4, 160, 32, 3
+    n_req = 16 if smoke else 24
+    # bursty co-arrivals: every burst mixes one long prompt with
+    # short-chat requests — the mix where one-shot refill both stalls
+    # resident lanes for the full long prefill AND pads every
+    # co-admitted short prompt to the long prompt's width; narrow
+    # budgets keep bursts retiring together so refills stay co-batched
+    trace = arrival_trace(domains, n_req, mode="bursty", burst_size=batch,
+                          max_new_range=(6, 12), prompt_len=(8, 14),
+                          long_prompt_period=batch,
+                          long_prompt_range=(72, 96), seed=13)
+    long_tail = max(len(ev.prompt) for ev in trace)
+    assert long_tail >= 72, "trace lost its long-prompt tail"
+
+    def work_units(st):
+        # deterministic device-work model: prompt row-tokens prefilled
+        # + verify positions decoded (executed rounds x lanes x (γ+1))
+        return st.prefill_row_tokens + st.steps * batch * (gamma + 1)
+
+    streams, results = {}, {}
+    for name, pc in (("oneshot", 0), ("chunked", chunk)):
+        eng = _build_engine(cfg, params, dcfg, dparams, 8, batch=batch,
+                            max_len=max_len, prefill_chunk=pc)
+        _serve_stream(eng, _requests(trace))     # warm every shape
+        best_wall, st = float("inf"), None
+        for _ in range(3):
+            eng.stats = type(eng.stats)()
+            reqs = _serve_stream(eng, _requests(trace))
+            if eng.stats.wall_s < best_wall:
+                best_wall, st = eng.stats.wall_s, eng.stats
+        streams[name] = [list(r.generated) for r in reqs]
+        tokens = sum(len(r.generated) for r in reqs)
+        assert tokens == st.tokens_out
+        results[name] = (tokens / best_wall, tokens / work_units(st), st)
+        emit(f"continuous/longprompt/{name}", 0.0,
+             f"tok_per_s={tokens / best_wall:.0f};"
+             f"tok_per_kwork={1e3 * tokens / work_units(st):.1f};"
+             f"max_prefill_op_w={st.prefill_op_width.max:.0f};"
+             f"max_gap_prefill_tokens={st.prefill_gap_tokens.max:.0f};"
+             f"prefill_row_tokens={st.prefill_row_tokens};"
+             f"rounds={st.steps};chunks={st.prefill_chunks};"
+             f"occupancy={st.occupancy:.3f}")
+
+    if streams["chunked"] != streams["oneshot"]:
+        raise AssertionError(
+            "chunked refill per-request streams diverged from one-shot "
+            "(byte-parity gate)")
+    wall_one, gp_one, st_one = results["oneshot"]
+    wall_chk, gp_chk, st_chk = results["chunked"]
+    emit("continuous/longprompt/ratio", 0.0,
+         f"goodput_gain={gp_chk / gp_one:.2f}x;bar=1.15x;"
+         f"wall_ratio={wall_chk / wall_one:.2f}x;"
+         f"stall_bound={st_chk.prefill_op_width.max:.0f}<={chunk};"
+         f"oneshot_stall={st_one.prefill_op_width.max:.0f};"
+         f"row_tokens={st_one.prefill_row_tokens}->"
+         f"{st_chk.prefill_row_tokens}")
+    # deterministic resident-lane stall bound: the longest prefill op a
+    # decode gap ever waits on is one chunk, vs the full long-tail
+    # prompt one-shot
+    if st_chk.prefill_op_width.max > chunk:
+        raise AssertionError(
+            f"chunked prefill dispatched an op "
+            f"{st_chk.prefill_op_width.max:.0f} wide — stall not "
+            f"bounded by the {chunk}-token chunk")
+    if st_one.prefill_op_width.max < long_tail:
+        raise AssertionError(
+            "one-shot baseline lost its long-prompt stall "
+            f"({st_one.prefill_op_width.max:.0f} < {long_tail})")
+    if st_chk.prefill_row_tokens > 0.7 * st_one.prefill_row_tokens:
+        raise AssertionError(
+            "chunked refill prefill work not under 0.7x one-shot "
+            f"({st_chk.prefill_row_tokens} vs "
+            f"{st_one.prefill_row_tokens}) — width grouping broken")
+    if gp_chk < 1.15 * gp_one:
+        raise AssertionError(
+            f"chunked refill modeled goodput {1e3 * gp_chk:.1f} not "
+            f">= 1.15x one-shot {1e3 * gp_one:.1f} tok/kwork on the "
+            "long-prompt trace")
+    # loose sanity guard only: identical workloads measure 0.8-2.5x
+    # apart on this shared 2-vCPU host, so anything tighter flakes —
+    # the load-bearing gates above are the deterministic ones
+    if wall_chk < 0.5 * wall_one:
+        raise AssertionError(
+            f"chunked refill wall goodput regressed: {wall_chk:.0f} "
+            f"tok/s < 0.5x one-shot {wall_one:.0f} tok/s")
 
 
 def run(smoke: bool = False):
@@ -87,7 +210,10 @@ def run(smoke: bool = False):
         "stepwise": _serve_stream,
     }
     rounds = {"wave": 8, "continuous": 8, "stepwise": 0}
-    repeats = {"wave": 2 if smoke else 3, "continuous": 2 if smoke else 3,
+    # min-of-N needs N=4 even in smoke: this host's wall noise spans
+    # 0.8-2.5x on identical workloads, and too few samples leave the
+    # min itself straddling the bar
+    repeats = {"wave": 4, "continuous": 4,
                "stepwise": 1}     # stepwise is the parity oracle only
 
     streams, results = {}, {}
@@ -146,6 +272,8 @@ def run(smoke: bool = False):
         raise AssertionError(
             f"continuous batching regressed host syncs per token: "
             f"{sync_wave:.3f} -> {sync_cont:.3f}")
+
+    _long_prompt_scenario(cfg, params, dcfg, dparams, domains, smoke)
 
 
 if __name__ == "__main__":

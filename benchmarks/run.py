@@ -44,9 +44,11 @@ MODULES = [
 
 
 # Fast CI perf-smoke gate: the serving hot-loop overhead bench (reduced
-# shapes) + the continuous-batching goodput/parity gate + the decoupled
-# async-training gate (>=1.2x serving vs blocking training + drain
-# parity) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
+# shapes) + the continuous-batching goodput/parity gate (including the
+# long-prompt chunked-refill scenario: byte parity, the deterministic
+# max-prefill-op-width stall bound, and the modeled-goodput gate) + the
+# decoupled async-training gate (>=1.2x serving vs blocking training +
+# drain parity) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
     ("continuous", "benchmarks.bench_continuous"),

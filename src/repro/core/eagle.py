@@ -112,10 +112,23 @@ def _head(dcfg, dparams, x):
 
 def _fuse_inputs(dcfg, dparams, feats, tok_emb):
     """feats: (B,T,3D) target captures (or (B,T,D) self features pre-fused);
-    tok_emb: (B,T,D). Returns fc([fused; emb])."""
+    tok_emb: (B,T,D). Returns fc([fused; emb]).
+
+    The 3D→D fuse is computed as the sum of three D-contraction matmuls
+    (one per capture level) instead of a single 3D-contraction dot: XLA's
+    CPU tiling of a 3D-wide contraction depends on the row count, which
+    would make the fused features — and so the draft K/V — differ in ulps
+    between a chunked prompt ingestion and a one-shot one.  Splitting at
+    the capture-level boundary keeps every contraction width-stable, so
+    chunked draft seeding is bit-identical to one-shot seeding
+    (tests/test_chunked_prefill.py pins this)."""
     dt = tok_emb.dtype
-    if feats.shape[-1] == 3 * dcfg.d_model:
-        fused = feats.astype(dt) @ dparams["fuse"].astype(dt)
+    d = dcfg.d_model
+    if feats.shape[-1] == 3 * d:
+        w = dparams["fuse"].astype(dt)
+        f = feats.astype(dt)
+        fused = sum(f[..., i * d:(i + 1) * d] @ w[i * d:(i + 1) * d]
+                    for i in range(3))
     else:
         fused = feats.astype(dt)
     x = jnp.concatenate([fused, tok_emb], axis=-1)
@@ -239,6 +252,27 @@ def seed_prompt_pairs(dcfg: ModelConfig, dparams, embed_params, dcache,
         dcfg, dparams, embed_params, dcache,
         captures[:, :s - 1], tokens[:, 1:],
         jnp.full((b,), s - 1, jnp.int32))
+    return dcache
+
+
+def seed_chunk_pairs(dcfg: ModelConfig, dparams, embed_params, dcache,
+                     captures, next_tokens, advance):
+    """One chunk of the draft 'prefill': ingest the pairs
+    (captures[:, j], next_tokens[:, j]) for j < advance.
+
+    The chunked-refill pipeline splits ``seed_prompt_pairs`` across
+    prompt chunks: chunk k passes its own target captures plus the
+    *lookahead-shifted* token columns (token i+1 for capture i — the
+    host slices them from the full prompt, so the chunk boundary never
+    needs a device-side shift).  ``advance`` is ``chunk_width`` for
+    interior chunks and ``chunk_width - 1`` for the final chunk (pair
+    S-1 does not exist); trailing columns are scratch and get
+    overwritten, exactly as in ``draft_extend``.  The caller must have
+    set ``dcache['pad']`` before the first chunk (``seed_prompt_pairs``
+    does the same).  Chunked == one-shot seeding is bitwise on the
+    valid cache region (see ``_fuse_inputs``)."""
+    _, _, dcache = draft_extend(dcfg, dparams, embed_params, dcache,
+                                captures, next_tokens, advance)
     return dcache
 
 

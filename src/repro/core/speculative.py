@@ -105,17 +105,26 @@ class SpecCarry(NamedTuple):
     advance: jnp.ndarray    # (B,)
 
 
+def init_carry_from_caps(last_caps, first_token,
+                         gamma: int = 3) -> SpecCarry:
+    """Carry after target prefill, from the capture of the last prompt
+    position: one pending pair (last_caps, first_token).  The chunked
+    refill pipeline builds its commit carry from the final chunk's last
+    capture column through here — same recipe as the one-shot path."""
+    b = first_token.shape[0]
+    feats = jnp.zeros((b, gamma + 1, last_caps.shape[-1]), last_caps.dtype
+                      ).at[:, 0].set(last_caps)
+    tokens = jnp.zeros((b, gamma + 1), jnp.int32
+                       ).at[:, 0].set(first_token.astype(jnp.int32))
+    return SpecCarry(feats, tokens, jnp.ones((b,), jnp.int32))
+
+
 def init_carry(cfg: ModelConfig, dcfg: ModelConfig, prefill_out,
                first_token, gamma: int = 3) -> SpecCarry:
     """Carry after target prefill: one pending pair — the capture of the
     last prompt position with the first sampled token."""
-    b = first_token.shape[0]
-    feat = prefill_out["captures"][:, -1]
-    feats = jnp.zeros((b, gamma + 1, feat.shape[-1]), feat.dtype
-                      ).at[:, 0].set(feat)
-    tokens = jnp.zeros((b, gamma + 1), jnp.int32
-                       ).at[:, 0].set(first_token.astype(jnp.int32))
-    return SpecCarry(feats, tokens, jnp.ones((b,), jnp.int32))
+    return init_carry_from_caps(prefill_out["captures"][:, -1], first_token,
+                                gamma)
 
 
 def seed_draft_cache(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
@@ -328,6 +337,28 @@ def init_superstep_state(carry: SpecCarry, first_token, key, *,
 # the masked row-replace primitive lives in eagle (this module already
 # depends on it); re-exported here for the target-cache/carry scatters
 scatter_rows = eagle.scatter_batch_rows
+
+
+def pad_target_cache(cache, ref):
+    """Zero-pad a staging prefill cache (allocated at the refill's
+    padded prompt width) out to the live cache geometry described by the
+    abstract pytree ``ref`` (``transformer.cache_abstract``).
+
+    The chunked-refill pipeline keeps its staging cache at prompt width
+    so continuation chunks attend over exactly the key width the
+    one-shot prefill reduces over — attention reductions are *not*
+    bitwise stable across buffer widths once enough keys are live, so
+    attending over a max_len buffer mid-prefill would break the
+    chunked == one-shot byte-parity invariant.  The pad to max_len
+    happens here, at commit time, exactly where the one-shot path's
+    ``_place`` pads — zero padding is exact."""
+    def pad(leaf, r):
+        pads = [(0, rs - ls) for ls, rs in zip(leaf.shape, r.shape)]
+        if any(hi for _, hi in pads):
+            return jnp.pad(leaf, pads)
+        return leaf
+
+    return jax.tree.map(pad, cache, ref)
 
 
 def scatter_target_cache(cache, new, mask, src):

@@ -67,6 +67,10 @@ class TideConfig:
     reseed_window: int = 0            # >0: re-seed resident draft caches
     #                                   on deploy from a W-pair ring
     gate_arrivals: bool = False       # respect trace arrival timestamps
+    prefill_chunk: int = 0            # >0: chunked refill prefill (bound
+    #                                   the long-prompt refill stall to
+    #                                   one chunk per superstep gap);
+    #                                   applies to waves and streams alike
 
 
 class TideSystem:
@@ -121,7 +125,8 @@ class TideSystem:
                            else None),
             reseed_window=(tide_cfg.reseed_window if tide_cfg.async_train
                            else 0),
-            gate_arrivals=tide_cfg.gate_arrivals)
+            gate_arrivals=tide_cfg.gate_arrivals,
+            prefill_chunk=tide_cfg.prefill_chunk)
         # start in collection mode so the cold draft trains immediately
         self.controller.collection_enabled = True
         if tide_cfg.async_train:

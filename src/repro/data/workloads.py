@@ -128,6 +128,9 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
                   long_frac: float = 0.0,
                   long_range: Tuple[int, int] = (80, 96),
                   prompt_len: Optional[Tuple[int, int]] = None,
+                  long_prompt_frac: float = 0.0,
+                  long_prompt_range: Tuple[int, int] = (64, 96),
+                  long_prompt_period: int = 0,
                   schedule: Optional[List[Phase]] = None,
                   seed: int = 0) -> List[ArrivalEvent]:
     """Generate a request arrival trace with ragged budgets and prompts.
@@ -144,7 +147,15 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
     instead — the bimodal short-chat / long-tail budget mix of real
     request streams (and the degenerate case for run-to-completion
     waves: one long member convoys the whole batch).  Prompt lengths
-    come from each domain's ``prompt_len`` unless overridden.
+    come from each domain's ``prompt_len`` unless overridden; with
+    probability ``long_prompt_frac`` — or deterministically every
+    ``long_prompt_period``-th request (periods align long prompts with
+    bursts: ``long_prompt_period == burst_size`` puts exactly one long
+    prompt in every burst, the worst co-admission mix) — a prompt is
+    drawn from ``long_prompt_range`` instead: the bimodal
+    *prompt*-length mix (RAG contexts, pasted documents) whose long
+    tail stalls resident decode lanes for the whole refill prefill
+    unless the engine chunks it (``ServingEngine(prefill_chunk=...)``).
     Timestamps are bookkeeping for latency metrics — the serving engine
     admits in trace order, as fast as slots free up.
     """
@@ -167,7 +178,16 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
         else:
             raise ValueError(f"unknown arrival mode {mode!r}")
         dom = domains[name]
-        if prompt_len is not None:
+        if long_prompt_period:
+            is_long = i % long_prompt_period == 0
+        else:
+            is_long = (long_prompt_frac > 0
+                       and rng.random() < long_prompt_frac)
+        if is_long:
+            length = int(rng.integers(long_prompt_range[0],
+                                      long_prompt_range[1] + 1))
+            prompt = dom.sample(rng, length)
+        elif prompt_len is not None:
             length = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
             prompt = dom.sample(rng, length)
         else:

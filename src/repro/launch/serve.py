@@ -40,6 +40,11 @@ def main():
                     help="replay trace arrival timestamps (idle "
                          "supersteps in gaps) instead of serving the "
                          "trace as a backlog; implies --continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked refill prefill width (multiple of 8; "
+                         "0 = one-shot): bounds the stall a long prompt "
+                         "injects into resident decode lanes to one "
+                         "chunk per superstep gap")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     args = ap.parse_args()
@@ -90,7 +95,8 @@ def main():
                     adaptive_spec=not args.no_adaptive,
                     async_train=args.async_train,
                     reseed_window=32 if args.async_train else 0,
-                    gate_arrivals=args.gate_arrivals)
+                    gate_arrivals=args.gate_arrivals,
+                    prefill_chunk=args.prefill_chunk)
     profile = analytic_tpu_profile(cfg, chips=1)
     sys_ = TideSystem(cfg, params, tc, profile=profile)
     t0 = time.perf_counter()

@@ -22,6 +22,45 @@ Architecture (slot lifecycle):
     (position, budget, EOS flag, acceptance bookkeeping) is reset
     in-graph (``speculative.refill_superstep_state``).  Refill batches
     over all slots freed in the same gap.
+  * **Chunked refill prefill** (``prefill_chunk=C`` > 0, multiple of 8):
+    a one-shot refill stalls every resident decode lane for the full
+    prompt width — the long-tail-prompt convoy effect.  Chunked, each
+    refill group becomes a **chunk pipeline**: the prompt is prefilled
+    into a *staging* cache pair in fixed-width chunks (a ragged first
+    chunk <= C, then exactly C), one chunk per inter-superstep gap, so
+    the longest uninterruptible prefill op is C wide no matter the
+    prompt.  The first chunk is a plain prefill; continuations extend
+    the staging caches through the decode path and feed the draft
+    seeding the same chunk's (capture, next-token) pairs
+    (``eagle.seed_chunk_pairs``) — bitwise-identical to the one-shot
+    prefill on the valid cache region and emitted logits
+    (tests/test_chunked_prefill.py).  The final chunk is dispatched
+    fused with its commit: sample the first token, scatter the staging
+    lanes into the live state and reset the lanes' carry — the same op
+    shape as a one-shot refill, with first tokens riding the next
+    telemetry pull.  Admission is chunk-aware
+    (``Scheduler.refill_groups``): co-admitted prompts split into
+    per-width pipelines whose chunks interleave through the same gaps,
+    so a short prompt neither pays a long prompt's padding nor rides
+    its multi-chunk pipeline — but the pipelines of one admission batch
+    form a *cohort* that commits together (when its slowest member
+    finishes), so the lanes of one admission activate in the same gap
+    and decode rounds stay as dense as a one-shot refill's; with no
+    resident lane decoding (stream prologue, drained-empty supersteps)
+    chunks run back-to-back to the next commit instead of trickling
+    one per empty gap.  Mid-prefill lanes stay inert
+    for decode masks and the reseed ring until their commit; stats count
+    them separately (``prefill_lane_rounds`` — excluded from the
+    occupancy denominator) and the TTFT clock starts at *admission*
+    (``Request.admit_t``), so chunked prefill is charged for every
+    chunk.  The stream prologue is just the pipeline path too: with
+    chunking on, lanes start inert and the initial batch flows through
+    the same pipelines (``serve_wave`` callers inherit chunking
+    unchanged).  Deterministic stall metrics:
+    ``stats.prefill_op_width.max`` (longest uninterruptible prefill op)
+    and ``stats.prefill_gap_tokens`` / ``prefill_row_tokens``
+    (per-gap / total prefill row-tokens), gated in
+    ``benchmarks/bench_continuous.py`` next to the wall-clock goodput.
   * Pipelining is preserved: superstep t+1 is dispatched *before*
     superstep t's telemetry is pulled to the host; completions observed
     in t schedule refills that are enqueued behind t+1 and take effect
@@ -94,7 +133,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.request import Request, inert_request
 from repro.serving.scheduler import Scheduler
-from repro.serving.stats import P2Quantile, Ring
+from repro.serving.stats import P2Quantile, Peak, Ring
 
 # sampling-stream id for lanes that never emit (inert padding, free
 # slots) — any fixed value works, it is only ever folded into keys whose
@@ -127,6 +166,15 @@ class ServingStats:
     accept_len_n: int = 0
     lane_rounds: int = 0      # batch lanes x executed rounds
     busy_lane_rounds: int = 0  # lanes that committed >=1 token that round
+    # ---- chunked-prefill / refill-stall accounting (deterministic:
+    # counted in prompt tokens and executed rounds, not wall time)
+    prefill_chunks: int = 0       # chunk-pipeline dispatches
+    prefill_lane_rounds: int = 0  # lane-rounds spent mid-prefill (inert)
+    prefill_row_tokens: int = 0   # Σ rows × width over all prefill ops
+    prefill_op_width: Peak = None   # per-op prompt width: the longest
+    #                                 uninterruptible prefill stall
+    prefill_gap_tokens: Peak = None  # row-tokens prefilled per
+    #                                  inter-superstep gap
     retain: int = 4096
     ttfts: Ring = None
     latencies: Ring = None
@@ -139,6 +187,10 @@ class ServingStats:
             self.latencies = Ring(self.retain)
         if self.timeline is None:
             self.timeline = Ring(self.retain)
+        if self.prefill_op_width is None:
+            self.prefill_op_width = Peak()
+        if self.prefill_gap_tokens is None:
+            self.prefill_gap_tokens = Peak()
         self._sketches = {("ttft", 50): P2Quantile(0.50),
                           ("lat", 50): P2Quantile(0.50),
                           ("lat", 95): P2Quantile(0.95)}
@@ -162,9 +214,14 @@ class ServingStats:
 
     @property
     def occupancy(self) -> float:
-        """Fraction of lane-rounds that committed tokens — the slot
-        utilization continuous batching exists to maximize."""
-        return self.busy_lane_rounds / max(self.lane_rounds, 1)
+        """Fraction of *decode-eligible* lane-rounds that committed
+        tokens — the slot utilization continuous batching exists to
+        maximize.  Lanes still chunk-prefilling their prompt are counted
+        separately (``prefill_lane_rounds``) and excluded from the
+        denominator: a mid-prefill lane is busy with admission work, not
+        idle capacity."""
+        return self.busy_lane_rounds / max(
+            self.lane_rounds - self.prefill_lane_rounds, 1)
 
     def _pct(self, xs, sketch: P2Quantile, q: float) -> float:
         if sketch.n_obs > len(xs):      # ring overflowed → whole-stream
@@ -188,6 +245,48 @@ class ServingStats:
 EngineStats = ServingStats
 
 
+class _ChunkPipeline:
+    """Host bookkeeping for one in-flight chunked refill group.
+
+    Holds the (slot, request) assignments, the padded prompt / lane-map
+    arrays (exactly as ``_refill_arrays`` builds them for a one-shot
+    refill), and the staging target/draft caches the chunk ops thread.
+    The prompt is processed left to right: the first op is ragged
+    (``width - (n_chunks-1)*chunk``, a multiple of 8 in [8, chunk], so
+    the final chunk always ends exactly at ``width``) and every
+    continuation is exactly ``chunk`` wide — fixed compiled shapes, one
+    trace per refill-row bucket."""
+
+    def __init__(self, admitted, args, chunk: int, cohort: int = 0,
+                 order: int = 0):
+        (self.toks, self.pad, self.mask, self.src, self.budgets,
+         self.sids) = args
+        self.admitted = admitted
+        self.rows = int(self.toks.shape[0])
+        self.width = int(self.toks.shape[1])
+        n_chunks = -(-self.width // chunk)
+        self.first_width = self.width - (n_chunks - 1) * chunk
+        self.chunk = chunk
+        self.pos = 0            # prompt prefix already prefilled
+        # pipelines spawned from one admission batch form a *cohort*:
+        # their chunks pipeline independently, but they commit together
+        # when the slowest member finishes, so the lanes of one
+        # admission activate in the same gap (exactly as a one-shot
+        # refill op activates them) and decode rounds stay dense instead
+        # of fragmenting across staggered activations
+        self.cohort = cohort
+        self.order = order
+        self.ready = False      # fully prefilled, waiting on the cohort
+        self.cache = None       # staging target cache (rows x width)
+        self.dcache = None      # staging draft cache
+        self.logits = None      # last-position logits after latest chunk
+        self.caps_last = None   # last capture column after latest chunk
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= self.width
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, dcfg: ModelConfig,
                  dparams, *, gamma: int = 3, max_len: int = 160,
@@ -203,7 +302,8 @@ class ServingEngine:
                  gate_arrivals: bool = False,
                  completion_sink: Optional[Callable[[Request], None]]
                  = None,
-                 idle_wait_s: float = 0.005):
+                 idle_wait_s: float = 0.005,
+                 prefill_chunk: int = 0):
         self.cfg, self.dcfg = cfg, dcfg
         self.params, self.dparams = params, dparams
         self.gamma, self.max_len, self.batch = gamma, max_len, batch_size
@@ -227,6 +327,17 @@ class ServingEngine:
         self.gate_arrivals = gate_arrivals
         self.completion_sink = completion_sink
         self.idle_wait_s = idle_wait_s
+        # >0 enables chunked refill prefill: prompts are prefilled in
+        # fixed-width chunks that interleave with resident supersteps
+        # instead of stalling every decode lane for the whole prompt.
+        # Must be a multiple of 8 (the refill shape bucket, so the
+        # ragged first chunk stays bucketed too).  0 = legacy one-shot.
+        if prefill_chunk and prefill_chunk % 8:
+            raise ValueError(f"prefill_chunk {prefill_chunk} must be a "
+                             "multiple of 8 (refill shape bucket)")
+        self.prefill_chunk = prefill_chunk
+        self._pipelines: List[_ChunkPipeline] = []
+        self._cohort_next = 0
         self._sleep = time.sleep           # injectable for tests
         self.stats = ServingStats()
         # constant base key for per-request sampling streams: lane keys
@@ -353,6 +464,148 @@ class ServingEngine:
         self._refill_ss_fn = _refill_superstep
         self._refill_step_fn = _refill_stepwise
 
+        # ---- chunked refill pipeline (prefill_chunk > 0).  A refill's
+        # prompt is prefilled chunk by chunk into a *staging* cache pair
+        # that only touches the live device state at commit time, so
+        # resident decode lanes never wait for more than one chunk of
+        # prefill per inter-superstep gap.  The continuation path goes
+        # through the decode step, which is bitwise-identical to the
+        # one-shot prefill on the valid cache region and the emitted
+        # logits (tests/test_chunked_prefill.py pins this, chunked ==
+        # one-shot, for random lengths and chunk sizes).
+        def _chunk_start_core(params, dparams, toks_c, nxt, pad, adv,
+                              width):
+            """First (ragged-width) chunk: fresh staging caches.  ``nxt``
+            is the lookahead-shifted token slice for the draft pairs;
+            ``adv`` the per-lane valid pair count.  The staging target
+            cache is allocated at the pipeline's prompt ``width`` (not
+            max_len) so continuation chunks attend over the same key
+            width the one-shot prefill does — the byte-parity
+            requirement (see ``spec.pad_target_cache``)."""
+            pre = T.prefill(cfg, params, toks_c, max_len=width, pad=pad)
+            dcache_s = eagle.init_draft_cache(dcfg, toks_c.shape[0],
+                                              self.max_len)
+            dcache_s = eagle.seed_chunk_pairs(
+                dcfg, dparams, params["embed"], dict(dcache_s, pad=pad),
+                pre["captures"], nxt, adv)
+            return (pre["cache"], dcache_s, pre["logits"],
+                    pre["captures"][:, -1])
+
+        def _chunk_cont_core(params, dparams, cache_s, dcache_s, toks_c,
+                             nxt, adv):
+            """Continuation chunk: extend the staging caches through the
+            decode path at cache positions [pos, pos + chunk)."""
+            r, w = toks_c.shape
+            out = T.decode_step(cfg, params, cache_s, toks_c)
+            cache_s = T.commit_cache(cfg, out["cache"],
+                                     jnp.full((r,), w, jnp.int32))
+            dcache_s = eagle.seed_chunk_pairs(
+                dcfg, dparams, params["embed"], dcache_s,
+                out["captures"], nxt, adv)
+            return (cache_s, dcache_s, out["logits"][:, -1],
+                    out["captures"][:, -1])
+
+        def _chunk_first_token(logits, sids):
+            if self.greedy:
+                return logits.argmax(-1).astype(jnp.int32)
+            return _pick_sampled(logits, sids)
+
+        def _chunk_scatter_core(staging, cache, dcache, mask, src, sids):
+            """The commit recipe both engine modes share (the chunked
+            twin of ``_refill_core``'s output handling): sample the
+            first token, pad the staging target cache out to the live
+            geometry, scatter both staging caches into the masked live
+            lanes, and build the refill carry.  Returns
+            (cache, dcache, carry_r, first)."""
+            cache_s, dcache_s, logits, caps_last = staging
+            first = _chunk_first_token(logits, sids)
+            cache_s = spec.pad_target_cache(
+                cache_s, T.cache_abstract(cfg, caps_last.shape[0],
+                                          self.max_len))
+            cache = spec.scatter_target_cache(cache, cache_s, mask, src)
+            dcache = eagle.scatter_draft_rows(dcache, dcache_s, mask, src)
+            carry_r = spec.init_carry_from_caps(caps_last, first, gamma)
+            return cache, dcache, carry_r, first
+
+        def _chunk_commit_core(staging, cache, dcache, state, max_new,
+                               mask, src, budgets, sids):
+            """Commit a fully-prefilled staging pair into the live state
+            and reset the lanes' superstep carry — the chunked twin of
+            ``_refill_superstep``."""
+            cache, dcache, carry_r, first = _chunk_scatter_core(
+                staging, cache, dcache, mask, src, sids)
+            state = spec.refill_superstep_state(
+                state, carry_r, first, budgets, mask, src,
+                eos_id=self.eos_id, sids=sids)
+            max_new = jnp.where(mask, jnp.take(budgets, src), max_new)
+            return cache, dcache, state, max_new, first
+
+        @functools.partial(jax.jit, static_argnums=(0,))
+        def _chunk_start(width, params, dparams, toks_c, nxt, pad, adv):
+            return _chunk_start_core(params, dparams, toks_c, nxt, pad,
+                                     adv, width)
+
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def _chunk_cont(params, dparams, cache_s, dcache_s, toks_c, nxt,
+                        adv):
+            return _chunk_cont_core(params, dparams, cache_s, dcache_s,
+                                    toks_c, nxt, adv)
+
+        @functools.partial(jax.jit, donate_argnums=(2, 3, 4))
+        def _chunk_commit(params, dparams, cache, dcache, state, max_new,
+                          cache_s, dcache_s, logits, caps_last, mask,
+                          src, budgets, sids):
+            """Standalone commit for a staged pipeline waiting on its
+            cohort (its final chunk already ran unfused)."""
+            return _chunk_commit_core((cache_s, dcache_s, logits,
+                                       caps_last), cache, dcache, state,
+                                      max_new, mask, src, budgets, sids)
+
+        # final-chunk ops fuse the last prefill chunk with its commit —
+        # one dispatch per pipeline completion, so a single-chunk
+        # pipeline costs exactly one op, like a one-shot refill
+        @functools.partial(jax.jit, static_argnums=(0,),
+                           donate_argnums=(7, 8, 9))
+        def _chunk_final_start(width, params, dparams, toks_c, nxt, pad,
+                               adv, cache, dcache, state, max_new, mask,
+                               src, budgets, sids):
+            staging = _chunk_start_core(params, dparams, toks_c, nxt,
+                                        pad, adv, width)
+            return _chunk_commit_core(staging, cache, dcache, state,
+                                      max_new, mask, src, budgets, sids)
+
+        # staging args are not donated: the commit pads them to max_len,
+        # so their buffers can never be reused for an output
+        @functools.partial(jax.jit, donate_argnums=(7, 8, 9))
+        def _chunk_final_cont(params, dparams, cache_s, dcache_s, toks_c,
+                              nxt, adv, cache, dcache, state, max_new,
+                              mask, src, budgets, sids):
+            staging = _chunk_cont_core(params, dparams, cache_s,
+                                       dcache_s, toks_c, nxt, adv)
+            return _chunk_commit_core(staging, cache, dcache, state,
+                                      max_new, mask, src, budgets, sids)
+
+        @jax.jit
+        def _chunk_commit_step(params, dparams, cache, dcache, carry,
+                               cache_s, dcache_s, logits, caps_last,
+                               mask, src, sids):
+            """Final-chunk commit for the per-step reference loop (kept
+            unfused — the stepwise loop is the parity oracle, not a hot
+            path; the commit recipe is the shared ``_chunk_scatter_core``,
+            so the two modes cannot drift)."""
+            cache, dcache, carry_r, first = _chunk_scatter_core(
+                (cache_s, dcache_s, logits, caps_last), cache, dcache,
+                mask, src, sids)
+            carry = spec.scatter_carry(carry, carry_r, mask, src)
+            return cache, dcache, carry, first
+
+        self._chunk_start_fn = _chunk_start
+        self._chunk_cont_fn = _chunk_cont
+        self._chunk_commit_ss_fn = _chunk_commit
+        self._chunk_final_start_fn = _chunk_final_start
+        self._chunk_final_cont_fn = _chunk_final_cont
+        self._chunk_commit_step_fn = _chunk_commit_step
+
         self._superstep_fn = None
         if self.superstep_rounds > 0:
             table = None
@@ -421,6 +674,8 @@ class ServingEngine:
         self.accept_ema = 1.0
         self._deploy_seq = 0
         self._sid_next = 0
+        self._pipelines = []
+        self._cohort_next = 0
         self.stats = ServingStats()
         if self.drafter is not None:
             self.drafter.enabled = True
@@ -484,6 +739,8 @@ class ServingEngine:
             pad[i] = plen - len(r.prompt)
             toks[i, pad[i]:] = r.prompt
         toks_j, pad_j = jnp.asarray(toks), jnp.asarray(pad)
+        self._note_prefill_op(b, plen)
+        self.stats.prefill_gap_tokens.add(b * plen)
         pre = self._prefill_fn(self.params, toks_j, pad_j)
         first = self._pick(pre["logits"], self._slot_sids(requests))
         cache = pre["cache"]
@@ -534,16 +791,27 @@ class ServingEngine:
         self._assign_sids(admitted)
         reqs0 = [r if r is not None else inert_request()
                  for r in sched.slots]
-        cache, dcache, carry, first = self._prologue(reqs0)
-        first_np = np.asarray(first)
-        for i, r in enumerate(reqs0):
-            self._commit_first(r, int(first_np[i]))
+        if self.prefill_chunk:
+            # chunked prefill: no one-shot prologue — the initial batch
+            # flows through the same chunk pipelines as every later
+            # refill, so no prompt ever stalls the engine for more than
+            # one chunk per gap
+            cache, dcache, carry, first = self._empty_state()
+            self._pipelines = []
+            self._spawn_pipelines(admitted)
+        else:
+            cache, dcache, carry, first = self._prologue(reqs0)
+            first_np = np.asarray(first)
+            for i, r in enumerate(reqs0):
+                self._commit_first(r, int(first_np[i]))
         if self._superstep_fn is not None:
             self._stream_superstep(sched, reqs0, cache, dcache, carry,
-                                   first, t0, on_complete)
+                                   first, t0, on_complete,
+                                   cold=bool(self.prefill_chunk))
         else:
             self._stream_stepwise(sched, cache, dcache, carry, t0,
-                                  on_complete)
+                                  on_complete,
+                                  cold=bool(self.prefill_chunk))
         if self.extractor is not None:
             self.extractor.flush()
         self.stats.wall_s += time.perf_counter() - t0
@@ -593,6 +861,193 @@ class ServingEngine:
                 jnp.asarray(src), jnp.asarray(budgets),
                 jnp.asarray(sids))
 
+    # ------------------------------------------- chunked refill pipeline
+    def _note_prefill_op(self, rows: int, width: int):
+        """Record one prefill dispatch (one-shot refill, prologue, or
+        pipeline chunk) in the deterministic stall metrics."""
+        self.stats.prefill_op_width.add(width)
+        self.stats.prefill_row_tokens += rows * width
+
+    def _make_pipeline(self, admitted, cohort: int = 0,
+                       order: int = 0) -> _ChunkPipeline:
+        return _ChunkPipeline(admitted, self._refill_arrays(admitted),
+                              self.prefill_chunk, cohort, order)
+
+    def _spawn_pipelines(self, admitted):
+        """One chunk pipeline per padded-width bucket of the admission
+        batch (``Scheduler.refill_groups``) — several refills' chunks
+        then pipeline through the same inter-superstep gaps.  The
+        groups share a commit cohort (see ``_ChunkPipeline``)."""
+        cohort = self._cohort_next
+        self._cohort_next += 1
+        for i, group in enumerate(
+                Scheduler.refill_groups(admitted, self.prefill_chunk)):
+            self._pipelines.append(self._make_pipeline(group, cohort, i))
+
+    def _chunk_args(self, pl: _ChunkPipeline):
+        """Host-side slices for the pipeline's next chunk: (width,
+        chunk tokens, lookahead-shifted draft-pair tokens, advance)."""
+        w = pl.first_width if pl.pos == 0 else pl.chunk
+        a, b = pl.pos, pl.pos + w
+        toks_c = pl.toks[:, a:b]
+        # draft pairs are (capture i, token i+1): lookahead-shifted token
+        # columns, sliced host-side from the full prompt; the final pair
+        # width - 1 does not exist, so the last chunk ingests one fewer
+        adv = min(w, pl.width - 1 - a)
+        nxt = pl.toks[:, a + 1:b + 1]
+        if nxt.shape[1] < w:
+            nxt = jnp.pad(nxt, ((0, 0), (0, w - nxt.shape[1])))
+        return w, toks_c, nxt, jnp.full((pl.rows,), adv, jnp.int32)
+
+    def _advance_pipeline(self, pl: _ChunkPipeline) -> int:
+        """Dispatch the next chunk of one pipeline (enqueued behind the
+        in-flight superstep, like every refill op).  Returns the op's
+        row-token cost."""
+        w, toks_c, nxt, adv_j = self._chunk_args(pl)
+        if pl.pos == 0:
+            pl.cache, pl.dcache, pl.logits, pl.caps_last = \
+                self._chunk_start_fn(pl.width, self.params, self.dparams,
+                                     toks_c, nxt, pl.pad, adv_j)
+        else:
+            pl.cache, pl.dcache, pl.logits, pl.caps_last = \
+                self._chunk_cont_fn(self.params, self.dparams, pl.cache,
+                                    pl.dcache, toks_c, nxt, adv_j)
+        pl.pos += w
+        self.stats.prefill_chunks += 1
+        self._note_prefill_op(pl.rows, w)
+        return pl.rows * w
+
+    def _advance_pipelines_ss(self, cache, dcache, state, max_new,
+                              pending):
+        """Advance every in-flight pipeline by one chunk, with
+        cohort-synchronized commits.
+
+        Pass 1 — chunks: each non-ready pipeline dispatches its next
+        chunk.  A pipeline that is the *only* member of its cohort runs
+        its final chunk fused with the commit (one dispatch, like a
+        one-shot refill); a pipeline with cohort siblings runs its
+        final chunk unfused and waits (``ready``).
+
+        Pass 2 — cohorts: a cohort whose members are all staged commits
+        them in admission order, in one gap, so the lanes of one
+        admission batch activate together — the round-density property
+        a one-shot refill op gets for free.
+
+        Committed first tokens ride the pending telemetry record — zero
+        extra host syncs; with no record in flight they are committed
+        immediately (stream prologue).  Returns the updated live state
+        plus (row-token cost, committed-pipeline count)."""
+        gap_tokens = 0
+        commits = 0
+        committed = []
+
+        def _emit_first(fdev, pl):
+            if pending is not None:
+                pending["refills"].append((fdev, pl.admitted))
+            else:
+                first_np = np.asarray(fdev)
+                for row, (_, req) in enumerate(pl.admitted):
+                    self._commit_first(req, int(first_np[row]))
+
+        for pl in self._pipelines:
+            if pl.ready:
+                continue
+            w, toks_c, nxt, adv_j = self._chunk_args(pl)
+            if pl.pos + w < pl.width:          # interior chunk
+                gap_tokens += self._advance_pipeline(pl)
+                continue
+            solo = not any(q.cohort == pl.cohort and q is not pl
+                           for q in self._pipelines)
+            if not solo:
+                # final chunk, cohort siblings still prefilling: stage
+                # and wait (commit lands with the cohort in pass 2)
+                gap_tokens += self._advance_pipeline(pl)
+                pl.ready = True
+                continue
+            if pl.pos == 0:
+                cache, dcache, state, max_new, fdev = \
+                    self._chunk_final_start_fn(
+                        pl.width, self.params, self.dparams, toks_c, nxt,
+                        pl.pad, adv_j, cache, dcache, state, max_new,
+                        pl.mask, pl.src, pl.budgets, pl.sids)
+            else:
+                cache, dcache, state, max_new, fdev = \
+                    self._chunk_final_cont_fn(
+                        self.params, self.dparams, pl.cache, pl.dcache,
+                        toks_c, nxt, adv_j, cache, dcache, state,
+                        max_new, pl.mask, pl.src, pl.budgets, pl.sids)
+            pl.pos += w
+            self.stats.prefill_chunks += 1
+            self._note_prefill_op(pl.rows, w)
+            gap_tokens += pl.rows * w
+            self.stats.refills += len(pl.admitted)
+            commits += 1
+            committed.append(pl)
+            _emit_first(fdev, pl)
+
+        cohorts = {}
+        for pl in self._pipelines:
+            if pl not in committed:
+                cohorts.setdefault(pl.cohort, []).append(pl)
+        for members in cohorts.values():
+            if not all(q.ready for q in members):
+                continue
+            for q in sorted(members, key=lambda q: q.order):
+                cache, dcache, state, max_new, fdev = \
+                    self._chunk_commit_ss_fn(
+                        self.params, self.dparams, cache, dcache, state,
+                        max_new, q.cache, q.dcache, q.logits,
+                        q.caps_last, q.mask, q.src, q.budgets, q.sids)
+                self.stats.refills += len(q.admitted)
+                commits += 1
+                committed.append(q)
+                _emit_first(fdev, q)
+        self._pipelines = [pl for pl in self._pipelines
+                           if pl not in committed]
+        return cache, dcache, state, max_new, gap_tokens, commits
+
+    def _advance_pipelines_step(self, cache, dcache, carry, active, sids,
+                                steps):
+        """Pipeline advance for the per-step reference loop: commits
+        scatter the staging lanes into the live carry and update the
+        host lane masks in place (no telemetry pipelining here)."""
+        gap_tokens = 0
+        live = []
+        for pl in self._pipelines:
+            gap_tokens += self._advance_pipeline(pl)
+            if not pl.done:
+                live.append(pl)
+                continue
+            cache, dcache, carry, fdev = self._chunk_commit_step_fn(
+                self.params, self.dparams, cache, dcache, carry,
+                pl.cache, pl.dcache, pl.logits, pl.caps_last, pl.mask,
+                pl.src, pl.sids)
+            self.stats.refills += len(pl.admitted)
+            first_np = np.asarray(fdev)
+            for row, (slot, req) in enumerate(pl.admitted):
+                self._commit_first(req, int(first_np[row]))
+                active[slot] = req.finish_t is None
+                sids[slot] = req.sid
+                steps[slot] = 1
+        self._pipelines = live
+        return cache, dcache, carry, gap_tokens
+
+    def _empty_state(self):
+        """All-inert device serving state for a chunked-prefill stream
+        start: zero caches and a unit carry.  Every lane stays inactive
+        (skipped by the superstep's outer cond, masked in the stepwise
+        loop) until its pipeline's commit writes real state."""
+        b = self.batch
+        cache = T.init_cache(self.cfg, b, self.max_len)
+        dcache = eagle.init_draft_cache(self.dcfg, b, self.max_len)
+        carry = spec.SpecCarry(
+            feats=jnp.zeros((b, self.gamma + 1, 3 * self.cfg.d_model),
+                            self.cfg.act_dtype),
+            tokens=jnp.zeros((b, self.gamma + 1), jnp.int32),
+            advance=jnp.ones((b,), jnp.int32))
+        first = jnp.zeros((b,), jnp.int32)
+        return cache, dcache, carry, first
+
     # ----------------------------------------------- superstep hot path
     @staticmethod
     def _materialize(prev):
@@ -603,14 +1058,37 @@ class ServingEngine:
                 for k, v in prev.items()}
 
     def _stream_superstep(self, sched, reqs0, cache, dcache, carry, first,
-                          t0, on_complete):
-        max_new = jnp.asarray([r.max_new_tokens for r in reqs0], jnp.int32)
-        active0 = jnp.asarray([r.finish_t is None for r in reqs0], bool)
+                          t0, on_complete, cold=False):
+        if cold:
+            # chunked-prefill start: every lane is inert (budgets and
+            # activity land with its pipeline's commit)
+            max_new = jnp.zeros((self.batch,), jnp.int32)
+            active0 = jnp.zeros((self.batch,), bool)
+        else:
+            max_new = jnp.asarray([r.max_new_tokens for r in reqs0],
+                                  jnp.int32)
+            active0 = jnp.asarray([r.finish_t is None for r in reqs0],
+                                  bool)
         state = spec.init_superstep_state(
             carry, first, self._base_key, accept_ema=self.accept_ema,
             eos_id=self.eos_id, active0=active0,
             sids=self._slot_sids(reqs0),
             capture_window=self.reseed_window)
+        if cold and self._pipelines:
+            # initial pipelines take the prologue's slot in the dispatch
+            # order.  No lane is decoding yet, so there is nothing to
+            # interleave with — run chunks back-to-back until the first
+            # commit activates lanes (the stall bound only constrains
+            # gaps where residents decode)
+            gap = 0
+            commits = 0
+            while self._pipelines and commits == 0:
+                cache, dcache, state, max_new, g, commits = \
+                    self._advance_pipelines_ss(cache, dcache, state,
+                                               max_new, None)
+                gap += g
+            if gap:
+                self.stats.prefill_gap_tokens.add(gap)
         # one-superstep double buffer: superstep t+1 is dispatched before
         # t's telemetry is pulled, so the D2H sync overlaps device
         # compute; refills scheduled after draining t are enqueued behind
@@ -635,7 +1113,10 @@ class ServingEngine:
                                         out["state"])
                 prev, pending = pending, {"rounds": out["rounds"],
                                           "slots": list(sched.slots),
-                                          "refill": None}
+                                          "n_prefill": sum(
+                                              len(p.admitted)
+                                              for p in self._pipelines),
+                                          "refills": []}
                 dispatched = True
             else:
                 prev, pending = pending, None
@@ -651,8 +1132,15 @@ class ServingEngine:
                 continue
             progressed = self._drain(prev, t0)
             admitted = self._retire_and_admit(sched, on_complete)
-            if admitted:
+            gap_tokens = 0
+            if admitted and self.prefill_chunk:
+                # chunked: new pipelines; their first chunks dispatch in
+                # the advance below, in the refill op's dispatch slot
+                self._spawn_pipelines(admitted)
+            elif admitted:
                 args = self._refill_arrays(admitted)
+                self._note_prefill_op(args[0].shape[0], args[0].shape[1])
+                gap_tokens += args[0].shape[0] * args[0].shape[1]
                 cache, dcache, state, max_new, fdev = self._refill_ss_fn(
                     self.params, self.dparams, cache, dcache, state,
                     max_new, *args)
@@ -660,14 +1148,32 @@ class ServingEngine:
                 if pending is not None:
                     # first tokens materialize with the next telemetry
                     # pull — zero extra host syncs
-                    pending["refill"] = (fdev, admitted)
+                    pending["refills"].append((fdev, admitted))
                 else:
                     first_np = np.asarray(fdev)
                     for row, (_, req) in enumerate(admitted):
                         self._commit_first(req, int(first_np[row]))
+            if self._pipelines:
+                cache, dcache, state, max_new, gap, commits = \
+                    self._advance_pipelines_ss(cache, dcache, state,
+                                               max_new, pending)
+                gap_tokens += gap
+                # the drained superstep was empty (no resident lane
+                # decoding): nothing to interleave with, so run the
+                # pipelines straight to the next commit instead of
+                # trickling one idle chunk per empty dispatch
+                while self._pipelines and not progressed and commits == 0:
+                    cache, dcache, state, max_new, gap, commits = \
+                        self._advance_pipelines_ss(cache, dcache, state,
+                                                   max_new, pending)
+                    gap_tokens += gap
+            if gap_tokens:
+                self.stats.prefill_gap_tokens.add(gap_tokens)
             # defensive stall guard: every drained superstep must either
-            # commit rounds, retire requests, or admit new ones
-            stall = 0 if (progressed or admitted) else stall + 1
+            # commit rounds, retire requests, admit new ones, or move a
+            # chunk pipeline forward
+            stall = 0 if (progressed or admitted or gap_tokens) \
+                else stall + 1
             if stall > 4:
                 raise RuntimeError(
                     "serve_stream made no progress over 5 supersteps "
@@ -675,23 +1181,28 @@ class ServingEngine:
 
     def _drain(self, rec, t0) -> bool:
         """Unpack one in-flight superstep record: replay its telemetry,
-        then commit the first tokens of any refill that was enqueued
-        behind it.  Returns True if any round was valid (progress)."""
+        then commit the first tokens of any refill (one-shot or chunk-
+        pipeline commit) that was enqueued behind it.  Returns True if
+        any round was valid (progress)."""
         ys = self._materialize(rec["rounds"])
         rids = [r.rid if r is not None else -1 for r in rec["slots"]]
-        progressed = self._unpack_superstep(ys, rec["slots"], rids, t0)
-        if rec["refill"] is not None:
-            fdev, admitted = rec["refill"]
+        progressed = self._unpack_superstep(ys, rec["slots"], rids, t0,
+                                            n_prefill=rec.get("n_prefill",
+                                                              0))
+        for fdev, admitted in rec["refills"]:
             first_np = np.asarray(fdev)
             for row, (_, req) in enumerate(admitted):
                 self._commit_first(req, int(first_np[row]))
         return progressed
 
-    def _unpack_superstep(self, ys, requests, rids, t0) -> bool:
+    def _unpack_superstep(self, ys, requests, rids, t0,
+                          n_prefill: int = 0) -> bool:
         """Replay one superstep's host-side bookkeeping from device
         telemetry: token commit, stats/timeline, Algorithm 1 controller
         and packed-signal ingestion.  ``requests`` is the per-slot
-        residency snapshot taken at dispatch (None = free lane).
+        residency snapshot taken at dispatch (None = free lane);
+        ``n_prefill`` the number of lanes that were mid-chunk-prefill at
+        dispatch (inert for decode, tracked separately for occupancy).
         Returns True if any round was valid (i.e. the superstep did
         work; False means every lane was already done at entry)."""
         valid = ys["valid"]
@@ -713,7 +1224,12 @@ class ServingEngine:
                 n = int(n_eff[i])
                 if n:
                     req.generated.extend(int(t) for t in toks[i, :n])
-                if not active_after[i] and req.finish_t is None:
+                # a lane is inactive-but-unfinished while its chunk
+                # pipeline is still prefilling (first_token_t unset);
+                # only requests that actually started emitting may be
+                # retired by decode telemetry
+                if (not active_after[i] and req.finish_t is None
+                        and req.first_token_t is not None):
                     self._finish(req)
             busy = int((n_eff > 0).sum())
             self.stats.tokens_out += int(n_eff.sum())
@@ -723,6 +1239,7 @@ class ServingEngine:
             self.stats.accept_len_n += 1
             self.stats.lane_rounds += len(requests)
             self.stats.busy_lane_rounds += busy
+            self.stats.prefill_lane_rounds += n_prefill
             self.accept_ema = float(ys["ema"][r])
             if self.drafter is not None:
                 self.drafter.enabled = use_spec
@@ -750,21 +1267,33 @@ class ServingEngine:
 
     # ------------------------------------------ per-step reference loop
     def _stream_stepwise(self, sched, cache, dcache, carry, t0,
-                         on_complete):
+                         on_complete, cold=False):
         b = self.batch
         slots = list(sched.slots)
-        active = np.array([r is not None and r.finish_t is None
-                           for r in slots], bool)
+        active = (np.zeros((b,), bool) if cold else
+                  np.array([r is not None and r.finish_t is None
+                            for r in slots], bool))
         # host-side twin of the superstep's (sid, step_idx) state: lane
         # keys are derived per step from the engine base key, so sampled
         # streams are per-request and scheduling-invariant
         sids = self._slot_sids(slots)
         steps = np.ones((b,), np.int32)
+        if cold and self._pipelines:
+            cache, dcache, carry, gap = self._advance_pipelines_step(
+                cache, dcache, carry, active, sids, steps)
+            if gap:
+                self.stats.prefill_gap_tokens.add(gap)
         while True:
             self._poll_deploy()      # swap-only (no ring in this mode)
             admitted = self._retire_and_admit(sched, on_complete)
-            if admitted:
+            if admitted and self.prefill_chunk:
+                self._spawn_pipelines(admitted)
+                slots = list(sched.slots)
+            elif admitted:
                 args = self._refill_arrays(admitted)
+                self._note_prefill_op(args[0].shape[0], args[0].shape[1])
+                self.stats.prefill_gap_tokens.add(
+                    args[0].shape[0] * args[0].shape[1])
                 cache, dcache, carry, fdev = self._refill_step_fn(
                     self.params, self.dparams, cache, dcache, carry,
                     args[0], args[1], args[2], args[3], args[5])
@@ -775,6 +1304,12 @@ class ServingEngine:
                     active[slot] = req.finish_t is None
                     sids[slot] = req.sid
                     steps[slot] = 1
+                slots = list(sched.slots)
+            if self._pipelines:
+                cache, dcache, carry, gap = self._advance_pipelines_step(
+                    cache, dcache, carry, active, sids, steps)
+                if gap:
+                    self.stats.prefill_gap_tokens.add(gap)
                 slots = list(sched.slots)
             if not active.any():
                 if sched.has_work():
@@ -855,6 +1390,8 @@ class ServingEngine:
             self.stats.accept_len_sum += ell
             self.stats.accept_len_n += 1
             self.stats.lane_rounds += b
+            self.stats.prefill_lane_rounds += sum(
+                len(p.admitted) for p in self._pipelines)
             busy = int((n_eff > 0).sum())
             self.stats.busy_lane_rounds += busy
             n_sig = int(n_commit[active].sum()) if active.any() else 0

@@ -21,6 +21,10 @@ class Request:
     arrives_at: Optional[float] = None
     # filled by the engine
     generated: List[int] = dataclasses.field(default_factory=list)
+    # slot-admission instant (scheduler stamp): the TTFT clock starts
+    # here, so a chunk-prefilled request is charged for its whole
+    # multi-superstep prefill, never credited for queueing it skipped
+    admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     # engine-assigned sampling-stream id (admission ordinal): the
@@ -37,13 +41,18 @@ class Request:
 
     @property
     def ttft(self) -> Optional[float]:
-        """Time to first token (seconds since arrival), as observed by the
-        host — under the fused superstep the first token materializes with
-        the next superstep's telemetry, so this includes up to one
-        superstep of pipelining lag."""
+        """Time to first token (seconds since slot *admission*, falling
+        back to arrival when the request never went through a
+        scheduler), as observed by the host — under the fused superstep
+        the first token materializes with the next superstep's
+        telemetry, so this includes up to one superstep of pipelining
+        lag, and under chunked prefill it spans every chunk of the
+        prompt (the clock starts when prefill starts, not when the last
+        chunk commits)."""
         if self.first_token_t is None:
             return None
-        return self.first_token_t - self.arrival_t
+        start = self.admit_t if self.admit_t is not None else self.arrival_t
+        return self.first_token_t - start
 
     @property
     def latency(self) -> Optional[float]:

@@ -20,6 +20,12 @@ be materialized).  Two admission policies:
     exactly the slack the decoupled draft trainer consumes on
     single-device hosts.
 
+Chunked prefill: with the engine's ``prefill_chunk`` enabled,
+``refill_groups`` partitions each admission batch into per-width refill
+pipelines so several refills' chunks pipeline through the same
+inter-superstep gaps and a short prompt never rides a long-tail
+prompt's multi-chunk pipeline (see ``ServingEngine``).
+
 Endless streams: by default every completed request is retained in
 ``completed`` (the engine's return value).  Pass a ``completion_sink``
 callback to stream completions out instead — host retention then stays
@@ -29,8 +35,8 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import (Callable, Deque, Iterable, Iterator, List, Optional,
-                    Tuple)
+from typing import (Callable, Deque, Dict, Iterable, Iterator, List,
+                    Optional, Tuple)
 
 from repro.serving.request import Request
 
@@ -131,15 +137,45 @@ class Scheduler:
     def admit(self) -> List[Tuple[int, Request]]:
         """Fill free slots from the pending queue (FIFO; gated on
         arrival time when enabled).  Returns the (slot, request)
-        assignments made — the engine's refill batch."""
+        assignments made — the engine's refill batch.  Each admitted
+        request is stamped with ``admit_t`` (prefill starts now — the
+        TTFT clock origin)."""
         out = []
+        now = time.perf_counter()
         for i, r in enumerate(self.slots):
             if r is not None:
                 continue
             if not self.has_pending():
                 break
             req = self._queue.popleft()
+            req.admit_t = now
             self.slots[i] = req
             self.admitted += 1
             out.append((i, req))
         return out
+
+    @staticmethod
+    def refill_groups(admitted: List[Tuple[int, Request]],
+                      prefill_chunk: int) -> List[List[Tuple[int, Request]]]:
+        """Chunk-aware partition of one admission batch into refill
+        pipelines.
+
+        The legacy one-shot refill pads every co-admitted prompt to the
+        longest one, so a short-chat request that happens to free a slot
+        alongside a long-tail prompt pays the long prompt's full prefill
+        width (and, chunked, would ride its whole multi-superstep
+        pipeline).  With chunking enabled the engine instead runs one
+        chunk pipeline per *padded-width bucket*: requests whose prompts
+        bucket to the same width (multiples of 8, the refill shape
+        bucket) share a pipeline; different buckets pipeline
+        independently, their chunks interleaving through the same
+        inter-superstep gaps.  Admission order is preserved within and
+        across groups (slot assignment already happened in ``admit``),
+        so scheduling stays FIFO — this only shapes the refill ops."""
+        if prefill_chunk <= 0:
+            return [admitted] if admitted else []
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, req in admitted:
+            width = max(8, -(-len(req.prompt) // 8) * 8)
+            groups.setdefault(width, []).append((slot, req))
+        return list(groups.values())

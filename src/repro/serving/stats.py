@@ -1,10 +1,11 @@
 """Bounded host-side serving statistics.
 
 Truly endless request streams must not grow host memory linearly:
-``Ring`` is a list with a retention cap (drop-oldest), and
-``P2Quantile`` is the classic P² streaming percentile estimator (Jain &
-Chlamtac 1985) — five markers, O(1) memory, no sample retention — so
-``ServingStats`` can report p50/p95 over the *whole* stream while only
+``Ring`` is a list with a retention cap (drop-oldest), ``P2Quantile``
+is the classic P² streaming percentile estimator (Jain & Chlamtac
+1985) — five markers, O(1) memory, no sample retention — and ``Peak``
+is a running max/mean, so ``ServingStats`` can report p50/p95 and
+worst-case prefill-stall metrics over the *whole* stream while only
 the recent window is kept for exact inspection.
 """
 from __future__ import annotations
@@ -28,6 +29,34 @@ class Ring(list):
         super().append(x)
         if len(self) > self.maxlen:
             del self[:len(self) - self.maxlen]
+
+
+class Peak:
+    """Running max / sum / count over a stream of scalar observations
+    (O(1) memory).  ``ServingStats`` uses one per prefill-stall metric:
+    the engine records how many prompt tokens each prefill op (one-shot
+    refill or pipeline chunk) processes and how many land in each
+    inter-superstep gap, so benchmarks can gate the *deterministic*
+    worst-case refill stall (``max``) next to the noisy wall-clock
+    goodput numbers."""
+
+    def __init__(self):
+        self.max = 0.0
+        self.total = 0.0
+        self.n = 0
+
+    def add(self, x: float):
+        self.n += 1
+        self.total += x
+        if x > self.max:
+            self.max = x
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(self.n, 1)
+
+    def __repr__(self):
+        return f"Peak(max={self.max}, mean={self.mean:.1f}, n={self.n})"
 
 
 class P2Quantile:

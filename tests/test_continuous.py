@@ -13,9 +13,15 @@ Also covers the satellite fixes: partial waves (inert slot padding),
 EOS landing on the last round of a superstep, first-token EOS), and the
 ``ServingStats`` TTFT / completion-latency / occupancy accounting.
 """
+import time
+
 import jax
 import numpy as np
 import pytest
+
+# Pretrained-fixture-heavy end-to-end parity suite: slow tier (the
+# fast smoke loop runs `pytest -m "not slow"`; see ROADMAP.md).
+pytestmark = pytest.mark.slow
 
 import repro.configs as C
 from repro.core import eagle
@@ -285,6 +291,12 @@ def test_unpack_eos_on_last_round(pretrained):
     finish must apply on that very round, not the next superstep."""
     eng = _bare_engine(pretrained)
     reqs = [Request(prompt=[1, 2], max_new_tokens=10) for _ in range(2)]
+    for r in reqs:
+        # decoding requests always have their first token committed
+        # before any drained telemetry mentions them; an unset
+        # first_token_t marks a mid-chunk-prefill lane, which decode
+        # telemetry must never retire
+        r.first_token_t = time.perf_counter()
     K, B, gp1 = 2, 2, 4
     n_eff = [[2, 2], [1, 3]]
     tokens = np.arange(K * B * gp1).reshape(K, B, gp1) % 97
@@ -311,6 +323,80 @@ def test_unpack_free_slot_rows_ignored(pretrained):
     eng._unpack_superstep(ys, [req, None], [req.rid, -1], 0.0)
     assert len(req.generated) == 2
     assert eng.stats.tokens_out == 2
+
+
+# ------------------------------------------------- chunked refill prefill
+def _chunk_requests(pretrained, n=10, seed=11):
+    """Bimodal long-tail *prompt* trace: short-chat bulk + long prompts
+    that would stall every resident lane for their full prefill under
+    one-shot refill."""
+    domains = pretrained[4]
+    trace = arrival_trace(domains, n, mode="bursty", burst_size=4,
+                          max_new_range=(5, 14), prompt_len=(8, 16),
+                          long_prompt_frac=0.3, long_prompt_range=(48, 80),
+                          seed=seed)
+    return [Request(prompt=list(ev.prompt),
+                    max_new_tokens=ev.max_new_tokens) for ev in trace]
+
+
+def _chunk_engine(pretrained, rounds, *, chunk, batch=4, greedy=True):
+    cfg, params, dcfg, dparams, _ = pretrained
+    return ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
+                         max_len=160, gamma=3, seed=5, greedy=greedy,
+                         superstep_rounds=rounds, prefill_chunk=chunk)
+
+
+def test_chunked_long_prompt_stream_invariance(pretrained):
+    """Long-prompt bimodal trace with chunking on: the superstep
+    stream, the per-step stream, wave chunks, serving each refill
+    alone, AND the unchunked engine all emit byte-identical per-request
+    streams — chunking changes when prefill work happens, never what is
+    decoded.  The chunked engines' longest uninterruptible prefill op is
+    bounded by the chunk width; the one-shot engine's is the long-tail
+    prompt.  (Finer-grained chunk edge cases — prompt shorter than one
+    chunk, exact chunk multiples, first-token EOS, zero-budget
+    admission mid-chunk, deploy/reseed mid-prefill — are pinned in
+    tests/test_chunked_prefill.py.)"""
+    chunk = 32
+    r_ss = _chunk_requests(pretrained)
+    e_ss = _chunk_engine(pretrained, 8, chunk=chunk)
+    e_ss.serve_stream(list(r_ss))
+    assert all(r.done and r.finish_t is not None for r in r_ss)
+    assert e_ss.stats.tokens_out == sum(len(r.generated) for r in r_ss)
+    assert e_ss.stats.prefill_op_width.max <= chunk
+    assert e_ss.stats.prefill_chunks >= len(r_ss)
+    # mid-prefill lanes were accounted separately, not as idle capacity
+    assert e_ss.stats.prefill_lane_rounds > 0
+    assert e_ss.stats.lane_rounds == e_ss.stats.steps * e_ss.batch
+
+    r_one = _chunk_requests(pretrained)
+    e_one = _chunk_engine(pretrained, 8, chunk=0)
+    e_one.serve_stream(list(r_one))
+    assert [r.generated for r in r_one] == [r.generated for r in r_ss], \
+        "chunked stream diverged from one-shot refill"
+    assert e_one.stats.prefill_op_width.max >= 48   # the long-tail stall
+
+    r_st = _chunk_requests(pretrained)
+    e_st = _chunk_engine(pretrained, 0, chunk=chunk)
+    e_st.serve_stream(list(r_st))
+    assert [r.generated for r in r_st] == [r.generated for r in r_ss], \
+        "chunked per-step loop diverged from the chunked superstep"
+
+    r_wv = _chunk_requests(pretrained)
+    e_wv = _chunk_engine(pretrained, 8, chunk=chunk)
+    for i in range(0, len(r_wv), 4):
+        e_wv.serve_wave(r_wv[i:i + 4])
+    assert [r.generated for r in r_wv] == [r.generated for r in r_ss], \
+        "chunked serve_wave diverged (compat wrapper bypassed chunking?)"
+    assert e_wv.stats.prefill_op_width.max <= chunk
+
+    e_alone = _chunk_engine(pretrained, 8, chunk=chunk, batch=1)
+    for req in r_ss[e_ss.batch:]:
+        solo = Request(prompt=list(req.prompt),
+                       max_new_tokens=req.max_new_tokens)
+        e_alone.serve_wave([solo])
+        assert solo.generated == req.generated, \
+            "chunk-refilled slot diverged from serving the request alone"
 
 
 # -------------------------------------------------------------- scheduler

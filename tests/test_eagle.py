@@ -63,6 +63,7 @@ def test_propose_chain(setup):
     assert rolled["lengths"].tolist() == [0, 0]
 
 
+@pytest.mark.slow
 def test_draft_learns_target_behaviour(setup):
     """Core TIDE premise: training on (capture, next-token) pairs raises
     the draft's top-1 agreement with the target (paper Fig. 7)."""

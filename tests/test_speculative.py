@@ -57,6 +57,7 @@ def _greedy_generate(cfg, params, toks, n_tokens):
     return seqs
 
 
+@pytest.mark.slow
 def test_greedy_spec_exactness(setup):
     """Speculative greedy output ≡ autoregressive greedy output."""
     cfg, dcfg, params, dparams = setup
@@ -134,6 +135,7 @@ def test_spec_commit_bookkeeping(setup):
     assert (am.sum(1) == n).all()
 
 
+@pytest.mark.slow
 def test_sampled_spec_runs(setup):
     cfg, dcfg, params, dparams = setup
     toks = jax.random.randint(jax.random.key(4), (2, 16), 0,

@@ -11,6 +11,10 @@ import jax
 import numpy as np
 import pytest
 
+# Pretrained-fixture-heavy end-to-end parity suite: slow tier (the
+# fast smoke loop runs `pytest -m "not slow"`; see ROADMAP.md).
+pytestmark = pytest.mark.slow
+
 import repro.configs as C
 from repro.core import eagle
 from repro.core.adaptive import (AdaptiveDrafter, LatencyProfile,

@@ -72,13 +72,15 @@ def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len,
                   prefill_chunk=0):
     from repro.core.signals import SignalExtractor, SignalStore
     from repro.serving.engine import ServingEngine
+    from repro.serving.policy import ServingConfig
 
     store = SignalStore()
     ext = SignalExtractor(store, window=32)
-    return ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
-                         max_len=max_len, gamma=3, extractor=ext, seed=11,
-                         superstep_rounds=rounds,
+    scfg = ServingConfig(batch_size=batch, max_len=max_len, gamma=3,
+                         seed=11, superstep_rounds=rounds,
                          prefill_chunk=prefill_chunk)
+    return ServingEngine(cfg, params, dcfg, dparams, config=scfg,
+                         extractor=ext)
 
 
 def _requests(trace):

@@ -28,6 +28,7 @@ MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
     ("continuous", "benchmarks.bench_continuous"),
     ("decoupled", "benchmarks.bench_decoupled"),
+    ("slo", "benchmarks.bench_slo"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -48,11 +49,14 @@ MODULES = [
 # long-prompt chunked-refill scenario: byte parity, the deterministic
 # max-prefill-op-width stall bound, and the modeled-goodput gate) + the
 # decoupled async-training gate (>=1.2x serving vs blocking training +
-# drain parity) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
+# drain parity) + the serving-policy SLO gate (EDF deadline-hit-rate
+# >= 1.2x FIFO, eager-commit short-prompt TTFT, stream byte parity, no
+# added syncs) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
     ("continuous", "benchmarks.bench_continuous"),
     ("decoupled", "benchmarks.bench_decoupled"),
+    ("slo", "benchmarks.bench_slo"),
     ("kernels", "benchmarks.bench_kernels"),
 ]
 

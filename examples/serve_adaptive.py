@@ -3,7 +3,15 @@ with the full system — speculative decoding, zero-overhead signal
 extraction, Algorithm-1 selective training, deploy gating — and watch
 acceptance length recover after each distribution shift.
 
+The serving side is configured through the ``ServingPolicy`` API: one
+``ServingConfig`` names the admission policy (fifo / priority /
+deadline EDF), the chunk-pipeline commit policy (cohort / eager), the
+speculation park control, and every engine knob —
+``TideConfig(serving=...)`` wires it into the system.
+
     PYTHONPATH=src python examples/serve_adaptive.py [--requests 96]
+    PYTHONPATH=src python examples/serve_adaptive.py \\
+        --admission deadline --commit eager
 """
 import argparse
 import time
@@ -17,6 +25,7 @@ from repro.core.tide import TideConfig, TideSystem
 from repro.data.workloads import (Phase, WorkloadStream, make_domains,
                                   training_corpus)
 from repro.models import transformer as T
+from repro.serving.policy import ServingConfig
 from repro.training.trainer import pretrain_target
 
 
@@ -24,6 +33,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--pretrain-steps", type=int, default=120)
+    ap.add_argument("--admission", default="fifo",
+                    choices=["fifo", "priority", "deadline"])
+    ap.add_argument("--commit", default="cohort",
+                    choices=["cohort", "eager"])
     args = ap.parse_args()
 
     cfg = configs.get("tide-tiny")
@@ -43,7 +56,9 @@ def main():
         domains,
         [Phase("science", n // 2), Phase("code", n - n // 2)],  # the shift
         seed=1)
-    tc = TideConfig(batch_size=4, max_len=96, n_threshold=4,
+    scfg = ServingConfig(batch_size=4, max_len=96,
+                         admission=args.admission, commit=args.commit)
+    tc = TideConfig(serving=scfg, n_threshold=4,
                     signal_window=16, adaptive_spec=True)
     sys_ = TideSystem(cfg, params, tc,
                       profile=analytic_tpu_profile(cfg, chips=1))

@@ -26,6 +26,16 @@ while ``async_train=True`` starts the background loop and serving never
 waits on training.  Every control decision of the paper (Algorithm 1
 collection gating, deploy-if-improved) is identical in both modes; the
 asynchrony is an interface property.
+
+Serving control plane: all runtime scheduling decisions (admission
+order, chunk-pipeline commit, the Eq. 5 speculate-vs-plain gate and
+its park/resume control) are delegated to a composed
+``serving.policy.ServingPolicy`` built from the unified
+``ServingConfig`` — ``TideConfig(serving=ServingConfig(...))`` is the
+one place to select FIFO/priority/EDF admission, cohort/eager commit,
+speculation parking, chunked prefill, arrival gating, and the trainer
+thread-contention cap (``trainer_threads``); the flat legacy
+``TideConfig`` fields remain as a convenience/back-compat layer.
 """
 from __future__ import annotations
 
@@ -42,6 +52,7 @@ from repro.core.signals import SignalExtractor
 from repro.core.transport import SignalChannel, pick_training_device
 from repro.models.config import ModelConfig
 from repro.serving.engine import ServingEngine
+from repro.serving.policy import ServingConfig
 from repro.serving.request import Request
 from repro.training.draft_trainer import DraftTrainer
 from repro.training.service import TrainingService
@@ -49,6 +60,11 @@ from repro.training.service import TrainingService
 
 @dataclasses.dataclass
 class TideConfig:
+    """System configuration.  Serving knobs live in one unified
+    ``serving.policy.ServingConfig`` (``TideConfig(serving=...)``); the
+    flat legacy fields remain as a convenience layer — when ``serving``
+    is omitted they assemble one, when it is given they mirror its
+    values so legacy readers keep working."""
     gamma: int = 3
     batch_size: int = 4
     max_len: int = 160
@@ -71,6 +87,45 @@ class TideConfig:
     #                                   the long-prompt refill stall to
     #                                   one chunk per superstep gap);
     #                                   applies to waves and streams alike
+    # ---- serving control plane (see serving/policy.py)
+    admission: str = "fifo"           # fifo | priority | deadline (EDF)
+    commit: str = "cohort"            # cohort | eager chunk-pipeline commit
+    spec_park_patience: int = 0       # >0: park speculation + capture
+    #                                   after N gated-off rounds
+    spec_probe_interval: int = 8      # parked dispatches between probes
+    trainer_threads: int = 0          # >0: pin/deprioritize the trainer
+    #                                   client's host threads
+    serving: Optional[ServingConfig] = None
+
+    # knobs shared (by name) with ServingConfig: assembled into one
+    # when ``serving`` is omitted, mirrored back when it is given — one
+    # list, so a knob added to either side cannot silently desync
+    _SHARED_FIELDS = ("gamma", "batch_size", "max_len", "greedy", "seed",
+                      "gate_arrivals", "prefill_chunk", "reseed_window",
+                      "admission", "commit", "spec_park_patience",
+                      "spec_probe_interval", "trainer_threads")
+
+    def __post_init__(self):
+        if self.serving is None:
+            self.serving = ServingConfig(**{
+                f: getattr(self, f) for f in self._SHARED_FIELDS})
+            return
+        # Flat fields explicitly set away from their TideConfig default
+        # override the serving config; the rest become read mirrors of
+        # it.  Because a constructed TideConfig's flat fields equal its
+        # serving values (mirrored below), this also makes
+        # ``dataclasses.replace(tc, batch_size=8)`` behave: the changed
+        # field differs from both default and serving -> override; the
+        # untouched ones equal serving -> no-op mirror.
+        defaults = {f.name: f.default
+                    for f in dataclasses.fields(type(self))}
+        over = {f: getattr(self, f) for f in self._SHARED_FIELDS
+                if getattr(self, f) != defaults[f]
+                and getattr(self, f) != getattr(self.serving, f)}
+        if over:
+            self.serving = dataclasses.replace(self.serving, **over)
+        for f in self._SHARED_FIELDS:
+            setattr(self, f, getattr(self.serving, f))
 
 
 class TideSystem:
@@ -112,21 +167,24 @@ class TideSystem:
             train_epochs=tide_cfg.train_epochs,
             train_min_steps=tide_cfg.train_min_steps, seed=tide_cfg.seed,
             device=train_device, publish_device=serve_device,
+            trainer_threads=tide_cfg.trainer_threads,
             engine_steps_fn=lambda: self.engine.stats.steps)
         self.events = self.service.events
+        # the engine consumes one unified ServingConfig + the composed
+        # ServingPolicy it names (re-seed only makes sense with the
+        # async deploy path, so sync mode zeroes it)
+        scfg = dataclasses.replace(
+            tide_cfg.serving,
+            reseed_window=(tide_cfg.reseed_window if tide_cfg.async_train
+                           else 0))
         self.engine = ServingEngine(
-            cfg, params, self.dcfg, dparams, gamma=tide_cfg.gamma,
-            max_len=tide_cfg.max_len, batch_size=tide_cfg.batch_size,
-            greedy=tide_cfg.greedy, drafter=drafter,
+            cfg, params, self.dcfg, dparams, config=scfg,
+            policy=scfg.make_policy(drafter),
             controller=self.controller if tide_cfg.selective_training
             else None,
-            extractor=self.extractor, seed=tide_cfg.seed,
+            extractor=self.extractor,
             deploy_source=(self.service.poll if tide_cfg.async_train
-                           else None),
-            reseed_window=(tide_cfg.reseed_window if tide_cfg.async_train
-                           else 0),
-            gate_arrivals=tide_cfg.gate_arrivals,
-            prefill_chunk=tide_cfg.prefill_chunk)
+                           else None))
         # start in collection mode so the cold draft trains immediately
         self.controller.collection_enabled = True
         if tide_cfg.async_train:
@@ -172,13 +230,18 @@ class TideSystem:
 
     def requests_from_trace(self, trace) -> List[Request]:
         """Materialize ``data.workloads.ArrivalEvent`` records as engine
-        requests.  Arrival *order* is always preserved; arrival *times*
+        requests.  Trace *order* is always preserved (admission order is
+        then the admission policy's call); arrival *times*
         (``ArrivalEvent.t`` → ``Request.arrives_at``) are replayed only
         when ``gate_arrivals`` is set — otherwise the trace is served as
-        a backlog, as fast as slots free up."""
+        a backlog, as fast as slots free up.  SLO annotations
+        (``deadline``, ``priority``) ride along for the
+        deadline/priority admission policies."""
         return [Request(prompt=ev.prompt, domain=ev.domain,
                         max_new_tokens=ev.max_new_tokens,
-                        arrives_at=ev.t)
+                        arrives_at=ev.t,
+                        deadline=getattr(ev, "deadline", None),
+                        priority=getattr(ev, "priority", 0))
                 for ev in trace]
 
     # ----------------------------------------------------------- lifecycle
@@ -222,6 +285,8 @@ class TideSystem:
             "idle_supersteps": st.idle_supersteps,
             "deploys": st.deploys,
             "reseeds": st.reseeds,
+            "spec_parks": self.engine.policy.speculation.parks,
+            "spec_resumes": self.engine.policy.speculation.resumes,
             "train_cycles": len([e for e in self.events
                                  if e["kind"] == "train_cycle"]),
             "deployed": self.gate.version,

@@ -114,11 +114,18 @@ class ArrivalEvent:
 
     ``max_new_tokens`` is ragged by design — heterogeneous budgets are
     what makes run-to-completion waves convoy behind their longest
-    member, the workload continuous batching exists for."""
+    member, the workload continuous batching exists for.
+
+    ``deadline``/``priority`` are the SLO annotations consumed by the
+    ``DeadlineAdmission``/``PriorityAdmission`` serving policies; the
+    default FIFO policy ignores them, so annotated traces replay
+    identically under it."""
     t: float                  # arrival time (seconds since trace start)
     domain: str
     prompt: List[int]
     max_new_tokens: int
+    deadline: Optional[float] = None   # completion SLO (since trace start)
+    priority: int = 0                  # admission preference (higher first)
 
 
 def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
@@ -131,6 +138,10 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
                   long_prompt_frac: float = 0.0,
                   long_prompt_range: Tuple[int, int] = (64, 96),
                   long_prompt_period: int = 0,
+                  deadline_slack: Optional[Tuple[float, float]] = None,
+                  tight_frac: float = 0.0,
+                  tight_slack: Optional[Tuple[float, float]] = None,
+                  priority_levels: int = 0,
                   schedule: Optional[List[Phase]] = None,
                   seed: int = 0) -> List[ArrivalEvent]:
     """Generate a request arrival trace with ragged budgets and prompts.
@@ -155,11 +166,25 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
     drawn from ``long_prompt_range`` instead: the bimodal
     *prompt*-length mix (RAG contexts, pasted documents) whose long
     tail stalls resident decode lanes for the whole refill prefill
-    unless the engine chunks it (``ServingEngine(prefill_chunk=...)``).
-    Timestamps are bookkeeping for latency metrics — the serving engine
-    admits in trace order, as fast as slots free up.
+    unless the engine chunks it (``ServingConfig(prefill_chunk=...)``).
+    Timestamps are bookkeeping for latency metrics — under the default
+    FIFO admission policy the serving engine admits in trace order, as
+    fast as slots free up.
+
+    SLO annotation: with ``deadline_slack=(lo, hi)`` each event gets a
+    completion deadline ``t + U(lo, hi)`` (seconds since trace start);
+    with probability ``tight_frac`` the slack is drawn from
+    ``tight_slack`` instead — the bimodal loose/tight SLO mix
+    (interactive vs batch traffic) that EDF admission
+    (``DeadlineAdmission``) exists for.  ``priority_levels=k`` draws a
+    uniform priority in [0, k) for ``PriorityAdmission``.  All SLO
+    fields are inert under FIFO.
     """
     rng = np.random.default_rng(seed)
+    # SLO annotations draw from a derived stream so annotating a trace
+    # never perturbs its prompts/budgets/timings — the annotated trace
+    # is the plain trace plus metadata (pinned in tests/test_policy.py)
+    slo_rng = np.random.default_rng(seed + 0x510)
     if schedule is not None:
         doms = [p.domain for p in schedule for _ in range(p.n_requests)]
         doms = doms[:n_requests]
@@ -195,7 +220,16 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
         rng_range = (long_range if long_frac > 0
                      and rng.random() < long_frac else max_new_range)
         mx = int(rng.integers(rng_range[0], rng_range[1] + 1))
-        events.append(ArrivalEvent(t, name, prompt, mx))
+        deadline = None
+        if deadline_slack is not None:
+            slack = deadline_slack
+            if tight_slack is not None and slo_rng.random() < tight_frac:
+                slack = tight_slack
+            deadline = t + float(slo_rng.uniform(slack[0], slack[1]))
+        prio = (int(slo_rng.integers(0, priority_levels))
+                if priority_levels > 0 else 0)
+        events.append(ArrivalEvent(t, name, prompt, mx,
+                                   deadline=deadline, priority=prio))
     return events
 
 

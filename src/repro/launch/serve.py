@@ -45,6 +45,31 @@ def main():
                          "0 = one-shot): bounds the stall a long prompt "
                          "injects into resident decode lanes to one "
                          "chunk per superstep gap")
+    ap.add_argument("--policy", choices=["fifo", "priority", "deadline"],
+                    default="fifo",
+                    help="admission policy: fifo (arrival order), "
+                         "priority (highest Request.priority first), or "
+                         "deadline (EDF over Request.deadline — the "
+                         "latency-SLO policy); implies --continuous for "
+                         "non-fifo choices")
+    ap.add_argument("--commit", choices=["cohort", "eager"],
+                    default="cohort",
+                    help="chunk-pipeline commit policy: cohort (default; "
+                         "an admission batch's pipelines land together, "
+                         "densest decode rounds) or eager (each pipeline "
+                         "commits when its prefill finishes — better "
+                         "short-prompt TTFT under mixed bursts)")
+    ap.add_argument("--spec-park", type=int, default=0,
+                    help=">0: park speculation + signal capture after N "
+                         "consecutive gated-off rounds; resume via "
+                         "periodic forced-speculation acceptance probes")
+    ap.add_argument("--trainer-threads", type=int, default=0,
+                    help=">0: bound the async trainer's host-thread "
+                         "contention with serving by deprioritizing the "
+                         "training thread at the OS scheduler (the "
+                         "in-process XLA pool is shared, so a hard "
+                         "per-client thread cap needs the out-of-"
+                         "process trainer — see ROADMAP)")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     args = ap.parse_args()
@@ -87,27 +112,42 @@ def main():
                                      steps=args.pretrain_steps, lr=3e-3)
     print(f"  loss {losses[0]:.2f} -> {losses[-1]:.2f}")
 
+    from repro.serving.policy import ServingConfig
+
     n = args.requests
-    args.continuous = args.continuous or args.gate_arrivals
-    tc = TideConfig(gamma=args.gamma, batch_size=args.batch,
-                    max_len=96 if not args.continuous else 160,
+    args.continuous = (args.continuous or args.gate_arrivals
+                       or args.policy != "fifo")
+    scfg = ServingConfig(gamma=args.gamma, batch_size=args.batch,
+                         max_len=96 if not args.continuous else 160,
+                         admission=args.policy, commit=args.commit,
+                         spec_park_patience=args.spec_park,
+                         gate_arrivals=args.gate_arrivals,
+                         prefill_chunk=args.prefill_chunk,
+                         reseed_window=32 if args.async_train else 0,
+                         trainer_threads=args.trainer_threads)
+    tc = TideConfig(serving=scfg,
                     n_threshold=4, signal_window=16,
                     adaptive_spec=not args.no_adaptive,
-                    async_train=args.async_train,
-                    reseed_window=32 if args.async_train else 0,
-                    gate_arrivals=args.gate_arrivals,
-                    prefill_chunk=args.prefill_chunk)
+                    async_train=args.async_train)
     profile = analytic_tpu_profile(cfg, chips=1)
     sys_ = TideSystem(cfg, params, tc, profile=profile)
     t0 = time.perf_counter()
     if args.continuous:
         # ragged budgets never exceed the user's --max-new-tokens cap
         mx = max(args.max_new_tokens, 1)
+        # non-FIFO policies need SLO-annotated traces: a bimodal
+        # loose/tight deadline mix for EDF, random priority classes
+        slo = {}
+        if args.policy == "deadline":
+            slo = dict(deadline_slack=(8.0, 16.0), tight_frac=0.3,
+                       tight_slack=(0.5, 2.0))
+        elif args.policy == "priority":
+            slo = dict(priority_levels=3)
         trace = arrival_trace(
             domains, n, mode="poisson", rate=16.0,
             max_new_range=(min(8, mx), mx),
             schedule=[Phase("science", n // 2), Phase("code", n - n // 2)],
-            seed=1)
+            seed=1, **slo)
         sys_.run_stream(sys_.requests_from_trace(trace))
     else:
         stream = WorkloadStream(domains, [Phase("science", n // 2),

@@ -1,5 +1,33 @@
 """TIDE Inference Serving Engine — continuous batching over a fused
-on-device decode superstep.
+on-device decode superstep, under a pluggable policy control plane.
+
+Control plane (``serving/policy.py``): every host-side scheduling
+decision the engine makes between superstep dispatches is delegated to
+one composed ``ServingPolicy`` —
+
+  * **admission** (which pending request enters a freed lane):
+    ``FifoAdmission`` (default, byte-parity with the pre-policy
+    engine), ``PriorityAdmission``, or ``DeadlineAdmission`` (EDF over
+    ``Request.deadline`` — latency-SLO serving);
+  * **commit** (how chunked-refill pipelines land): ``CohortCommit``
+    (default — an admission batch's pipelines activate together,
+    densest decode rounds) or ``EagerCommit`` (each pipeline lands the
+    moment its prefill completes — short-prompt TTFT under mixed
+    bursts);
+  * **speculation**: the Eq. 5 adaptive gate evaluated in-graph from a
+    threshold table, plus a runtime park/resume control that can turn
+    speculation *and* signal capture off when acceptance-adjusted gain
+    stays below break-even, probing periodically with a
+    forced-speculation superstep to detect recovery.
+
+Policy hooks run at admission, refill-group formation, commit, and
+superstep dispatch — host-side decisions only, so the
+one-sync-per-superstep pipelining below is untouched; the speculation
+tables share one shape/dtype, so park/probe swaps never retrace.
+Engine knobs travel in one ``ServingConfig``
+(``ServingEngine(config=..., policy=...)``); the legacy control kwargs
+(``gate_arrivals``, ``completion_sink``, bare ``prefill_chunk``)
+survive as deprecation shims that fold into it byte-identically.
 
 Architecture (slot lifecycle):
 
@@ -10,11 +38,12 @@ Architecture (slot lifecycle):
     with the Eq. 5 speculate-vs-plain choice, token commit/EOS/budget
     masks, acceptance-EMA, and per-round ``extract_pack`` signal
     compaction all in-graph.  One device→host sync per K rounds.
-  * A host-side ``serving.scheduler.Scheduler`` owns slot admission:
-    ``serve_stream(request_iter)`` keeps the engine resident across an
-    entire request stream, and between supersteps **refills** finished
-    slots from the pending queue — no wave teardown, no convoy effect
-    from one long request holding B-1 idle lanes.
+  * A host-side ``serving.scheduler.Scheduler`` owns slot admission
+    (order per the ``AdmissionPolicy``): ``serve_stream(request_iter)``
+    keeps the engine resident across an entire request stream, and
+    between supersteps **refills** finished slots from the pending
+    queue — no wave teardown, no convoy effect from one long request
+    holding B-1 idle lanes.
   * A refill is a jitted per-slot op: the new prompt is prefilled and
     its cache lanes are written into the *live* device state
     (``speculative.scatter_target_cache`` / ``eagle.scatter_draft_rows``
@@ -42,10 +71,12 @@ Architecture (slot lifecycle):
     (``Scheduler.refill_groups``): co-admitted prompts split into
     per-width pipelines whose chunks interleave through the same gaps,
     so a short prompt neither pays a long prompt's padding nor rides
-    its multi-chunk pipeline — but the pipelines of one admission batch
-    form a *cohort* that commits together (when its slowest member
-    finishes), so the lanes of one admission activate in the same gap
-    and decode rounds stay as dense as a one-shot refill's; with no
+    its multi-chunk pipeline — and under the default ``CohortCommit``
+    the pipelines of one admission batch form a *cohort* that commits
+    together (when its slowest member finishes), so the lanes of one
+    admission activate in the same gap and decode rounds stay as dense
+    as a one-shot refill's (``EagerCommit`` trades that density for
+    short-prompt TTFT); with no
     resident lane decoding (stream prologue, drained-empty supersteps)
     chunks run back-to-back to the next commit instead of trickling
     one per empty gap.  Mid-prefill lanes stay inert
@@ -119,6 +150,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -131,9 +163,17 @@ from repro.core.controller import Decision, TrainingController
 from repro.core.signals import SignalExtractor
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.policy import ServingConfig, ServingPolicy
 from repro.serving.request import Request, inert_request
 from repro.serving.scheduler import Scheduler
 from repro.serving.stats import P2Quantile, Peak, Ring
+
+
+def _deprecated_kwarg(name: str, replacement: str):
+    warnings.warn(
+        f"ServingEngine({name}=...) is deprecated; pass {replacement} "
+        "instead (see serving.policy.ServingConfig / ServingPolicy)",
+        DeprecationWarning, stacklevel=3)
 
 # sampling-stream id for lanes that never emit (inert padding, free
 # slots) — any fixed value works, it is only ever folded into keys whose
@@ -299,22 +339,75 @@ class ServingEngine:
                  eos_id: Optional[int] = None,
                  deploy_source: Optional[Callable[[], object]] = None,
                  reseed_window: int = 0,
-                 gate_arrivals: bool = False,
+                 gate_arrivals: Optional[bool] = None,
                  completion_sink: Optional[Callable[[Request], None]]
                  = None,
                  idle_wait_s: float = 0.005,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: Optional[int] = None,
+                 config: Optional[ServingConfig] = None,
+                 policy: Optional[ServingPolicy] = None):
+        # ------------------------------------------------ configuration
+        # One ServingConfig is the source of truth for every serving
+        # knob.  Callers either pass ``config=`` (the unified API; the
+        # individual knob kwargs are then ignored) or the individual
+        # kwargs (assembled into a config here).  The pre-policy control
+        # kwargs survive as thin deprecation shims that fold into the
+        # config — byte-identical behavior, plus a DeprecationWarning.
+        knobs = dict(gamma=(gamma, 3), batch_size=(batch_size, 4),
+                     max_len=(max_len, 160), greedy=(greedy, True),
+                     superstep_rounds=(superstep_rounds, 8),
+                     eos_id=(eos_id, None), ema=(ema, 0.9),
+                     seed=(seed, 0), reseed_window=(reseed_window, 0),
+                     idle_wait_s=(idle_wait_s, 0.005))
+        if config is None:
+            config = ServingConfig(
+                **{k: v for k, (v, _) in knobs.items()})
+        else:
+            # config is the source of truth; a knob kwarg passed
+            # alongside it would be silently ignored — fail loudly
+            clash = [k for k, (v, d) in knobs.items() if v != d]
+            if clash:
+                raise ValueError(
+                    f"ServingEngine got both config= and knob kwargs "
+                    f"{clash}; set them on the ServingConfig instead")
+            config = dataclasses.replace(config)   # engine-private copy
+        if gate_arrivals is not None:
+            _deprecated_kwarg("gate_arrivals",
+                              "ServingConfig(gate_arrivals=...)")
+            config.gate_arrivals = gate_arrivals
+        if completion_sink is not None:
+            _deprecated_kwarg("completion_sink",
+                              "ServingConfig(completion_sink=...)")
+            config.completion_sink = completion_sink
+        if prefill_chunk is not None:
+            if prefill_chunk:
+                _deprecated_kwarg("prefill_chunk",
+                                  "ServingConfig(prefill_chunk=...)")
+            config.prefill_chunk = prefill_chunk
+        self.config = config
         self.cfg, self.dcfg = cfg, dcfg
         self.params, self.dparams = params, dparams
-        self.gamma, self.max_len, self.batch = gamma, max_len, batch_size
-        self.greedy = greedy
-        self.drafter = drafter
+        self.gamma, self.max_len = config.gamma, config.max_len
+        self.batch = config.batch_size
+        self.greedy = config.greedy
         self.controller = controller
         self.extractor = extractor
         self.accept_ema = 1.0
-        self._ema = ema
-        self.superstep_rounds = superstep_rounds
-        self.eos_id = eos_id
+        self._ema = config.ema
+        self.superstep_rounds = config.superstep_rounds
+        self.eos_id = config.eos_id
+        # ------------------------------------------------ control plane
+        # Every host-side scheduling decision (admission order, chunk-
+        # pipeline commit, speculate-vs-plain + park) is delegated to
+        # the composed ServingPolicy; the default composition is
+        # byte-parity with the pre-policy engine.
+        if policy is None:
+            policy = config.make_policy()
+        if drafter is not None and policy.speculation.drafter is None:
+            policy.speculation.drafter = drafter
+        self.policy = policy
+        self.drafter = policy.speculation.drafter
+        self.policy.speculation.prepare(self.batch)
         # decoupled-training deploy slot: a callable returning the latest
         # published DraftVersion (or None); polled once per superstep —
         # a host attribute read, zero extra device syncs
@@ -322,20 +415,20 @@ class ServingEngine:
         self._deploy_seq = 0
         # >0 enables deploy-time in-place re-seed of resident lanes'
         # draft cache from the rolling capture ring (superstep mode)
-        self.reseed_window = (max(reseed_window, gamma + 2)
-                              if reseed_window else 0)
-        self.gate_arrivals = gate_arrivals
-        self.completion_sink = completion_sink
-        self.idle_wait_s = idle_wait_s
+        self.reseed_window = (max(config.reseed_window, self.gamma + 2)
+                              if config.reseed_window else 0)
+        self.gate_arrivals = config.gate_arrivals
+        self.completion_sink = config.completion_sink
+        self.idle_wait_s = config.idle_wait_s
         # >0 enables chunked refill prefill: prompts are prefilled in
         # fixed-width chunks that interleave with resident supersteps
         # instead of stalling every decode lane for the whole prompt.
         # Must be a multiple of 8 (the refill shape bucket, so the
         # ragged first chunk stays bucketed too).  0 = legacy one-shot.
-        if prefill_chunk and prefill_chunk % 8:
-            raise ValueError(f"prefill_chunk {prefill_chunk} must be a "
-                             "multiple of 8 (refill shape bucket)")
-        self.prefill_chunk = prefill_chunk
+        if config.prefill_chunk and config.prefill_chunk % 8:
+            raise ValueError(f"prefill_chunk {config.prefill_chunk} must "
+                             "be a multiple of 8 (refill shape bucket)")
+        self.prefill_chunk = config.prefill_chunk
         self._pipelines: List[_ChunkPipeline] = []
         self._cohort_next = 0
         self._sleep = time.sleep           # injectable for tests
@@ -343,9 +436,9 @@ class ServingEngine:
         # constant base key for per-request sampling streams: lane keys
         # are fold_in(fold_in(base, sid), step) with sid the request's
         # admission ordinal — identical across scheduling policies
-        self._base_key = jax.random.key(seed)
+        self._base_key = jax.random.key(config.seed)
         self._sid_next = 0
-        self._key = jax.random.key(seed)   # legacy chain (bench probes)
+        self._key = jax.random.key(config.seed)  # legacy chain (probes)
         self._build_steps()
 
     # ------------------------------------------------------------ jit fns
@@ -608,9 +701,12 @@ class ServingEngine:
 
         self._superstep_fn = None
         if self.superstep_rounds > 0:
-            table = None
-            if self.drafter is not None:
-                table = jnp.asarray(self.drafter.threshold_table(self.batch))
+            # default table for direct callers (tests/bench probes that
+            # dispatch the compiled fn themselves); the serving loop
+            # passes the SpeculationPolicy's per-dispatch table — the
+            # Eq. 5 gate, or its park/probe variants, all the same
+            # shape/dtype so one compiled trace serves every mode
+            default_table = self.policy.speculation.dispatch_table()
             ss = functools.partial(
                 spec.decode_superstep, cfg, dcfg,
                 rounds=self.superstep_rounds, gamma=gamma,
@@ -619,7 +715,8 @@ class ServingEngine:
                 collect_signals=self.extractor is not None)
 
             @functools.partial(jax.jit, donate_argnums=(2, 3, 4))
-            def _superstep(params, dparams, cache, dcache, state, max_new):
+            def _superstep(params, dparams, cache, dcache, state, max_new,
+                           table=default_table):
                 return ss(params, dparams, cache, dcache, state, max_new,
                           table)
 
@@ -677,6 +774,7 @@ class ServingEngine:
         self._pipelines = []
         self._cohort_next = 0
         self.stats = ServingStats()
+        self.policy.speculation.reset()
         if self.drafter is not None:
             self.drafter.enabled = True
 
@@ -686,13 +784,28 @@ class ServingEngine:
 
     def _assign_sids(self, admitted):
         """Stamp admitted requests with their sampling-stream id — the
-        engine-lifetime admission ordinal, which is identical for a
-        given request stream under every scheduling policy (FIFO pops
-        in queue order everywhere)."""
+        engine-lifetime admission ordinal, identical for a given
+        admission order (the policy's) across engine modes — and the
+        deterministic admission round (the TTFT round-clock origin)."""
         for _, r in admitted:
+            if r.admit_round is None:
+                r.admit_round = self.stats.steps
             if r.sid is None:
                 r.sid = self._sid_next
                 self._sid_next += 1
+
+    def _apply_capture_park(self):
+        """Parked speculation parks signal capture with it; on resume
+        the controller (when present) re-drives ``extractor.enabled``
+        each round, otherwise the park control owns it and must restore
+        capture itself.  No-op unless the park control is on — default
+        engines keep controller/extractor semantics untouched."""
+        if self.extractor is None or not self.policy.speculation.park_patience:
+            return
+        if self.policy.speculation.blocks_capture:
+            self.extractor.enabled = False
+        elif self.controller is None:
+            self.extractor.enabled = True
 
     def _idle_tick(self, wait: Optional[float]):
         """No admissible work but the gated stream has future arrivals:
@@ -707,6 +820,7 @@ class ServingEngine:
     def _finish(self, r: Request):
         if r.finish_t is None:
             r.finish()
+            r.finish_round = self.stats.steps    # deterministic stamp
             self.stats.completed += 1
             if r.latency is not None:
                 self.stats.record_latency(r.latency)
@@ -721,6 +835,7 @@ class ServingEngine:
         r.generated.append(tok)
         if r.first_token_t is None:
             r.first_token_t = time.perf_counter()
+            r.first_token_round = self.stats.steps
             self.stats.record_ttft(r.ttft)
         self.stats.tokens_out += 1
         if self.eos_id is not None and tok == self.eos_id:
@@ -779,6 +894,7 @@ class ServingEngine:
         completed requests in completion order (empty when a
         ``completion_sink`` streams them out instead)."""
         sched = Scheduler(self.batch, requests,
+                          policy=self.policy.admission,
                           gate_arrivals=self.gate_arrivals,
                           completion_sink=self.completion_sink)
         t0 = time.perf_counter()
@@ -874,14 +990,15 @@ class ServingEngine:
                               self.prefill_chunk, cohort, order)
 
     def _spawn_pipelines(self, admitted):
-        """One chunk pipeline per padded-width bucket of the admission
-        batch (``Scheduler.refill_groups``) — several refills' chunks
-        then pipeline through the same inter-superstep gaps.  The
-        groups share a commit cohort (see ``_ChunkPipeline``)."""
+        """One chunk pipeline per refill group of the admission batch
+        (group formation delegated to the ``CommitPolicy`` — per
+        padded-width bucket by default) — several refills' chunks then
+        pipeline through the same inter-superstep gaps.  The groups
+        share a commit cohort (see ``_ChunkPipeline``)."""
         cohort = self._cohort_next
         self._cohort_next += 1
-        for i, group in enumerate(
-                Scheduler.refill_groups(admitted, self.prefill_chunk)):
+        for i, group in enumerate(self.policy.commit.refill_groups(
+                admitted, self.prefill_chunk)):
             self._pipelines.append(self._make_pipeline(group, cohort, i))
 
     def _chunk_args(self, pl: _ChunkPipeline):
@@ -956,8 +1073,12 @@ class ServingEngine:
             if pl.pos + w < pl.width:          # interior chunk
                 gap_tokens += self._advance_pipeline(pl)
                 continue
-            solo = not any(q.cohort == pl.cohort and q is not pl
-                           for q in self._pipelines)
+            # commit policy: eager pipelines always commit alone (fused
+            # final chunk, the moment prefill completes); cohort
+            # pipelines wait for their admission-batch siblings
+            solo = (not self.policy.commit.cohort
+                    or not any(q.cohort == pl.cohort and q is not pl
+                               for q in self._pipelines))
             if not solo:
                 # final chunk, cohort siblings still prefilling: stage
                 # and wait (commit lands with the cohort in pass 2)
@@ -1106,8 +1227,9 @@ class ServingEngine:
                 self.stats.reseeds += 1
             dispatched = False
             if sched.has_work():
-                out = self._superstep_fn(self.params, self.dparams, cache,
-                                         dcache, state, max_new)
+                out = self._superstep_fn(
+                    self.params, self.dparams, cache, dcache, state,
+                    max_new, self.policy.speculation.dispatch_table())
                 self.stats.dispatches += 1
                 cache, dcache, state = (out["cache"], out["dcache"],
                                         out["state"])
@@ -1243,6 +1365,10 @@ class ServingEngine:
             self.accept_ema = float(ys["ema"][r])
             if self.drafter is not None:
                 self.drafter.enabled = use_spec
+            # park/resume control: host-side, from the same telemetry
+            # replay (one superstep of pipelining lag, zero syncs)
+            self.policy.speculation.observe_round(
+                int(active_after.sum()), self.accept_ema, use_spec)
             decision = Decision.NONE
             if self.controller is not None:
                 decision = self.controller.observe_gated(
@@ -1250,6 +1376,7 @@ class ServingEngine:
                 if self.extractor is not None:
                     self.extractor.enabled = \
                         self.controller.collection_enabled
+            self._apply_capture_park()
             if (self.extractor is not None and self.extractor.enabled
                     and "sig_feats" in ys):
                 if sig_np is None:
@@ -1318,10 +1445,11 @@ class ServingEngine:
                     self._idle_tick(sched.next_arrival_in())
                     continue     # gated arrivals still due
                 break
-            use_spec = True
-            if self.drafter is not None:
-                use_spec = self.drafter.update(int(active.sum()),
-                                               self.accept_ema)
+            # speculate-vs-plain: the SpeculationPolicy's host-side twin
+            # of the in-graph gate (drafter.update when a drafter is
+            # set; park/probe schedule when the park control is on)
+            use_spec = self.policy.speculation.step_decision(
+                int(active.sum()), self.accept_ema)
             self.stats.dispatches += 1
             keys = (self._null_keys if self.greedy else
                     self._lane_keys_fn(jnp.asarray(sids),
@@ -1369,6 +1497,9 @@ class ServingEngine:
                         n = int(eos_pos[0]) + 1
                         eos_hit[i] = True
                 n_eff[i] = n
+            self.policy.speculation.observe_round(
+                int(active.sum()), self.accept_ema, use_spec)
+            self._apply_capture_park()
             if self.extractor is not None:
                 # only tokens actually kept (post EOS/budget cut) become
                 # training signals

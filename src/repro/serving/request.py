@@ -19,6 +19,16 @@ class Request:
     # trace arrival offset (seconds since stream start); admission is
     # held until then when the scheduler runs with gate_arrivals
     arrives_at: Optional[float] = None
+    # ---- SLO annotations (consumed by admission policies; ignored by
+    # the default FIFO policy, so they are free to carry everywhere)
+    # admission preference: higher admits first under PriorityAdmission
+    priority: int = 0
+    # completion deadline for DeadlineAdmission's EDF order.  Units are
+    # whatever the workload measures service in — wall seconds since
+    # stream start for gated traces, or deterministic executed-round
+    # units (compare ``finish_round``) for the SLO benchmarks — EDF
+    # only needs a consistent total order
+    deadline: Optional[float] = None
     # filled by the engine
     generated: List[int] = dataclasses.field(default_factory=list)
     # slot-admission instant (scheduler stamp): the TTFT clock starts
@@ -27,6 +37,16 @@ class Request:
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # deterministic twins of the wall-clock stamps: the engine's
+    # executed-round count (``stats.steps``) at slot admission / first
+    # token / completion.  Scheduling benchmarks gate on these instead
+    # of wall time — the round schedule of a greedy stream is a pure
+    # function of the admission order, so SLO wins (deadline hit rate,
+    # eager-commit TTFT = ``first_token_round - admit_round``) are
+    # reproducible on noisy shared hosts
+    admit_round: Optional[int] = None
+    first_token_round: Optional[int] = None
+    finish_round: Optional[int] = None
     # engine-assigned sampling-stream id (admission ordinal): the
     # per-request PRNG fold-in key, identical for a given stream across
     # every scheduling policy — what makes sampled decoding

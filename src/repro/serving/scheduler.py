@@ -6,9 +6,14 @@ supersteps, which finished slots can be refilled from the pending
 queue; the engine then writes the new prompts into the resident device
 state without tearing it down (``ServingEngine.serve_stream``).
 
-Requests are admitted in arrival order (the queue is FIFO and is topped
-up lazily from the request iterator, so an unbounded stream never has to
-be materialized).  Two admission policies:
+Admission *order* is delegated to a ``serving.policy.AdmissionPolicy``:
+the default ``FifoAdmission`` admits in arrival order with the queue
+topped up lazily from the request iterator (one pull only when the
+queue is empty, so an unbounded stream is never materialized — the
+pre-policy byte-parity behavior); reordering policies
+(``PriorityAdmission``, ``DeadlineAdmission``) declare a ``lookahead``
+window the scheduler keeps materialized and pick among the admissible
+candidates per freed slot.  Orthogonally, two arrival modes:
 
   * **backlog** (default) — arrival timestamps are bookkeeping only; a
     trace is replayed as fast as the engine can drain it (the goodput
@@ -18,7 +23,9 @@ be materialized).  Two admission policies:
     its arrival time; with all slots idle and the queue empty the
     engine emits *idle supersteps* instead of dispatching, which is
     exactly the slack the decoupled draft trainer consumes on
-    single-device hosts.
+    single-device hosts.  Under strict-order policies (FIFO) the queue
+    head gates later arrivals; reordering policies admit any arrived
+    candidate.
 
 Chunked prefill: with the engine's ``prefill_chunk`` enabled,
 ``refill_groups`` partitions each admission batch into per-width refill
@@ -38,19 +45,22 @@ from collections import deque
 from typing import (Callable, Deque, Dict, Iterable, Iterator, List,
                     Optional, Tuple)
 
+from repro.serving.policy import AdmissionPolicy, FifoAdmission
 from repro.serving.request import Request
 
 
 class Scheduler:
-    """FIFO admission queue + slot occupancy for one serving engine."""
+    """Policy-driven admission queue + slot occupancy for one engine."""
 
     def __init__(self, batch_size: int,
                  requests: Optional[Iterable[Request]] = None, *,
+                 policy: Optional[AdmissionPolicy] = None,
                  gate_arrivals: bool = False,
                  clock: Callable[[], float] = time.perf_counter,
                  completion_sink: Optional[Callable[[Request], None]]
                  = None):
         self.batch = batch_size
+        self.policy = policy if policy is not None else FifoAdmission()
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._queue: Deque[Request] = deque()
         self._iter: Optional[Iterator[Request]] = (
@@ -92,11 +102,30 @@ class Scheduler:
             return True
         return req.arrives_at <= self._now()
 
+    def _fill(self):
+        """Top the queue up to the policy's lookahead window (at least
+        one entry).  FIFO's lookahead of 0 keeps the pre-policy lazy
+        pull: exactly one request is materialized, only when the queue
+        is empty."""
+        want = max(self.policy.lookahead, 1)
+        while len(self._queue) < want and self._pull():
+            pass
+
+    def _admissible(self) -> List[int]:
+        """Queue indices the policy may admit right now.  Strict-order
+        policies expose only the head (and only once it has arrived);
+        reordering policies expose every arrived entry in the window."""
+        self._fill()
+        if not self._queue:
+            return []
+        if self.policy.strict_order:
+            return [0] if self._arrived(self._queue[0]) else []
+        return [i for i, r in enumerate(self._queue) if self._arrived(r)]
+
     def has_pending(self) -> bool:
-        """A request is admissible right now (arrived, in FIFO order)."""
-        if not self._queue and not self._pull():
-            return False
-        return self._arrived(self._queue[0])
+        """A request is admissible right now (per the admission policy
+        and arrival gating)."""
+        return bool(self._admissible())
 
     def more_coming(self) -> bool:
         """Requests remain that are not yet admissible (future arrivals
@@ -104,14 +133,18 @@ class Scheduler:
         return bool(self._queue) or not self._exhausted
 
     def next_arrival_in(self) -> Optional[float]:
-        """Seconds until the head request becomes admissible; 0.0 if one
+        """Seconds until some request becomes admissible; 0.0 if one
         already is; None if the stream is exhausted."""
-        if not self._queue and not self._pull():
+        self._fill()
+        if not self._queue:
             return None
-        head = self._queue[0]
-        if self._arrived(head):
+        if self._admissible():
             return 0.0
-        return max(head.arrives_at - self._now(), 0.0)
+        if self.policy.strict_order:
+            return max(self._queue[0].arrives_at - self._now(), 0.0)
+        nxt = min(r.arrives_at for r in self._queue
+                  if r.arrives_at is not None)
+        return max(nxt - self._now(), 0.0)
 
     def has_work(self) -> bool:
         """True while any slot is occupied or any request is admissible."""
@@ -135,19 +168,23 @@ class Scheduler:
         return freed
 
     def admit(self) -> List[Tuple[int, Request]]:
-        """Fill free slots from the pending queue (FIFO; gated on
-        arrival time when enabled).  Returns the (slot, request)
-        assignments made — the engine's refill batch.  Each admitted
-        request is stamped with ``admit_t`` (prefill starts now — the
-        TTFT clock origin)."""
+        """Fill free slots from the pending queue (admission order per
+        the policy; gated on arrival time when enabled).  Returns the
+        (slot, request) assignments made — the engine's refill batch.
+        Each admitted request is stamped with ``admit_t`` (prefill
+        starts now — the TTFT clock origin)."""
         out = []
         now = time.perf_counter()
         for i, r in enumerate(self.slots):
             if r is not None:
                 continue
-            if not self.has_pending():
+            cands = self._admissible()
+            if not cands:
                 break
-            req = self._queue.popleft()
+            pick = cands[self.policy.select(
+                [self._queue[j] for j in cands], self._now())]
+            req = self._queue[pick]
+            del self._queue[pick]
             req.admit_t = now
             self.slots[i] = req
             self.admitted += 1

@@ -21,6 +21,7 @@ the thread disabled, it reproduces the legacy synchronous
 from __future__ import annotations
 
 import contextlib
+import os
 import threading
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
@@ -57,6 +58,7 @@ class TrainingService:
                  train_epochs: int = 2, train_min_steps: int = 80,
                  seed: int = 0,
                  device=None, publish_device=None,
+                 trainer_threads: int = 0,
                  engine_steps_fn: Optional[Callable[[], int]] = None,
                  poll_s: float = 0.05):
         self.trainer = trainer
@@ -71,6 +73,20 @@ class TrainingService:
         self.seed = seed
         self.device = device
         self.publish_device = publish_device
+        # trainer-thread contention knob (ServingConfig.trainer_threads):
+        # on small single-device hosts the trainer's jitted steps share
+        # XLA's intra-op thread pool with serving dispatches, so a cycle
+        # slows resident decode by the pool contention factor.  >0
+        # deprioritizes the background training thread at the OS
+        # scheduler (Linux per-thread nice), so serving dispatches win
+        # the shared pool's cores whenever they are runnable.  A true
+        # thread-count-limited trainer *client* is only possible
+        # out-of-process (the in-process CPU client is one global pool
+        # shared with serving — capping it would throttle serving too);
+        # that is the ROADMAP follow-on.  ``stats()`` reports the
+        # mechanism applied ("thread_nice" or None).
+        self.trainer_threads = int(trainer_threads)
+        self._thread_cap: Optional[str] = None
         self.engine_steps_fn = engine_steps_fn or (lambda: -1)
         self.poll_s = poll_s
         self.events: List[Dict] = []
@@ -90,6 +106,19 @@ class TrainingService:
                 f"{signal_window}); training would silently starve")
 
     # ------------------------------------------------------------ control
+    def _deprioritize_thread(self) -> Optional[str]:
+        """Lower the background training thread's OS scheduling
+        priority (Linux: threads are schedulable tasks, so per-thread
+        nice bounds how much of the shared intra-op pool a cycle can
+        steal from concurrent serving dispatches)."""
+        try:
+            tid = threading.get_native_id()
+            cur = os.getpriority(os.PRIO_PROCESS, tid)
+            os.setpriority(os.PRIO_PROCESS, tid, min(cur + 10, 19))
+            return "thread_nice"
+        except (AttributeError, OSError, PermissionError):
+            return None
+
     def should_train(self) -> bool:
         """The *whether* gate: enough signal windows buffered for one
         cycle (same trigger arithmetic as the legacy synchronous
@@ -175,6 +204,8 @@ class TrainingService:
         self._thread.start()
 
     def _loop(self):
+        if self.trainer_threads > 0:
+            self._thread_cap = self._deprioritize_thread()
         while not self._stop.is_set():
             self.channel.wait(self._min_batches(), timeout=self.poll_s)
             if self._stop.is_set():
@@ -202,4 +233,6 @@ class TrainingService:
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict:
         return {"cycles": self.cycles, "deploy_version": self.gate.version,
-                "running": self.running, **self.channel.stats()}
+                "running": self.running,
+                "trainer_threads": self.trainer_threads,
+                "thread_cap": self._thread_cap, **self.channel.stats()}

@@ -29,6 +29,7 @@ MODULES = [
     ("continuous", "benchmarks.bench_continuous"),
     ("decoupled", "benchmarks.bench_decoupled"),
     ("slo", "benchmarks.bench_slo"),
+    ("paged", "benchmarks.bench_paged"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -51,12 +52,17 @@ MODULES = [
 # decoupled async-training gate (>=1.2x serving vs blocking training +
 # drain parity) + the serving-policy SLO gate (EDF deadline-hit-rate
 # >= 1.2x FIFO, eager-commit short-prompt TTFT, stream byte parity, no
-# added syncs) + the kernel oracles.  ``python -m benchmarks.run --smoke``.
+# added syncs) + the paged-KV gate (>= 4x served slots at the dense HBM
+# footprint with zero deferrals, dense/paged stream byte parity greedy
+# and sampled, prefix-sharing registry hits with <= 0.7x prefill
+# row-token work, zero leaked pages after drain) + the kernel oracles.
+# ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
     ("continuous", "benchmarks.bench_continuous"),
     ("decoupled", "benchmarks.bench_decoupled"),
     ("slo", "benchmarks.bench_slo"),
+    ("paged", "benchmarks.bench_paged"),
     ("kernels", "benchmarks.bench_kernels"),
 ]
 

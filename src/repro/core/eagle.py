@@ -84,11 +84,14 @@ def draft_param_count(dcfg: ModelConfig) -> int:
 
 
 # ------------------------------------------------------------ core layer
-def _layer(dcfg: ModelConfig, p, x, k_cache, v_cache, lengths, pad):
-    """One decoder layer over new positions (decode form, cache write)."""
+def _layer(dcfg: ModelConfig, p, x, k_cache, v_cache, lengths, pad,
+           page_tbl=None):
+    """One decoder layer over new positions (decode form, cache write).
+    With ``page_tbl``, k_cache/v_cache are page pools (paged serving)."""
     h = rmsnorm(p["norm1"], x, dcfg.norm_eps)
     out, (kc, vc) = attn.self_attention_decode(
-        dcfg, p["attn"], h, k_cache, v_cache, lengths, pad)
+        dcfg, p["attn"], h, k_cache, v_cache, lengths, pad,
+        page_tbl=page_tbl)
     x = x + out
     h2 = rmsnorm(p["norm2"], x, dcfg.norm_eps)
     x = x + ffn(p["ffn"], h2, FFN_SWIGLU)
@@ -136,8 +139,27 @@ def _fuse_inputs(dcfg, dparams, feats, tok_emb):
 
 
 # ------------------------------------------------------------- cache
-def init_draft_cache(dcfg: ModelConfig, batch: int, max_len: int) -> dict:
+def init_draft_cache(dcfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int = 0, num_pages: int = 0) -> dict:
+    """Zeroed draft cache.  With ``page_size > 0`` the K/V leaves are
+    page pools (num_pages + 1, P, Hk, D) plus a per-lane block table
+    ``tbl`` — same layout and trash-page convention as the target
+    cache's pools, but a *separate* device table copy so the engine can
+    donate target and draft caches independently."""
     hk, hd = dcfg.num_kv_heads, dcfg.head_dim
+    if page_size > 0:
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} % page_size {page_size}")
+        return {
+            "k": jnp.zeros((num_pages + 1, page_size, hk, hd),
+                           dcfg.act_dtype),
+            "v": jnp.zeros((num_pages + 1, page_size, hk, hd),
+                           dcfg.act_dtype),
+            "tbl": jnp.full((batch, max_len // page_size), num_pages,
+                            jnp.int32),
+            "lengths": jnp.zeros((batch,), jnp.int32),
+            "pad": jnp.zeros((batch,), jnp.int32),
+        }
     return {
         "k": jnp.zeros((batch, max_len, hk, hd), dcfg.act_dtype),
         "v": jnp.zeros((batch, max_len, hk, hd), dcfg.act_dtype),
@@ -172,7 +194,8 @@ def draft_extend(dcfg: ModelConfig, dparams, embed_params, dcache,
     tok_emb = embed(embed_params, tokens, dt)
     x = _fuse_inputs(dcfg, dparams, feats, tok_emb)
     x, kc, vc = _layer(dcfg, dparams, x, dcache["k"], dcache["v"],
-                       dcache["lengths"], dcache["pad"])
+                       dcache["lengths"], dcache["pad"],
+                       page_tbl=dcache.get("tbl"))
     h = rmsnorm(dparams["final_norm"], x, dcfg.norm_eps)
     logits = _head(dcfg, dparams, h)
     new_cache = dict(dcache, k=kc, v=vc,
@@ -220,7 +243,8 @@ def draft_propose(dcfg: ModelConfig, dparams, embed_params, dcache,
         tok_emb = embed(embed_params, tok[:, None], dt)
         x = _fuse_inputs(dcfg, dparams, h[:, None], tok_emb)
         x, kc, vc = _layer(dcfg, dparams, x, cache["k"], cache["v"],
-                           cache["lengths"], cache["pad"])
+                           cache["lengths"], cache["pad"],
+                           page_tbl=cache.get("tbl"))
         h_new = rmsnorm(dparams["final_norm"], x, dcfg.norm_eps)[:, 0]
         logits_new = _head(dcfg, dparams, h_new[:, None])[:, 0]
         cache = dict(cache, k=kc, v=vc, lengths=cache["lengths"] + 1)
@@ -310,6 +334,24 @@ def scatter_draft_rows(live, new, mask, src):
     return jax.tree.map(
         lambda l, n: scatter_batch_rows(l, n, mask, src, axis=0),
         live, new)
+
+
+def scatter_draft_rows_paged(live, new, mask, src):
+    """Paged twin of ``scatter_draft_rows``: ``live`` is a paged draft
+    cache (pools + ``tbl``); ``new`` is a dense R-batch staging cache.
+    K/V rows are written *through* the live block table (unmasked lanes
+    route to the trash page); lengths/pad scatter as rows; the table
+    itself is host-authoritative and passes through unchanged."""
+    from repro.core import paging
+    tbl = live["tbl"]
+    out = dict(live)
+    for leaf in ("k", "v"):
+        rows = jnp.take(new[leaf], src, axis=0)      # (B, W, Hk, D)
+        out[leaf] = paging.write_rows_paged(live[leaf], tbl, rows, mask)
+    for leaf in ("lengths", "pad"):
+        out[leaf] = scatter_batch_rows(live[leaf], new[leaf], mask, src,
+                                       axis=0)
+    return out
 
 
 def reseed_draft_rows_from_ring(dcfg: ModelConfig, dparams, embed_params,

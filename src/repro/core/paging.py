@@ -1,0 +1,400 @@
+"""Paged KV cache: block-table allocator + copy-on-write prefix sharing.
+
+Dense serving gives every batch lane a private ``max_len`` target *and*
+draft cache, so slot count is bounded by ``slots x max_len`` worst-case
+HBM no matter how short real sequences run.  This module replaces that
+with the vLLM PagedAttention memory model, adapted to the engine's
+byte-parity constraints:
+
+  * **Page pools** — each attention K/V leaf becomes a pool of
+    ``num_pages + 1`` fixed-size pages ``(num_pages + 1, page_size, Hk,
+    D)``; page ``num_pages`` is the *trash page*, the explicit
+    destination for every write that dense decoding would silently drop
+    (positions past ``max_len``, masked refill lanes, unreserved table
+    slots).  Routing the drops instead of relying on scatter clamping
+    keeps real pages unclobberable by inactive lanes.
+  * **One block table per lane** — a single host-authoritative
+    ``(batch, max_len // page_size)`` int32 table maps token ranges to
+    pages.  A page id is a lease on a token *range*: the same table
+    drives every target layer's K and V pool and the draft pools, so
+    refcounts stay per-range, not per-leaf.  The engine ships fresh
+    device copies of the table between dispatches whenever the
+    allocator mutates it (a host->device upload, never a sync).
+  * **Admission by pages** — lanes reserve ``ceil(tokens / page_size)``
+    pages at admission (prompt width + token budget + gamma + 1).  The
+    scheduler defers admission when the pool cannot cover a reservation
+    (see ``Scheduler(admission_guard=...)``), so batch width is bounded
+    by HBM, not by ``slots x max_len``.
+  * **Refcounted COW prefix sharing** — committed prompt-prefix pages
+    are published to a registry keyed by *provenance*, not just
+    content: ``(rows, op width, pad, token prefix)``.  Because refill
+    row values are independent of sibling-row content but *do* depend
+    on the refill op's row-count/width tiling, two lanes whose keys
+    match are guaranteed bitwise-identical page bytes — so a borrower
+    can adopt the donor's physical pages (refcount++) with no device
+    compare, and a borrower's own commit rewriting a shared page is
+    benign (same bytes).  A divergent write forks first
+    (``fork_for_write``), vLLM-style copy-on-write; the serving engine
+    never needs to by construction (shared pages cover only the prompt
+    prefix strictly below the first per-lane-divergent position).
+
+Byte parity: a paged lane attends through a gathered ``(B, max_len)``
+view of its pool — structurally the same dense attention over the same
+valid bytes, with garbage (trash/stale) keys landing exactly where
+dense garbage lands and getting the same exact-zero softmax weight.
+``tests/test_paged.py`` pins paged == dense on streams, logits, and
+cache valid regions.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ===================================================== device helpers
+def gather_view(pool: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the dense per-lane view of a page pool.
+
+    pool: (num_pages + 1, P, ...); tbl: (B, n_tbl) int32.
+    Returns (B, n_tbl * P, ...) — the paged lane's ``max_len`` window,
+    bitwise equal to the dense cache on every position whose page was
+    written through the same table.
+    """
+    npg1, p = pool.shape[0], pool.shape[1]
+    b, n_tbl = tbl.shape
+    view = pool[tbl]                          # (B, n_tbl, P, ...)
+    return view.reshape((b, n_tbl * p) + pool.shape[2:])
+
+
+def page_slot(tbl: jnp.ndarray, page_size: int, pos: jnp.ndarray,
+              trash: int, valid: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Map token positions to (page, slot) through the block table.
+
+    ``pos``: (B, T) absolute positions; writes at ``pos >= n_tbl * P``
+    (dense scatter's dropped out-of-bounds writes) or with ``valid``
+    False are routed to the trash page.  Returns ((B, T), (B, T)).
+    """
+    b, n_tbl = tbl.shape
+    max_len = n_tbl * page_size
+    idx = jnp.clip(pos // page_size, 0, n_tbl - 1)
+    page = jnp.take_along_axis(tbl, idx, axis=1)
+    ok = pos < max_len
+    if valid is not None:
+        ok = ok & valid
+    page = jnp.where(ok, page, trash)
+    return page, pos % page_size
+
+
+def scatter_kv_paged(pool: jnp.ndarray, tbl: jnp.ndarray,
+                     new: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+    """Paged twin of ``attention.scatter_kv``: write the decode block's
+    K/V rows at positions ``lengths + [0, T)`` through the block table.
+    pool: (num_pages + 1, P, Hk, D); new: (B, T, Hk, D)."""
+    npg1, p = pool.shape[0], pool.shape[1]
+    b, t = new.shape[:2]
+    pos = lengths[:, None].astype(jnp.int32) + jnp.arange(t, dtype=jnp.int32)
+    page, slot = page_slot(tbl, p, pos, npg1 - 1)
+    return pool.at[page, slot].set(new.astype(pool.dtype))
+
+
+def write_rows_paged(pool: jnp.ndarray, tbl: jnp.ndarray, rows: jnp.ndarray,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """Write whole per-lane rows (refill/commit scatter) through the
+    table.  rows: (B, W, Hk, D) dense staging already gathered to lane
+    order; lanes with ``mask`` False write to the trash page (the paged
+    twin of ``scatter_batch_rows``'s where-keep)."""
+    npg1, p = pool.shape[0], pool.shape[1]
+    b, w = rows.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[None], (b, w))
+    page, slot = page_slot(tbl, p, pos, npg1 - 1,
+                           valid=jnp.broadcast_to(mask[:, None], (b, w)))
+    return pool.at[page, slot].set(rows.astype(pool.dtype))
+
+
+def gather_rows_paged(pool: jnp.ndarray, tbl_rows: jnp.ndarray,
+                      width: int) -> jnp.ndarray:
+    """Gather the first ``width`` positions of each table row into a
+    dense staging block (skip-mode resume: seed a chunk pipeline's
+    staging from already-shared prefix pages).  tbl_rows: (R, m) with
+    m * P >= width."""
+    p = pool.shape[1]
+    m = -(-width // p)
+    view = pool[tbl_rows[:, :m]]               # (R, m, P, ...)
+    view = view.reshape((tbl_rows.shape[0], m * p) + pool.shape[2:])
+    return view[:, :width]
+
+
+def copy_page(pool: jnp.ndarray, src: int, dst: int) -> jnp.ndarray:
+    """COW fork's device half: duplicate one page's bytes."""
+    return pool.at[dst].set(pool[src])
+
+
+# ================================================== host-side allocator
+class PageAllocator:
+    """Free-list page allocator + refcounted prefix registry.
+
+    All state is host-side numpy/int bookkeeping; the device only ever
+    sees immutable snapshots of ``table`` (shipped by the engine
+    between dispatches).  Pages are refcounted: a lane's table row
+    holds one reference per mapped page, and every registry entry holds
+    one reference per published page, so a shared prefix page survives
+    its donor lane's retirement until the registry evicts it.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, batch: int,
+                 max_len: int, *, share_prefix: bool = True,
+                 registry_cap: int = 256):
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len {max_len} must be a multiple of page_size "
+                f"{page_size} (block tables cover exact token ranges)")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.batch = int(batch)
+        self.max_len = int(max_len)
+        self.n_tbl = max_len // page_size
+        self.trash = self.num_pages
+        self.share_prefix = bool(share_prefix)
+        self.registry_cap = int(registry_cap)
+        self.reset()
+
+    def reset(self):
+        self.table = np.full((self.batch, self.n_tbl), self.trash,
+                             dtype=np.int32)
+        self.ref = np.zeros((self.num_pages,), dtype=np.int64)
+        self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        # provenance key -> (page ids, n_pages); insertion order = LRU
+        self._registry: "OrderedDict[bytes, Tuple[Tuple[int, ...], int]]" \
+            = OrderedDict()
+        self.dirty = True          # table changed since last device ship
+        # telemetry
+        self.peak_in_use = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_saved = 0
+        self.evictions = 0
+        self.cow_forks = 0
+
+    # ------------------------------------------------------------ stats
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def _note_use(self):
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+
+    # ---------------------------------------------------------- refcount
+    def _incref(self, page: int):
+        self.ref[page] += 1
+
+    def _decref(self, page: int):
+        self.ref[page] -= 1
+        if self.ref[page] < 0:
+            raise AssertionError(f"page {page} double-freed")
+        if self.ref[page] == 0:
+            self._free.append(page)
+
+    def _alloc(self, n: int) -> List[int]:
+        pages = [self._free.pop() for _ in range(n)]
+        for pg in pages:
+            self._incref(pg)
+        self._note_use()
+        return pages
+
+    # -------------------------------------------------------- reservations
+    def pages_for(self, tokens: int) -> int:
+        """Pages covering a ``tokens``-position reservation (clamped to
+        the lane window)."""
+        return -(-min(tokens, self.max_len) // self.page_size)
+
+    def can_reserve(self, tokens: int) -> bool:
+        """Admission guard: can a ``tokens`` reservation be satisfied
+        right now (evicting idle registry prefixes if needed)?"""
+        return self.can_fit(self.pages_for(tokens))
+
+    def can_fit(self, pages: int) -> bool:
+        """Could ``pages`` fresh pages be allocated right now (counting
+        idle registry prefixes an eviction sweep would free)?  The
+        engine's multi-lane admission guard sums its candidates'
+        reservations through this."""
+        return len(self._free) + self._evictable() >= pages
+
+    def reserve(self, lane: int, tokens: int) -> bool:
+        """Map fresh pages over positions [0, tokens) of ``lane``.
+        Returns False (lane untouched) when the pool cannot cover it —
+        the admission-defer signal."""
+        if (self.table[lane] != self.trash).any():
+            raise AssertionError(f"lane {lane} already holds pages")
+        need = self.pages_for(tokens)
+        if len(self._free) < need:
+            self._evict(need - len(self._free))
+        if len(self._free) < need:
+            return False
+        self.table[lane, :need] = self._alloc(need)
+        self.dirty = True
+        return True
+
+    def free_lane(self, lane: int):
+        """Release every page the lane maps (idempotent)."""
+        row = self.table[lane]
+        for i in range(self.n_tbl):
+            if row[i] != self.trash:
+                self._decref(int(row[i]))
+                row[i] = self.trash
+                self.dirty = True
+
+    # ------------------------------------------------------------- sharing
+    def prefix_key(self, rows: int, width: int, pad: int,
+                   tokens: Sequence[int], n_pages: int,
+                   salt: int = 0) -> bytes:
+        """Provenance key for one lane's first ``n_pages`` prompt pages.
+
+        Covers everything the page bytes depend on: the refill op's row
+        count and width (tiling changes ULP), the lane's left-pad, and
+        the token columns [0, n_pages * P + 1) — one column past the
+        page range because the draft cache stores (capture_i, token_{i+1})
+        pairs, so draft page bytes read one token ahead.  ``salt``
+        extends the provenance with caller-side dependencies the
+        allocator cannot see — the engine passes its draft deploy
+        sequence number, since draft page bytes depend on ``dparams``.
+        """
+        n_tok = n_pages * self.page_size + 1
+        h = hashlib.sha256()
+        h.update(np.asarray([rows, width, pad, n_pages, self.page_size,
+                             salt], dtype=np.int64).tobytes())
+        h.update(np.asarray(list(tokens[:n_tok]), dtype=np.int64).tobytes())
+        return h.digest()
+
+    def publish(self, key: bytes, lane: int, n_pages: int):
+        """Register the lane's first ``n_pages`` pages under ``key``
+        (one registry reference per page).  First writer wins: a
+        duplicate key keeps the existing entry (bytes are identical by
+        provenance) and the caller should ``adopt`` instead."""
+        if not self.share_prefix or n_pages <= 0:
+            return
+        if key in self._registry:
+            self._registry.move_to_end(key)
+            return
+        pages = tuple(int(p) for p in self.table[lane, :n_pages])
+        if any(p == self.trash for p in pages):
+            raise AssertionError("publishing unmapped pages")
+        for pg in pages:
+            self._incref(pg)
+        self._registry[key] = (pages, n_pages)
+        if len(self._registry) > self.registry_cap:
+            self._evict(0, force_one=True)
+
+    def lookup(self, key: bytes) -> Optional[Tuple[int, ...]]:
+        """Shared pages for ``key`` (LRU-touched), or None."""
+        if not self.share_prefix:
+            return None
+        hit = self._registry.get(key)
+        if hit is None:
+            return None
+        self._registry.move_to_end(key)
+        return hit[0]
+
+    def adopt(self, lane: int, pages: Sequence[int]):
+        """Repoint the lane's leading table entries at shared pages,
+        releasing the lane's own pages for that range."""
+        for i, pg in enumerate(pages):
+            old = int(self.table[lane, i])
+            if old == int(pg):
+                continue
+            self._incref(int(pg))
+            if old != self.trash:
+                self._decref(old)
+            self.table[lane, i] = int(pg)
+            self.dirty = True
+        self.prefix_hits += 1
+        self.prefix_tokens_saved += len(pages) * self.page_size
+        self._note_use()
+
+    def fork_for_write(self, lane: int, idx: int
+                       ) -> Optional[Tuple[int, int]]:
+        """Copy-on-write fork: ensure ``table[lane, idx]`` is exclusively
+        owned before a divergent write.  Returns (src, dst) page ids to
+        ``copy_page`` on device, or None when the page was already
+        exclusive (write in place).  Raises on pool exhaustion — callers
+        gate writes behind reservations, so this is a logic error."""
+        page = int(self.table[lane, idx])
+        if page == self.trash:
+            raise AssertionError("forking an unmapped table entry")
+        if self.ref[page] == 1:
+            return None
+        if not self._free:
+            self._evict(1)
+        if not self._free:
+            raise RuntimeError("page pool exhausted during COW fork")
+        (new,) = self._alloc(1)
+        self._decref(page)
+        self.table[lane, idx] = new
+        self.dirty = True
+        self.cow_forks += 1
+        return page, new
+
+    # ------------------------------------------------------------ eviction
+    def _evictable(self) -> int:
+        """Pages an LRU registry sweep could free right now (entries
+        whose pages are held by no lane)."""
+        n = 0
+        for pages, _ in self._registry.values():
+            if all(self.ref[pg] == 1 for pg in pages):
+                n += len(pages)
+        return n
+
+    def _evict(self, want_free: int, force_one: bool = False):
+        """Drop LRU registry entries until ``want_free`` pages could be
+        freed (only entries no lane still maps actually free pages)."""
+        freed = 0
+        dropped = False
+        for key in list(self._registry):
+            if freed >= want_free and not (force_one and not dropped):
+                break
+            pages, _ = self._registry[key]
+            if not all(self.ref[pg] == 1 for pg in pages):
+                continue      # a lane still maps it; eviction frees nothing
+            del self._registry[key]
+            for pg in pages:
+                self._decref(pg)
+            freed += len(pages)
+            dropped = True
+            self.evictions += 1
+
+    def release_prefix_cache(self):
+        """Drop every registry entry (stream drain / leak check)."""
+        for key in list(self._registry):
+            pages, _ = self._registry.pop(key)
+            for pg in pages:
+                self._decref(pg)
+
+    # ---------------------------------------------------------- invariants
+    def assert_clean(self):
+        """Leak check: every lane released, registry empty, every page
+        back on the free list with refcount zero."""
+        if self._registry:
+            raise AssertionError(
+                f"{len(self._registry)} prefix registry entries leaked")
+        if (self.table != self.trash).any():
+            held = int((self.table != self.trash).sum())
+            raise AssertionError(f"{held} table entries still mapped")
+        if (self.ref != 0).any():
+            raise AssertionError(
+                f"nonzero refcounts: {np.nonzero(self.ref)[0].tolist()}")
+        if len(self._free) != self.num_pages:
+            raise AssertionError(
+                f"free list holds {len(self._free)}/{self.num_pages} pages")
+
+    def table_device(self) -> jnp.ndarray:
+        """A fresh immutable device snapshot of the block table.  Each
+        call materializes a new buffer, so the target cache and draft
+        cache can each own one without double-donation."""
+        return jnp.asarray(np.array(self.table, copy=True))

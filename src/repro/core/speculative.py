@@ -351,8 +351,23 @@ def pad_target_cache(cache, ref):
     attending over a max_len buffer mid-prefill would break the
     chunked == one-shot byte-parity invariant.  The pad to max_len
     happens here, at commit time, exactly where the one-shot path's
-    ``_place`` pads — zero padding is exact."""
+    ``_place`` pads — zero padding is exact.
+
+    Paged path: pass ``ref=None`` — a paged commit writes the staging
+    rows *through* the block table (``scatter_target_cache_paged``), so
+    repadding the staging to max_len would be a pure wasted copy; this
+    is an explicit no-op passthrough instead of a silent full-width
+    repad.  On the dense path the shapes are asserted: staging must be
+    elementwise coverable by the live geometry."""
+    if ref is None:
+        return cache
+
     def pad(leaf, r):
+        if leaf.ndim != len(r.shape) or any(
+                ls > rs for ls, rs in zip(leaf.shape, r.shape)):
+            raise ValueError(
+                f"staging leaf {leaf.shape} does not embed in live "
+                f"cache geometry {r.shape}")
         pads = [(0, rs - ls) for ls, rs in zip(leaf.shape, r.shape)]
         if any(hi for _, hi in pads):
             return jnp.pad(leaf, pads)
@@ -374,6 +389,35 @@ def scatter_target_cache(cache, new, mask, src):
             out[k] = jax.tree.map(
                 lambda l, n: scatter_rows(l, n, mask, src, axis=1),
                 v, new[k])
+    return out
+
+
+def scatter_target_cache_paged(cache, new, mask, src):
+    """Paged twin of ``scatter_target_cache``: ``cache`` is a paged live
+    cache (page-pool leaves (repeats, num_pages + 1, P, Hk, D) plus the
+    shared ``page_tbl``), ``new`` is a dense staging prefill cache with
+    leaves (repeats, R, W, Hk, D).  Masked lanes' rows are written
+    through the block table (the allocator has already mapped their
+    reservations; positions past a lane's reservation route to the
+    trash page exactly like dense scatter's dropped OOB writes);
+    unmasked lanes write nothing (trash-routed)."""
+    from repro.core import paging
+    tbl = cache["page_tbl"]
+
+    def write(pool, staged):
+        rows = jnp.take(staged, src, axis=1)        # (repeats, B, W, ...)
+        return jax.vmap(
+            lambda p, r: paging.write_rows_paged(p, tbl, r, mask)
+        )(pool, rows)
+
+    out = {}
+    for k, v in cache.items():
+        if k in ("lengths", "pad"):
+            out[k] = scatter_rows(v, new[k], mask, src, axis=0)
+        elif k == "page_tbl":
+            out[k] = v
+        else:
+            out[k] = jax.tree.map(write, v, new[k])
     return out
 
 

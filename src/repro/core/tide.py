@@ -36,6 +36,14 @@ one place to select FIFO/priority/EDF admission, cohort/eager commit,
 speculation parking, chunked prefill, arrival gating, and the trainer
 thread-contention cap (``trainer_threads``); the flat legacy
 ``TideConfig`` fields remain as a convenience/back-compat layer.
+
+Memory scale: ``page_size``/``num_pages``/``share_prefix`` switch the
+engine's per-lane dense KV caches to the paged memory model
+(``core.paging``): fixed-size page pools behind per-lane block tables,
+admission-time page reservations (slot count bounded by HBM actually
+used, not ``batch x max_len``), and provenance-keyed copy-on-write
+sharing of committed prompt-prefix pages across lanes — byte-identical
+streams to dense serving, pinned in tests/test_paged.py.
 """
 from __future__ import annotations
 
@@ -87,6 +95,11 @@ class TideConfig:
     #                                   the long-prompt refill stall to
     #                                   one chunk per superstep gap);
     #                                   applies to waves and streams alike
+    # ---- paged KV cache (core/paging.py; 0 = dense per-lane caches)
+    page_size: int = 0                # >0: block-table page pools with
+    #                                   admission-time reservations
+    num_pages: int = 0                # pool size (0 = dense footprint)
+    share_prefix: bool = True         # COW prompt-prefix sharing
     # ---- serving control plane (see serving/policy.py)
     admission: str = "fifo"           # fifo | priority | deadline (EDF)
     commit: str = "cohort"            # cohort | eager chunk-pipeline commit
@@ -102,6 +115,7 @@ class TideConfig:
     # list, so a knob added to either side cannot silently desync
     _SHARED_FIELDS = ("gamma", "batch_size", "max_len", "greedy", "seed",
                       "gate_arrivals", "prefill_chunk", "reseed_window",
+                      "page_size", "num_pages", "share_prefix",
                       "admission", "commit", "spec_park_patience",
                       "spec_probe_interval", "trainer_threads")
 

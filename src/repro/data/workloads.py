@@ -142,6 +142,9 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
                   tight_frac: float = 0.0,
                   tight_slack: Optional[Tuple[float, float]] = None,
                   priority_levels: int = 0,
+                  shared_prefix_frac: float = 0.0,
+                  prefix_len: int = 0,
+                  prefix_pool: int = 4,
                   schedule: Optional[List[Phase]] = None,
                   seed: int = 0) -> List[ArrivalEvent]:
     """Generate a request arrival trace with ragged budgets and prompts.
@@ -179,12 +182,27 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
     (``DeadlineAdmission``) exists for.  ``priority_levels=k`` draws a
     uniform priority in [0, k) for ``PriorityAdmission``.  All SLO
     fields are inert under FIFO.
+
+    Shared prefixes: with probability ``shared_prefix_frac`` an event's
+    prompt is *prepended* with one of ``prefix_pool`` fixed
+    ``prefix_len``-token system prompts (chat templates, RAG
+    boilerplate — the redundancy a paged KV cache's COW prefix sharing
+    deduplicates).  The pool and the per-event choices draw from a
+    derived stream, so a prefix-annotated trace is the plain trace with
+    prefixes glued on — prompt tails, budgets, and timings unperturbed.
     """
     rng = np.random.default_rng(seed)
     # SLO annotations draw from a derived stream so annotating a trace
     # never perturbs its prompts/budgets/timings — the annotated trace
     # is the plain trace plus metadata (pinned in tests/test_policy.py)
     slo_rng = np.random.default_rng(seed + 0x510)
+    # shared system-prompt pool on its own derived stream, same contract
+    prefix_rng = np.random.default_rng(seed + 0x9A6E)
+    prefixes: List[np.ndarray] = []
+    if shared_prefix_frac > 0 and prefix_len > 0:
+        pool_dom = domains[next(iter(domains))]
+        prefixes = [pool_dom.sample(prefix_rng, prefix_len)
+                    for _ in range(max(prefix_pool, 1))]
     if schedule is not None:
         doms = [p.domain for p in schedule for _ in range(p.n_requests)]
         doms = doms[:n_requests]
@@ -217,6 +235,10 @@ def arrival_trace(domains: Dict[str, Domain], n_requests: int, *,
             prompt = dom.sample(rng, length)
         else:
             prompt = dom.sample_prompt(rng)
+        if prefixes and prefix_rng.random() < shared_prefix_frac:
+            pick = int(prefix_rng.integers(len(prefixes)))
+            prompt = np.concatenate([prefixes[pick],
+                                     np.asarray(prompt)]).astype(np.int32)
         rng_range = (long_range if long_frac > 0
                      and rng.random() < long_frac else max_new_range)
         mx = int(rng.integers(rng_range[0], rng_range[1] + 1))

@@ -66,6 +66,104 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                              ).astype(o_ref.dtype)
 
 
+def _paged_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                  acc_scr, *, block_q: int, page_size: int, n_pg: int,
+                  causal: bool, window: int, scale: float):
+    """Paged prefill step: the kv grid walks block-table *pages* (one
+    page per step, id scalar-prefetched into the k/v index_maps); the
+    softmax carry and masking are the dense kernel's with ``kpos``
+    derived from the table slot."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T) * scale                        # (bq, P)
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, page_size), 0)
+    kpos = ik * page_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, page_size), 1)
+    mask = jnp.ones((block_q, page_size), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_pg - 1)
+    def _fin():
+        o_ref[0, :, 0, :] = (acc_scr[...]
+                             / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention_paged(q, k_pool, v_pool, tbl, *, causal: bool = True,
+                          window: int = 0, block_q: int = 128,
+                          interpret: bool = False):
+    """Block-table prefill attention: q (B, S, Hq, D) at positions
+    [0, S); k/v_pool (num_pages + 1, P, Hk, D); tbl (B, n_tbl).  Each
+    kv step DMAs the page the table names — the kv block size *is* the
+    page size.  Pages covering [0, S) must be mapped (trash entries
+    beyond S are never unmasked: causal keeps kpos <= qpos < S)."""
+    b, s, hq, d = q.shape
+    page_size, hk = k_pool.shape[1], k_pool.shape[2]
+    g = hq // hk
+    block_q = min(block_q, s)
+    if s % block_q:
+        raise ValueError(f"seq {s} must divide block_q {block_q}")
+    n_pg = -(-s // page_size)
+    if n_pg > tbl.shape[1]:
+        raise ValueError(f"seq {s} overruns the block table "
+                         f"({tbl.shape[1]} pages of {page_size})")
+    grid = (b, hq, s // block_q, n_pg)
+    kern = functools.partial(
+        _paged_kernel, block_q=block_q, page_size=page_size, n_pg=n_pg,
+        causal=causal, window=window, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda b_, h, iq, ik, tbl_ref: (b_, iq, h, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b_, h, iq, ik, tbl_ref:
+                         (tbl_ref[b_, ik], 0, h // g, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b_, h, iq, ik, tbl_ref:
+                         (tbl_ref[b_, ik], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda b_, h, iq, ik, tbl_ref:
+                               (b_, iq, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), q, k_pool, v_pool)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_kv: int = 128,
                     interpret: bool = False):

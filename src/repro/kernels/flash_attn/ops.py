@@ -5,8 +5,10 @@ import functools
 
 import jax
 
-from repro.kernels.flash_attn.kernel import flash_attention
-from repro.kernels.flash_attn.ref import flash_attention_ref
+from repro.kernels.flash_attn.kernel import (flash_attention,
+                                             flash_attention_paged)
+from repro.kernels.flash_attn.ref import (flash_attention_paged_ref,
+                                          flash_attention_ref)
 
 
 def _on_tpu() -> bool:
@@ -25,3 +27,18 @@ def flash_attn(q, k, v, *, causal: bool = True, window: int = 0,
                                block_q=block_q, block_kv=block_kv,
                                interpret=not _on_tpu())
     return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "force_kernel"))
+def flash_attn_paged(q, k_pool, v_pool, tbl, *, causal: bool = True,
+                     window: int = 0, block_q: int = 128,
+                     force_kernel: bool = False):
+    """Block-table prefill attention: KV pages DMA'd through the
+    scalar-prefetched table (TPU) or gathered densely (oracle)."""
+    if _on_tpu() or force_kernel:
+        return flash_attention_paged(q, k_pool, v_pool, tbl, causal=causal,
+                                     window=window, block_q=block_q,
+                                     interpret=not _on_tpu())
+    return flash_attention_paged_ref(q, k_pool, v_pool, tbl, causal=causal,
+                                     window=window)

@@ -31,3 +31,17 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
     return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def flash_attention_paged_ref(q, k_pool, v_pool, tbl, *, causal: bool = True,
+                              window: int = 0):
+    """Paged oracle: gather the dense per-lane K/V view through the
+    block table (truncated to the query width), then run the dense
+    reference."""
+    b, s = q.shape[0], q.shape[1]
+    p = k_pool.shape[1]
+    n_pg = -(-s // p)
+    kv_shape = (b, n_pg * p) + k_pool.shape[2:]
+    k = k_pool[tbl[:, :n_pg]].reshape(kv_shape)[:, :s]
+    v = v_pool[tbl[:, :n_pg]].reshape(kv_shape)[:, :s]
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

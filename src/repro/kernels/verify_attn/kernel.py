@@ -70,6 +70,112 @@ def _kernel(len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
                              ).astype(o_ref.dtype)
 
 
+def _paged_kernel(tbl_ref, len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, t: int, t_pad: int,
+                  page_size: int, n_tbl: int, window: int, scale: float):
+    """Paged flash-decoding step: one block table *page* per kv-grid
+    step.  The page id was scalar-prefetched from the block table by
+    the BlockSpec index_map, so k_ref/v_ref already hold this page's
+    rows — the kernel body is the dense online-softmax step with
+    ``kpos`` derived from the table slot, not the buffer offset."""
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    pad = pad_ref[b]
+    blk_lo = ik * page_size
+    max_kpos = length + t - 1
+
+    @pl.when(blk_lo <= max_kpos)
+    def _work():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (t_pad, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (P, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale                     # (t_pad, P)
+        qpos = length + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (t_pad, page_size), 0)
+        kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (t_pad, page_size), 1)
+        mask = (kpos <= qpos) & (kpos >= pad)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_tbl - 1)
+    def _fin():
+        o_ref[0, :, 0, :] = (acc_scr[...]
+                             / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+def verify_attention_paged(q, k_pool, v_pool, tbl, lengths, pad=None, *,
+                           window: int = 0, interpret: bool = False):
+    """Block-table variant: q (B, T, Hq, D); k/v_pool (num_pages + 1,
+    P, Hk, D); tbl (B, n_tbl) int32 page ids.  Each kv-grid step DMAs
+    the page the table names (scalar-prefetched index_map) — the paged
+    lane's cache never materializes densely.  Caller contract: every
+    position in [pad[b], lengths[b] + T) maps a real page (the
+    allocator's reservation invariant); other table entries may be the
+    trash page, whose garbage keys are masked out."""
+    b, t, hq, d = q.shape
+    npg1, page_size, hk = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    n_tbl = tbl.shape[1]
+    g = hq // hk
+    if pad is None:
+        pad = jnp.zeros((b,), jnp.int32)
+    t_pad = max(8, t)            # fp32 sublane tile
+    if t != t_pad:
+        q = jnp.pad(q, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    grid = (b, hq, n_tbl)
+    kern = functools.partial(
+        _paged_kernel, t=t, t_pad=t_pad, page_size=page_size, n_tbl=n_tbl,
+        window=window, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,           # tbl, lengths, pad
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t_pad, 1, d),
+                         lambda b_, h, ik, tbl_ref, len_ref, pad_ref:
+                         (b_, 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b_, h, ik, tbl_ref, len_ref, pad_ref:
+                         (tbl_ref[b_, ik], 0, h // g, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b_, h, ik, tbl_ref, len_ref, pad_ref:
+                         (tbl_ref[b_, ik], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t_pad, 1, d),
+                               lambda b_, h, ik, tbl_ref, len_ref, pad_ref:
+                               (b_, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t_pad,), jnp.float32),
+            pltpu.VMEM((t_pad,), jnp.float32),
+            pltpu.VMEM((t_pad, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t_pad, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), lengths.astype(jnp.int32),
+      pad.astype(jnp.int32), q, k_pool, v_pool)
+    return out[:, :t]
+
+
 def verify_attention(q, k_cache, v_cache, lengths, pad=None, *,
                      window: int = 0, block_kv: int = 512,
                      interpret: bool = False):

@@ -5,8 +5,10 @@ import functools
 
 import jax
 
-from repro.kernels.verify_attn.kernel import verify_attention
-from repro.kernels.verify_attn.ref import verify_attention_ref
+from repro.kernels.verify_attn.kernel import (verify_attention,
+                                              verify_attention_paged)
+from repro.kernels.verify_attn.ref import (verify_attention_paged_ref,
+                                           verify_attention_ref)
 
 
 def _on_tpu() -> bool:
@@ -23,3 +25,16 @@ def verify_attn(q, k_cache, v_cache, lengths, pad=None, *, window: int = 0,
                                 interpret=not _on_tpu())
     return verify_attention_ref(q, k_cache, v_cache, lengths, pad,
                                 window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "force_kernel"))
+def verify_attn_paged(q, k_pool, v_pool, tbl, lengths, pad=None, *,
+                      window: int = 0, force_kernel: bool = False):
+    """Block-table verify attention: KV pages are DMA'd through the
+    scalar-prefetched table (TPU) or gathered densely (oracle)."""
+    if _on_tpu() or force_kernel:
+        return verify_attention_paged(q, k_pool, v_pool, tbl, lengths, pad,
+                                      window=window,
+                                      interpret=not _on_tpu())
+    return verify_attention_paged_ref(q, k_pool, v_pool, tbl, lengths, pad,
+                                      window=window)

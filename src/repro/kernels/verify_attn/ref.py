@@ -31,3 +31,18 @@ def verify_attention_ref(q, k_cache, v_cache, lengths, pad=None, *,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgts,bskd->btkgd", p, vf)
     return out.reshape(b, t, hq, d).astype(q.dtype)
+
+
+def verify_attention_paged_ref(q, k_pool, v_pool, tbl, lengths, pad=None, *,
+                               window: int = 0):
+    """Paged oracle: gather each lane's dense (B, n_tbl * P) view
+    through the block table, then run the dense reference — the same
+    gather-then-attend structure the serving engine's XLA paged path
+    uses, so kernel-vs-ref agreement transfers to the engine."""
+    b = q.shape[0]
+    n_tbl, p = tbl.shape[1], k_pool.shape[1]
+    kv_shape = (b, n_tbl * p) + k_pool.shape[2:]
+    k_cache = k_pool[tbl].reshape(kv_shape)
+    v_cache = v_pool[tbl].reshape(kv_shape)
+    return verify_attention_ref(q, k_cache, v_cache, lengths, pad,
+                                window=window)

@@ -45,6 +45,14 @@ def main():
                          "0 = one-shot): bounds the stall a long prompt "
                          "injects into resident decode lanes to one "
                          "chunk per superstep gap")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help=">0: paged KV cache — target/draft caches "
+                         "become block-table page pools with admission-"
+                         "time reservations and COW prompt-prefix "
+                         "sharing (must divide max_len; 0 = dense)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size (0 = the dense footprint, "
+                         "batch * max_len / page_size)")
     ap.add_argument("--policy", choices=["fifo", "priority", "deadline"],
                     default="fifo",
                     help="admission policy: fifo (arrival order), "
@@ -123,7 +131,10 @@ def main():
                          spec_park_patience=args.spec_park,
                          gate_arrivals=args.gate_arrivals,
                          prefill_chunk=args.prefill_chunk,
-                         reseed_window=32 if args.async_train else 0,
+                         page_size=args.page_size,
+                         num_pages=args.num_pages,
+                         reseed_window=(32 if args.async_train
+                                        and not args.page_size else 0),
                          trainer_threads=args.trainer_threads)
     tc = TideConfig(serving=scfg,
                     n_threshold=4, signal_window=16,

@@ -375,10 +375,20 @@ def self_attention_prefill(cfg: ModelConfig, params, x, positions, pad=None, *,
 
 
 def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
-                          lengths, pad=None, *, window: int = 0):
+                          lengths, pad=None, *, window: int = 0,
+                          page_tbl=None):
     """x: (B, T, D) new tokens at cache positions lengths + [0..T).
     RoPE positions are lengths - pad + t (pad-adjusted true token index).
-    Writes the new K/V into the cache functionally and attends."""
+    Writes the new K/V into the cache functionally and attends.
+
+    Paged mode (``page_tbl`` given): k_cache/v_cache are page *pools*
+    (num_pages + 1, P, Hk, D) and writes/reads go through the (B, n_tbl)
+    block table.  The attention itself runs on a gathered dense
+    (B, n_tbl * P) view through the *same* dispatch below, so the paged
+    path is structurally the dense computation over identical valid
+    bytes — bitwise-equal outputs (garbage keys are masked to the same
+    exact-zero softmax weight on both paths)."""
+    from repro.core import paging
     dt = x.dtype
     b, t, _ = x.shape
     q, k, v = qkv_proj(params, x, dt)
@@ -388,8 +398,14 @@ def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
     q = apply_rope(q, rope_pos, cfg.rope_theta)
     k = apply_rope(k, rope_pos, cfg.rope_theta)
     # scatter new kv into cache at per-request offsets
-    k_cache = scatter_kv(k_cache, k, lengths)
-    v_cache = scatter_kv(v_cache, v, lengths)
+    if page_tbl is not None:
+        k_pool = paging.scatter_kv_paged(k_cache, page_tbl, k, lengths)
+        v_pool = paging.scatter_kv_paged(v_cache, page_tbl, v, lengths)
+        k_cache = paging.gather_view(k_pool, page_tbl)
+        v_cache = paging.gather_view(v_pool, page_tbl)
+    else:
+        k_pool = k_cache = scatter_kv(k_cache, k, lengths)
+        v_pool = v_cache = scatter_kv(v_cache, v, lengths)
     if window and k_cache.shape[1] > 4 * (window + t):
         o = decode_attend_windowed(q, k_cache, v_cache, lengths, pad,
                                    window=window,
@@ -401,7 +417,7 @@ def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
     else:
         o = decode_attend(q, k_cache, v_cache, lengths, pad, window=window,
                           softcap=cfg.attn_logit_softcap)
-    return out_proj(params, o, dt), (k_cache, v_cache)
+    return out_proj(params, o, dt), (k_pool, v_pool)
 
 
 def scatter_kv(cache, new, lengths):

@@ -165,13 +165,15 @@ def apply_layer_prefill(cfg: ModelConfig, blk: BlockDef, p, x, positions, pad,
 
 
 def apply_layer_decode(cfg: ModelConfig, blk: BlockDef, p, x, entry, lengths,
-                       pad, moe_impl: str):
-    """Returns (x, new_entry, aux). SSM entries gain a per-step T axis."""
+                       pad, moe_impl: str, page_tbl=None):
+    """Returns (x, new_entry, aux). SSM entries gain a per-step T axis.
+    With ``page_tbl``, attention entries are page pools written/read
+    through the shared block table (see ``core.paging``)."""
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if blk.mixer in (ATTN, ATTN_SW):
         out, (kc, vc) = attn.self_attention_decode(
             cfg, p["mix"], h, entry["k"], entry["v"], lengths, pad,
-            window=cfg.window)
+            window=cfg.window, page_tbl=page_tbl)
         new = dict(entry, k=kc, v=vc)
     elif blk.mixer == MLA:
         out, (ckv, kr) = mla_mod.mla_decode(
@@ -251,7 +253,7 @@ def run_group_prefill(cfg, group_params, pattern, repeats, x, positions, pad,
 
 def run_group_decode(cfg, group_params, pattern, repeats, x, cache_group,
                      lengths, pad, base_idx: int, cap_targets, want_caps,
-                     moe_impl):
+                     moe_impl, page_tbl=None):
     P = len(pattern)
 
     def body(carry, xs):
@@ -261,7 +263,7 @@ def run_group_decode(cfg, group_params, pattern, repeats, x, cache_group,
         for pi, blk in enumerate(pattern):
             x, entry, a = apply_layer_decode(
                 cfg, blk, p_slice[f"pos{pi}"], x, c_slice[f"pos{pi}"],
-                lengths, pad, moe_impl)
+                lengths, pad, moe_impl, page_tbl=page_tbl)
             aux = aux + a
             lidx = base_idx + i * P + pi
             caps = _update_caps(caps, cap_targets, lidx, x)
@@ -365,15 +367,19 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, *,
     captures (B,T,3D))."""
     b, t = tokens.shape
     lengths, pad = cache["lengths"], cache["pad"]
+    page_tbl = cache.get("page_tbl")
     x = embed(params["embed"], tokens, cfg.act_dtype)
     cap_targets = cfg.captures
     new_cache: Dict[str, Any] = {"lengths": lengths, "pad": pad}
+    if page_tbl is not None:
+        new_cache["page_tbl"] = page_tbl
     caps_all = []
     base = 0
     for name, pattern, repeats in model_groups(cfg):
         x, cgroup, caps, _ = run_group_decode(
             cfg, params[name], pattern, repeats, x, cache[name], lengths,
-            pad, base, cap_targets, want_caps, moe_impl)
+            pad, base, cap_targets, want_caps, moe_impl,
+            page_tbl=page_tbl)
         new_cache[name] = cgroup
         if want_caps:
             caps_all.append(caps)
@@ -395,6 +401,8 @@ def commit_cache(cfg: ModelConfig, cache, n_accept):
     """Accept ``n_accept`` (B,) tokens out of the T-token verify block:
     advance lengths and select the surviving SSM states (rollback)."""
     new = {"lengths": cache["lengths"] + n_accept, "pad": cache["pad"]}
+    if "page_tbl" in cache:
+        new["page_tbl"] = cache["page_tbl"]
     idx = jnp.maximum(n_accept - 1, 0)
     for name, pattern, repeats in model_groups(cfg):
         group = cache[name]
@@ -494,17 +502,53 @@ def _mem_len(cfg: ModelConfig, seq_for_mem: int = 0) -> int:
     return 0
 
 
+def paged_check(cfg: ModelConfig, max_len: int, page_size: int):
+    """Validate a paged-cache request: paging covers attention K/V
+    pools only, so every mixer must be ATTN/ATTN_SW, and the lane
+    window must tile into whole pages."""
+    if page_size <= 0:
+        raise ValueError(f"page_size must be positive, got {page_size}")
+    if max_len % page_size:
+        raise ValueError(
+            f"max_len {max_len} must be a multiple of page_size "
+            f"{page_size}")
+    for _, pattern, _ in model_groups(cfg):
+        for blk in pattern:
+            if blk.mixer not in (ATTN, ATTN_SW):
+                raise ValueError(
+                    f"paged KV cache supports attention mixers only; "
+                    f"config has {blk.mixer!r}")
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               mem_len: int = 0) -> dict:
-    """Zero-initialized decode cache (used directly by dry-run input_specs)."""
+               mem_len: int = 0, *, page_size: int = 0,
+               num_pages: int = 0) -> dict:
+    """Zero-initialized decode cache (used directly by dry-run input_specs).
+
+    With ``page_size > 0`` the attention K/V leaves are page *pools*
+    shaped (repeats, num_pages + 1, page_size, Hk, D) — page
+    ``num_pages`` is the trash page — plus one shared block table
+    ``page_tbl`` (batch, max_len // page_size) initialized to all-trash
+    (no lane maps any real page until the allocator reserves for it).
+    """
+    if page_size > 0:
+        paged_check(cfg, max_len, page_size)
     cache: Dict[str, Any] = {
         "lengths": jnp.zeros((batch,), jnp.int32),
         "pad": jnp.zeros((batch,), jnp.int32),
     }
+    if page_size > 0:
+        cache["page_tbl"] = jnp.full(
+            (batch, max_len // page_size), num_pages, jnp.int32)
     for name, pattern, repeats in model_groups(cfg):
         group = {}
         for pi, blk in enumerate(pattern):
-            sh, _ = _entry_shape(cfg, blk, batch, max_len, mem_len)
+            if page_size > 0:
+                hd, hk = cfg.head_dim, cfg.num_kv_heads
+                sh = {k: ((num_pages + 1, page_size, hk, hd), cfg.act_dtype)
+                      for k in ("k", "v")}
+            else:
+                sh, _ = _entry_shape(cfg, blk, batch, max_len, mem_len)
             group[f"pos{pi}"] = {
                 k: jnp.zeros((repeats,) + shape, dtype)
                 for k, (shape, dtype) in sh.items()}

@@ -92,6 +92,36 @@ Architecture (slot lifecycle):
     and ``stats.prefill_gap_tokens`` / ``prefill_row_tokens``
     (per-gap / total prefill row-tokens), gated in
     ``benchmarks/bench_continuous.py`` next to the wall-clock goodput.
+  * **Paged KV serving** (``page_size=P`` > 0): every target/draft KV
+    leaf becomes a pool of fixed ``P``-token pages behind one
+    host-authoritative per-lane block table (``core.paging``); the
+    pool's extra trash page absorbs every write dense decoding would
+    silently drop (inert lanes, positions past ``max_len``), so
+    inactive lanes can never clobber mapped pages.  Lanes reserve
+    ``ceil((width + budget + gamma + 1) / P)`` pages at admission, and
+    the scheduler's admission guard defers a request the pool cannot
+    cover (``stats.admission_deferrals``) — slot count is bounded by
+    HBM actually used, not ``batch x max_len``.  The allocator is
+    host-side numpy bookkeeping; the engine ships immutable table
+    snapshots to the device only in gaps where the table changed, a
+    host→device upload that adds **zero** syncs.  Decode scatters
+    through the table and attends through the gathered dense per-lane
+    view (on TPU, through the block-table Pallas kernels
+    ``flash_attn_paged``/``verify_attn_paged``) — the identical
+    dispatch over identical bytes — so paged serving is **bitwise**
+    equal to dense serving on full streams (tests/test_paged.py).
+    Committed prompt-prefix pages are published to a refcounted COW
+    registry keyed by *provenance* (refill rows/width/pad, the token
+    prefix, the draft deploy seq — keys match only where page bytes
+    are guaranteed identical); an admission whose rows all hit adopts
+    the donor's physical pages at commit (no device compare) and its
+    chunk pipeline resumes past the covered chunks, cutting
+    shared-system-prompt prefill work (``benchmarks/bench_paged.py``).
+    Divergent writes into shared pages fork first (``fork_for_write``)
+    — the serving engine never needs to by construction, since shared
+    pages cover only positions below every borrower's first divergent
+    write.  ``reseed_window`` is mutually exclusive with paging (the
+    deploy-time re-seed op rewrites dense draft lanes).
   * Pipelining is preserved: superstep t+1 is dispatched *before*
     superstep t's telemetry is pulled to the host; completions observed
     in t schedule refills that are enqueued behind t+1 and take effect
@@ -157,7 +187,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eagle, speculative as spec
+from repro.core import eagle, paging, speculative as spec
 from repro.core.adaptive import AdaptiveDrafter
 from repro.core.controller import Decision, TrainingController
 from repro.core.signals import SignalExtractor
@@ -215,6 +245,12 @@ class ServingStats:
     #                                 uninterruptible prefill stall
     prefill_gap_tokens: Peak = None  # row-tokens prefilled per
     #                                  inter-superstep gap
+    # ---- paged KV cache (deterministic page-count telemetry, mirrored
+    # from the PageAllocator; all zero on dense engines)
+    pages_peak: int = 0             # peak pages mapped at once
+    prefix_hits: int = 0            # prefix-page adoption events (COW)
+    prefix_tokens_saved: int = 0    # prompt tokens served from shared pages
+    admission_deferrals: int = 0    # admit candidates vetoed on page pressure
     retain: int = 4096
     ttfts: Ring = None
     latencies: Ring = None
@@ -321,6 +357,14 @@ class _ChunkPipeline:
         self.dcache = None      # staging draft cache
         self.logits = None      # last-position logits after latest chunk
         self.caps_last = None   # last capture column after latest chunk
+        # ---- paged prefix sharing (engine fills these at spawn)
+        self.resume_q = 0       # >0: skip prefilling [0, q) — the rows
+        #                         adopted shared prefix pages covering it
+        self.resume_rows = None  # (rows, ceil(q/P)) adopted page ids
+        self.pub_entries = []   # (slot, provenance key, n_pages) to
+        #                         publish when this pipeline commits
+        self.deploy_seq = 0     # draft version at spawn (a mid-pipeline
+        #                         deploy makes draft pages unshareable)
 
     @property
     def done(self) -> bool:
@@ -429,6 +473,28 @@ class ServingEngine:
             raise ValueError(f"prefill_chunk {config.prefill_chunk} must "
                              "be a multiple of 8 (refill shape bucket)")
         self.prefill_chunk = config.prefill_chunk
+        # >0 switches the target + draft caches from dense per-lane
+        # buffers to block-table page pools (core/paging.py): lanes
+        # reserve pages at admission (the scheduler defers on pool
+        # pressure), committed prompt prefixes are COW-shared across
+        # lanes, and the host-authoritative block table ships to the
+        # device only when it changed.  0 = dense (byte-parity default).
+        self.page_size = config.page_size
+        self.paged = self.page_size > 0
+        self.allocator: Optional[paging.PageAllocator] = None
+        self.num_pages = 0
+        if self.paged:
+            T.paged_check(cfg, self.max_len, self.page_size)
+            if self.reseed_window:
+                raise ValueError(
+                    "reseed_window is incompatible with paged KV serving "
+                    "(the deploy-time re-seed op rewrites dense draft "
+                    "lanes); disable one of them")
+            self.num_pages = (config.num_pages or
+                              self.batch * self.max_len // self.page_size)
+            self.allocator = paging.PageAllocator(
+                self.num_pages, self.page_size, self.batch, self.max_len,
+                share_prefix=config.share_prefix)
         self._pipelines: List[_ChunkPipeline] = []
         self._cohort_next = 0
         self._sleep = time.sleep           # injectable for tests
@@ -522,9 +588,20 @@ class ServingEngine:
             rdc = eagle.seed_refill_cache(dcfg, dparams, params["embed"],
                                           pre["captures"], toks, pad,
                                           self.max_len)
-            cache = spec.scatter_target_cache(cache, pre["cache"], mask,
-                                              src)
-            dcache = eagle.scatter_draft_rows(dcache, rdc, mask, src)
+            if self.paged:
+                # paged live state: write the dense staging rows through
+                # the lanes' block tables (positions past each lane's
+                # reservation route to the trash page, exactly as dense
+                # rows keep junk past the valid region)
+                cache = spec.scatter_target_cache_paged(cache,
+                                                        pre["cache"],
+                                                        mask, src)
+                dcache = eagle.scatter_draft_rows_paged(dcache, rdc,
+                                                        mask, src)
+            else:
+                cache = spec.scatter_target_cache(cache, pre["cache"],
+                                                  mask, src)
+                dcache = eagle.scatter_draft_rows(dcache, rdc, mask, src)
             carry_r = spec.init_carry(cfg, dcfg, pre, first, gamma)
             return cache, dcache, carry_r, first
 
@@ -556,6 +633,59 @@ class ServingEngine:
 
         self._refill_ss_fn = _refill_superstep
         self._refill_step_fn = _refill_stepwise
+
+        # ---- paged-mode ops.  The prologue writes through the block
+        # tables like any refill (the dense prologue adopts the prefill
+        # cache wholesale, which has no paged equivalent), and a chunk
+        # pipeline whose rows all hit the prefix registry seeds its
+        # staging straight from the shared pages instead of recomputing
+        # the prefix chunks (``_chunk_resume``).
+        self._prologue_paged_fn = None
+        self._chunk_resume_fn = None
+        if self.paged:
+            @functools.partial(jax.jit, donate_argnums=(2, 3))
+            def _prologue_paged(params, dparams, cache, dcache, toks,
+                                pad, sids):
+                b = toks.shape[0]
+                mask = jnp.ones((b,), bool)
+                src = jnp.arange(b, dtype=jnp.int32)
+                return _refill_core(params, dparams, cache, dcache,
+                                    toks, pad, mask, src, sids)
+
+            self._prologue_paged_fn = _prologue_paged
+
+            @functools.partial(jax.jit, static_argnums=(0, 1))
+            def _chunk_resume(width, q, cache, dcache, tbl_rows, pad):
+                """Seed a pipeline's staging caches with positions
+                [0, q) gathered from shared prefix pages (``tbl_rows``:
+                (R, ceil(q / P)) page ids, one row per staging row) —
+                the zero-prefill replacement for the prefix's chunks."""
+                r = tbl_rows.shape[0]
+                cache_s = T.init_cache(cfg, r, width)
+                cache_s["lengths"] = jnp.full((r,), q, jnp.int32)
+                cache_s["pad"] = pad
+
+                def _fill(s_leaf, pool):
+                    rows = jax.vmap(lambda p: paging.gather_rows_paged(
+                        p, tbl_rows, q))(pool)
+                    return s_leaf.at[:, :, :q].set(
+                        rows.astype(s_leaf.dtype))
+
+                for g in cache_s:
+                    if g in ("lengths", "pad"):
+                        continue
+                    cache_s[g] = jax.tree.map(_fill, cache_s[g], cache[g])
+                dcache_s = eagle.init_draft_cache(dcfg, r, self.max_len)
+                for leaf in ("k", "v"):
+                    rows = paging.gather_rows_paged(dcache[leaf],
+                                                    tbl_rows, q)
+                    dcache_s[leaf] = dcache_s[leaf].at[:, :q].set(
+                        rows.astype(dcache_s[leaf].dtype))
+                dcache_s["lengths"] = jnp.full((r,), q, jnp.int32)
+                dcache_s["pad"] = pad
+                return cache_s, dcache_s
+
+            self._chunk_resume_fn = _chunk_resume
 
         # ---- chunked refill pipeline (prefill_chunk > 0).  A refill's
         # prompt is prefilled chunk by chunk into a *staging* cache pair
@@ -613,10 +743,18 @@ class ServingEngine:
             cache_s, dcache_s, logits, caps_last = staging
             first = _chunk_first_token(logits, sids)
             cache_s = spec.pad_target_cache(
-                cache_s, T.cache_abstract(cfg, caps_last.shape[0],
-                                          self.max_len))
-            cache = spec.scatter_target_cache(cache, cache_s, mask, src)
-            dcache = eagle.scatter_draft_rows(dcache, dcache_s, mask, src)
+                cache_s, None if self.paged else
+                T.cache_abstract(cfg, caps_last.shape[0], self.max_len))
+            if self.paged:
+                cache = spec.scatter_target_cache_paged(cache, cache_s,
+                                                        mask, src)
+                dcache = eagle.scatter_draft_rows_paged(dcache, dcache_s,
+                                                        mask, src)
+            else:
+                cache = spec.scatter_target_cache(cache, cache_s, mask,
+                                                  src)
+                dcache = eagle.scatter_draft_rows(dcache, dcache_s, mask,
+                                                  src)
             carry_r = spec.init_carry_from_caps(caps_last, first, gamma)
             return cache, dcache, carry_r, first
 
@@ -773,6 +911,8 @@ class ServingEngine:
         self._sid_next = 0
         self._pipelines = []
         self._cohort_next = 0
+        if self.allocator is not None:
+            self.allocator.reset()
         self.stats = ServingStats()
         self.policy.speculation.reset()
         if self.drafter is not None:
@@ -856,6 +996,26 @@ class ServingEngine:
         toks_j, pad_j = jnp.asarray(toks), jnp.asarray(pad)
         self._note_prefill_op(b, plen)
         self.stats.prefill_gap_tokens.add(b * plen)
+        if self.paged:
+            # page-pool state: reserve lanes (inert padding slots are
+            # skipped — they are not scheduler-owned, so nothing would
+            # ever free them), write the batch prefill through the
+            # tables, then publish the prompt prefixes
+            group = [(i, r) for i, r in enumerate(requests)
+                     if r.finish_t is None]
+            self._reserve_group(group, plen)
+            cache = T.init_cache(self.cfg, b, self.max_len,
+                                 page_size=self.page_size,
+                                 num_pages=self.num_pages)
+            dcache = eagle.init_draft_cache(self.dcfg, b, self.max_len,
+                                            page_size=self.page_size,
+                                            num_pages=self.num_pages)
+            cache, dcache = self._ship_tables(cache, dcache)
+            cache, dcache, carry, first = self._prologue_paged_fn(
+                self.params, self.dparams, cache, dcache, toks_j, pad_j,
+                jnp.asarray(self._slot_sids(requests)))
+            self._publish_prefixes(self._prefix_entries(group, b, plen))
+            return cache, dcache, carry, first
         pre = self._prefill_fn(self.params, toks_j, pad_j)
         first = self._pick(pre["logits"], self._slot_sids(requests))
         cache = pre["cache"]
@@ -896,7 +1056,9 @@ class ServingEngine:
         sched = Scheduler(self.batch, requests,
                           policy=self.policy.admission,
                           gate_arrivals=self.gate_arrivals,
-                          completion_sink=self.completion_sink)
+                          completion_sink=self.completion_sink,
+                          admission_guard=(self._admission_guard
+                                           if self.paged else None))
         t0 = time.perf_counter()
         while not sched.has_work():
             wait = sched.next_arrival_in()
@@ -936,6 +1098,8 @@ class ServingEngine:
     def _retire_and_admit(self, sched: Scheduler, on_complete):
         """Release finished slots, then admit pending requests into them.
         Returns the new (slot, request) assignments to refill."""
+        if self.paged:
+            self._free_finished_lanes(sched)
         for r in sched.release_finished():
             if on_complete is not None:
                 on_complete(r)
@@ -977,6 +1141,181 @@ class ServingEngine:
                 jnp.asarray(src), jnp.asarray(budgets),
                 jnp.asarray(sids))
 
+    # ------------------------------------------------- paged KV plumbing
+    def _ship_tables(self, cache, dcache):
+        """Publish the host-authoritative block table to the device iff
+        it changed since the last ship — two separate snapshots, because
+        the target and draft caches are donated independently and must
+        not share a buffer.  A host-side dict replace: no jitted op ever
+        takes the table as an argument, so reservations and frees never
+        retrace anything.  No-op on dense engines."""
+        if self.allocator is not None and self.allocator.dirty:
+            cache = dict(cache, page_tbl=self.allocator.table_device())
+            dcache = dict(dcache, tbl=self.allocator.table_device())
+            self.allocator.dirty = False
+        return cache, dcache
+
+    def _reservation(self, width: int, req: Request) -> int:
+        """Token reservation for one lane: prompt width plus the decode
+        budget plus the superstep overshoot (a verify round scatters
+        gamma + 1 candidate K/V rows past the committed length before
+        the accept masks land)."""
+        return width + req.max_new_tokens + self.gamma + 1
+
+    def _admission_guard(self, req: Request,
+                         accepted: List[Request]) -> bool:
+        """Scheduler admission veto: would this round's already-accepted
+        requests plus ``req`` all fit the page pool?  Conservative — the
+        width charged is the widest bucketed refill width among the
+        candidates (co-admitted one-shot refills all pad to it; chunked
+        groups split by bucket and only get narrower), so the estimate
+        can only over-count.  A deferred request stays queued in policy
+        order and retries once lanes retire."""
+        cands = accepted + [req]
+        wmax = max(max(8, -(-len(r.prompt) // 8) * 8) for r in cands)
+        need = sum(self.allocator.pages_for(self._reservation(wmax, r))
+                   for r in cands)
+        if self.allocator.can_fit(need):
+            return True
+        self.stats.admission_deferrals += 1
+        return False
+
+    def _reserve_group(self, group: List[Tuple[int, Request]],
+                       width: int):
+        """Map page reservations for the lanes of one refill group (the
+        admission guard already sized the round against the pool, so
+        failure is a logic error, not a defer)."""
+        for slot, req in group:
+            if not self.allocator.reserve(
+                    slot, self._reservation(width, req)):
+                raise RuntimeError(
+                    f"page reservation for slot {slot} failed after "
+                    "admission passed the pool guard")
+        self._sync_paged_stats()
+
+    def _free_finished_lanes(self, sched: Scheduler):
+        """Release finished lanes' pages before the scheduler clears
+        their slots (the allocator is keyed by slot index).  In-flight
+        ghost writes to a freed page are harmless: any future owner's
+        first enqueued op rewrites every position it will ever read."""
+        for i, r in enumerate(sched.slots):
+            if r is not None and r.finish_t is not None:
+                self.allocator.free_lane(i)
+
+    def _sync_paged_stats(self):
+        a = self.allocator
+        self.stats.pages_peak = a.peak_in_use
+        self.stats.prefix_hits = a.prefix_hits
+        self.stats.prefix_tokens_saved = a.prefix_tokens_saved
+
+    def _prefix_entries(self, group: List[Tuple[int, Request]],
+                        rows: int, width: int):
+        """Provenance keys for one refill group's shareable prompt
+        prefixes: per row, the first m = (width - 1) // P pages.  The
+        page holding the final draft pair is lane-divergent past the
+        prompt (the first sampled token lands there), so it never
+        shares.  Keys are built host-side from the request prompts —
+        no device sync."""
+        if self.allocator is None or not self.allocator.share_prefix:
+            return []
+        m = (width - 1) // self.page_size
+        if m <= 0:
+            return []
+        entries = []
+        for slot, req in group:
+            pad = width - len(req.prompt)
+            toks = [0] * pad + list(req.prompt)
+            key = self.allocator.prefix_key(rows, width, pad, toks, m,
+                                            salt=self._deploy_seq)
+            entries.append((slot, key, m))
+        return entries
+
+    def _publish_prefixes(self, entries):
+        """After a commit lands: register each row's prefix pages — or,
+        when an identical prefix is already registered, adopt the shared
+        pages and free the private duplicates.  The bytes are identical
+        by provenance, so the enqueued commit's writes into the adopted
+        range were harmless rewrites of the shared pages' own bytes'
+        twins; nothing re-reads the freed privates (the repointed table
+        ships before the next table-consuming dispatch)."""
+        for slot, key, m in entries:
+            hit = self.allocator.lookup(key)
+            if hit is not None:
+                self.allocator.adopt(slot, hit[:m])
+            else:
+                self.allocator.publish(key, slot, m)
+        if entries:
+            self._sync_paged_stats()
+
+    def _try_adopt(self, pl: _ChunkPipeline,
+                   group: List[Tuple[int, Request]]):
+        """Prefix-registry probe at pipeline spawn: when every row's
+        provenance key hits, the pipeline skips the prefill chunks the
+        shared pages cover — ``_resume_pipeline`` seeds its staging from
+        those pages (zero prefill row-tokens, the measured saving) and
+        chunking resumes at the next chunk boundary.  The lane keeps its
+        own page reservation; page-level dedup happens at commit
+        (``_publish_prefixes``), so mid-pipeline decode ghost-writes can
+        never land in shared pages."""
+        pl.deploy_seq = self._deploy_seq
+        pl.pub_entries = self._prefix_entries(group, pl.rows, pl.width)
+        if self._chunk_resume_fn is None or not pl.pub_entries:
+            return
+        m = (pl.width - 1) // self.page_size
+        hits = []
+        for _, key, _ in pl.pub_entries:
+            hit = self.allocator.lookup(key)
+            if hit is None:
+                return
+            hits.append(hit[:m])
+        # largest chunk boundary the shared pages fully cover (strictly
+        # inside the prompt, so at least one chunk always remains to
+        # regenerate the pipeline's logits/last-capture columns)
+        q, b = 0, pl.first_width
+        while b < pl.width:
+            if b <= m * self.page_size:
+                q = b
+            b += pl.chunk
+        if q <= 0:
+            return
+        mq = -(-q // self.page_size)
+        rows = [h[:mq] for h in hits]
+        rows += [rows[0]] * (pl.rows - len(rows))   # pow2 padding rows
+        pl.resume_q = q
+        pl.resume_rows = np.asarray(rows, np.int32)
+        self.allocator.prefix_hits += len(group)
+        self.allocator.prefix_tokens_saved += len(group) * q
+        self._sync_paged_stats()
+
+    def _resume_pipeline(self, pl: _ChunkPipeline, cache, dcache):
+        """Dispatch the staging-seed op for a spawn-time registry hit:
+        positions [0, resume_q) come from shared pages instead of
+        prefill chunks.  Dispatched in the same host gap as the spawn,
+        so no later-enqueued op can have rewritten the donor pages (XLA
+        executes enqueue-order; page frees only reach the device through
+        ops enqueued afterwards)."""
+        pl.cache, pl.dcache = self._chunk_resume_fn(
+            pl.width, pl.resume_q, cache, dcache,
+            jnp.asarray(pl.resume_rows), pl.pad)
+        pl.pos = pl.resume_q
+        pl.resume_q = 0
+
+    def _publish_pipeline(self, pl: _ChunkPipeline):
+        """Commit-time publish/dedup for one pipeline — skipped when a
+        draft deploy landed mid-pipeline (its draft pages then mix two
+        drafts' bytes and match no clean provenance key)."""
+        if self.allocator is None:
+            return
+        if self._deploy_seq != pl.deploy_seq:
+            return
+        self._publish_prefixes(pl.pub_entries)
+
+    def release_prefix_cache(self):
+        """Drop the shared-prefix registry (drain hygiene / leak
+        checks).  No-op on dense engines."""
+        if self.allocator is not None:
+            self.allocator.release_prefix_cache()
+
     # ------------------------------------------- chunked refill pipeline
     def _note_prefill_op(self, rows: int, width: int):
         """Record one prefill dispatch (one-shot refill, prologue, or
@@ -999,7 +1338,11 @@ class ServingEngine:
         self._cohort_next += 1
         for i, group in enumerate(self.policy.commit.refill_groups(
                 admitted, self.prefill_chunk)):
-            self._pipelines.append(self._make_pipeline(group, cohort, i))
+            pl = self._make_pipeline(group, cohort, i)
+            if self.paged:
+                self._reserve_group(group, pl.width)
+                self._try_adopt(pl, group)
+            self._pipelines.append(pl)
 
     def _chunk_args(self, pl: _ChunkPipeline):
         """Host-side slices for the pipeline's next chunk: (width,
@@ -1057,6 +1400,7 @@ class ServingEngine:
         gap_tokens = 0
         commits = 0
         committed = []
+        cache, dcache = self._ship_tables(cache, dcache)
 
         def _emit_first(fdev, pl):
             if pending is not None:
@@ -1069,6 +1413,8 @@ class ServingEngine:
         for pl in self._pipelines:
             if pl.ready:
                 continue
+            if pl.resume_q and pl.pos == 0:
+                self._resume_pipeline(pl, cache, dcache)
             w, toks_c, nxt, adv_j = self._chunk_args(pl)
             if pl.pos + w < pl.width:          # interior chunk
                 gap_tokens += self._advance_pipeline(pl)
@@ -1105,6 +1451,7 @@ class ServingEngine:
             commits += 1
             committed.append(pl)
             _emit_first(fdev, pl)
+            self._publish_pipeline(pl)
 
         cohorts = {}
         for pl in self._pipelines:
@@ -1123,6 +1470,7 @@ class ServingEngine:
                 commits += 1
                 committed.append(q)
                 _emit_first(fdev, q)
+                self._publish_pipeline(q)
         self._pipelines = [pl for pl in self._pipelines
                            if pl not in committed]
         return cache, dcache, state, max_new, gap_tokens, commits
@@ -1134,7 +1482,10 @@ class ServingEngine:
         host lane masks in place (no telemetry pipelining here)."""
         gap_tokens = 0
         live = []
+        cache, dcache = self._ship_tables(cache, dcache)
         for pl in self._pipelines:
+            if pl.resume_q and pl.pos == 0:
+                self._resume_pipeline(pl, cache, dcache)
             gap_tokens += self._advance_pipeline(pl)
             if not pl.done:
                 live.append(pl)
@@ -1144,6 +1495,7 @@ class ServingEngine:
                 pl.cache, pl.dcache, pl.logits, pl.caps_last, pl.mask,
                 pl.src, pl.sids)
             self.stats.refills += len(pl.admitted)
+            self._publish_pipeline(pl)
             first_np = np.asarray(fdev)
             for row, (slot, req) in enumerate(pl.admitted):
                 self._commit_first(req, int(first_np[row]))
@@ -1159,8 +1511,12 @@ class ServingEngine:
         (skipped by the superstep's outer cond, masked in the stepwise
         loop) until its pipeline's commit writes real state."""
         b = self.batch
-        cache = T.init_cache(self.cfg, b, self.max_len)
-        dcache = eagle.init_draft_cache(self.dcfg, b, self.max_len)
+        cache = T.init_cache(self.cfg, b, self.max_len,
+                             page_size=self.page_size,
+                             num_pages=self.num_pages)
+        dcache = eagle.init_draft_cache(self.dcfg, b, self.max_len,
+                                        page_size=self.page_size,
+                                        num_pages=self.num_pages)
         carry = spec.SpecCarry(
             feats=jnp.zeros((b, self.gamma + 1, 3 * self.cfg.d_model),
                             self.cfg.act_dtype),
@@ -1227,6 +1583,7 @@ class ServingEngine:
                 self.stats.reseeds += 1
             dispatched = False
             if sched.has_work():
+                cache, dcache = self._ship_tables(cache, dcache)
                 out = self._superstep_fn(
                     self.params, self.dparams, cache, dcache, state,
                     max_new, self.policy.speculation.dispatch_table())
@@ -1263,10 +1620,17 @@ class ServingEngine:
                 args = self._refill_arrays(admitted)
                 self._note_prefill_op(args[0].shape[0], args[0].shape[1])
                 gap_tokens += args[0].shape[0] * args[0].shape[1]
+                if self.paged:
+                    self._reserve_group(admitted, int(args[0].shape[1]))
+                    cache, dcache = self._ship_tables(cache, dcache)
                 cache, dcache, state, max_new, fdev = self._refill_ss_fn(
                     self.params, self.dparams, cache, dcache, state,
                     max_new, *args)
                 self.stats.refills += len(admitted)
+                if self.paged:
+                    self._publish_prefixes(self._prefix_entries(
+                        admitted, int(args[0].shape[0]),
+                        int(args[0].shape[1])))
                 if pending is not None:
                     # first tokens materialize with the next telemetry
                     # pull — zero extra host syncs
@@ -1421,10 +1785,17 @@ class ServingEngine:
                 self._note_prefill_op(args[0].shape[0], args[0].shape[1])
                 self.stats.prefill_gap_tokens.add(
                     args[0].shape[0] * args[0].shape[1])
+                if self.paged:
+                    self._reserve_group(admitted, int(args[0].shape[1]))
+                    cache, dcache = self._ship_tables(cache, dcache)
                 cache, dcache, carry, fdev = self._refill_step_fn(
                     self.params, self.dparams, cache, dcache, carry,
                     args[0], args[1], args[2], args[3], args[5])
                 self.stats.refills += len(admitted)
+                if self.paged:
+                    self._publish_prefixes(self._prefix_entries(
+                        admitted, int(args[0].shape[0]),
+                        int(args[0].shape[1])))
                 first_np = np.asarray(fdev)
                 for row, (slot, req) in enumerate(admitted):
                     self._commit_first(req, int(first_np[row]))
@@ -1451,6 +1822,7 @@ class ServingEngine:
             use_spec = self.policy.speculation.step_decision(
                 int(active.sum()), self.accept_ema)
             self.stats.dispatches += 1
+            cache, dcache = self._ship_tables(cache, dcache)
             keys = (self._null_keys if self.greedy else
                     self._lane_keys_fn(jnp.asarray(sids),
                                        jnp.asarray(steps)))

@@ -347,6 +347,15 @@ class ServingConfig:
         dataclasses.field(default=None, repr=False)
     # ---- chunked refill prefill (0 = one-shot)
     prefill_chunk: int = 0
+    # ---- paged KV cache (0 = dense per-lane caches)
+    # page_size > 0 switches target + draft caches to block-table page
+    # pools (core/paging.py): lanes reserve pages at admission, the
+    # scheduler defers admission on pool pressure, and committed prompt
+    # prefixes are COW-shared across lanes (share_prefix).  num_pages=0
+    # sizes the pool to the dense footprint (batch * max_len / page).
+    page_size: int = 0
+    num_pages: int = 0
+    share_prefix: bool = True
     # ---- speculation runtime control (0 = gate only, never park)
     spec_park_patience: int = 0
     spec_probe_interval: int = 8

@@ -58,9 +58,17 @@ class Scheduler:
                  gate_arrivals: bool = False,
                  clock: Callable[[], float] = time.perf_counter,
                  completion_sink: Optional[Callable[[Request], None]]
-                 = None):
+                 = None,
+                 admission_guard: Optional[
+                     Callable[[Request, List[Request]], bool]] = None):
         self.batch = batch_size
         self.policy = policy if policy is not None else FifoAdmission()
+        # resource veto consulted per candidate during ``admit`` (paged
+        # serving passes the page-pool guard): guard(candidate,
+        # already-accepted-this-round) -> False defers the candidate —
+        # and, since admissions this round only grow the footprint, the
+        # rest of the round with it
+        self.admission_guard = admission_guard
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._queue: Deque[Request] = deque()
         self._iter: Optional[Iterator[Request]] = (
@@ -172,7 +180,10 @@ class Scheduler:
         the policy; gated on arrival time when enabled).  Returns the
         (slot, request) assignments made — the engine's refill batch.
         Each admitted request is stamped with ``admit_t`` (prefill
-        starts now — the TTFT clock origin)."""
+        starts now — the TTFT clock origin).  An ``admission_guard``
+        (paged serving's page-pool check) can veto the round's next
+        candidate; the round then stops — deferred requests stay queued
+        in policy order and retry once capacity frees."""
         out = []
         now = time.perf_counter()
         for i, r in enumerate(self.slots):
@@ -184,6 +195,10 @@ class Scheduler:
             pick = cands[self.policy.select(
                 [self._queue[j] for j in cands], self._now())]
             req = self._queue[pick]
+            if (self.admission_guard is not None
+                    and not self.admission_guard(req,
+                                                 [q for _, q in out])):
+                break
             del self._queue[pick]
             req.admit_t = now
             self.slots[i] = req

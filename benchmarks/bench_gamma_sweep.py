@@ -2,6 +2,13 @@
 (batch, γ) against throughput and acceptance length on the live engine.
 The paper finds γ=3–4 chain drafting optimal; larger speculative budgets
 raise accept length but hurt throughput.
+
+A second axis sweeps tree SHAPE at a fixed draft-node budget
+(``width x gamma = 8`` nodes: 1x8, 2x4, 4x2, 8x1): the same verify
+block spent deep on one trajectory vs wide across top-k first
+continuations, printing accepted draft tokens per superstep alongside
+tokens/s.  Wide-shallow shapes recover rejected first guesses; deep
+chains compound first-token risk.
 """
 from __future__ import annotations
 
@@ -56,6 +63,44 @@ def _throughput(cfg, dcfg, params, dparams, domain, batch, gamma,
     return n_tok / (time.perf_counter() - t0), float(np.mean(ells))
 
 
+def _tree_throughput(cfg, dcfg, params, dparams, domain, batch, width,
+                     gamma, n_steps=16):
+    """tokens/s and accepted DRAFT tokens per superstep for a
+    ``width x gamma``-node tree (width=0: the linear chain)."""
+    rng = np.random.default_rng(1)
+    prompts = [domain.sample_prompt(rng)[:12] for _ in range(batch)]
+    toks = jnp.asarray([p + [0] * (12 - len(p)) for p in prompts])
+    MAX = 12 + (gamma + 1) * (n_steps + 2) + gamma * max(width, 1) + 1
+    pre = T.prefill(cfg, params, toks, max_len=MAX)
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    dcache = eagle.init_draft_cache(dcfg, batch, MAX)
+    dcache = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache,
+                                   pre, toks)
+    carry = spec.init_carry(cfg, dcfg, pre, first, gamma)
+    if width:
+        fn = jax.jit(lambda c, dc, cr: spec.tree_decode_step(
+            cfg, dcfg, params, dparams, c, dc, cr, gamma=gamma,
+            width=width))
+    else:
+        fn = jax.jit(lambda c, dc, cr: spec.spec_decode_step(
+            cfg, dcfg, params, dparams, c, dc, cr, gamma=gamma))
+    o = fn(pre["cache"], dcache, carry)
+    jax.block_until_ready(o["tokens"])
+    t0 = time.perf_counter()
+    n_tok = 0
+    for _ in range(n_steps):
+        o = fn(o["cache"], o["dcache"], o["carry"])
+        n_tok += int(np.asarray(o["n_commit"]).sum())
+    jax.block_until_ready(o["tokens"])
+    tps = n_tok / (time.perf_counter() - t0)
+    acc = n_tok / (n_steps * batch) - 1.0  # minus the per-step bonus
+    return tps, acc
+
+
+# width x gamma tree shapes at a fixed 8-draft-node budget
+TREE_SHAPES = ((1, 8), (2, 4), (4, 2), (8, 1))
+
+
 def run():
     cfg, params, domains = demo_target()
     dcfg, dparams, _ = trained_draft("science")
@@ -72,6 +117,15 @@ def run():
                  1e6 / max(tps, 1e-9),
                  f"tps={tps:.1f};accept_len={ell:.2f};"
                  f"speedup={tps / base_tps:.2f}")
+    # tree-shape axis: the same 8-node draft budget, deep vs wide
+    batch = 4
+    for width, gamma in TREE_SHAPES:
+        tps, acc = _tree_throughput(cfg, dcfg, params, dparams, dom,
+                                    batch, width, gamma)
+        emit(f"table4/tree/b{batch}/w{width}g{gamma}",
+             1e6 / max(tps, 1e-9),
+             f"nodes={width * gamma};acc_tok_per_step={acc:.2f};"
+             f"tps={tps:.1f}")
 
 
 if __name__ == "__main__":

@@ -153,14 +153,33 @@ def _prefix_scenario(cfg, params, dcfg, dparams, domains, smoke):
         eng = _build_engine(cfg, params, dcfg, dparams, batch_size=batch,
                             max_len=max_len, prefill_chunk=chunk,
                             page_size=paged)
-        reqs = _requests(trace)
-        eng.serve_stream(reqs)
-        streams[name] = [list(r.generated) for r in reqs]
-        rows[name] = eng.stats.prefill_row_tokens
-        ttft[name] = eng.stats.ttft_p50
+        # min-of-N wall discipline (PR 4): serve the trace once warm,
+        # then N timed repeats against the compiled engine and keep the
+        # best run's wall-derived stats — this host's wall noise spans
+        # 0.8-2.5x, so single-shot TTFT numbers are not comparable.
+        # Each repeat drops the prefix registry first so the COW
+        # counters stay cold-start-deterministic across repeats.
+        best_wall = float("inf")
+        for rep in range(5):                  # rep 0 warms the jit
+            if paged:
+                eng.release_prefix_cache()
+                # COW counters live on the allocator (stats proxies
+                # them at drain) — zero them so each repeat reports a
+                # cold-start registry, not an accumulated total
+                eng.allocator.prefix_hits = 0
+                eng.allocator.prefix_tokens_saved = 0
+            eng.stats = type(eng.stats)()
+            reqs = _requests(trace)
+            eng.serve_stream(reqs)
+            if rep == 0 or eng.stats.wall_s < best_wall:
+                best_wall = eng.stats.wall_s
+                streams[name] = [list(r.generated) for r in reqs]
+                rows[name] = eng.stats.prefill_row_tokens
+                ttft[name] = eng.stats.ttft_p50
+                if paged:
+                    hits = eng.stats.prefix_hits
+                    saved = eng.stats.prefix_tokens_saved
         if paged:
-            hits = eng.stats.prefix_hits
-            saved = eng.stats.prefix_tokens_saved
             _drain_and_check(eng)
     emit("paged/prefix", 0.0,
          f"hits={hits};tokens_saved={saved};"

@@ -1,0 +1,216 @@
+"""Tree speculation: accepted tokens per verify pass + width=1 parity.
+
+A linear gamma-chain stakes each superstep on one draft trajectory: the
+first target disagreement discards every deeper draft token.  Tree
+speculation (``tree_width=W``) drafts W top-k first continuations, each
+extended ``gamma`` deep, and verifies all ``W*gamma+1`` nodes in ONE
+tree-masked ``verify_attn`` pass — so a wrong first guess no longer
+costs the whole superstep, it just shifts acceptance to a sibling
+branch.  The currency a tree buys is *accepted draft tokens per target
+pass*; on this CPU backend the wider verify block costs wall time per
+pass, so tokens/s is reported as an uplift with a conservative floor
+rather than a >1x bar (on accelerators the block rides one fused
+kernel, see kernels/verify_attn).
+
+Scenarios (tide-tiny, CPU backend):
+
+  * **accept** — chain vs tree at EQUAL TARGET PASSES (same superstep
+    count) on a mixed-domain trace, min-of-4 walls (PR 4 discipline:
+    this host's wall noise spans 0.8-2.5x).  Gates: accepted draft
+    tokens per superstep >= ``ACCEPT_BAR`` (1.2x) the chain's, and
+    tree tokens/s >= ``TOKS_FLOOR`` (0.35x) the chain's.
+  * **parity** — width=1 is the degenerate tree: full engine streams
+    (greedy AND per-request-keyed sampled, dense AND paged) must be
+    byte-identical to the chain engine — deterministic.
+  * **paged** — width=2 paged vs dense streams byte-identical;
+    non-path verify rows route to the trash page, so the leak gate
+    (zero pages outstanding after drain) is part of the scenario.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import demo_target, emit, trained_draft
+
+GAMMA = 3
+WIDTH = 2          # gate shape: W*gamma+1 = 7-node block vs 4-node chain
+ACCEPT_BAR = 1.2   # accepted-draft-tokens-per-superstep ratio, tree/chain
+TOKS_FLOOR = 0.35  # CPU tokens/s ratio floor (tree pass is W*gamma+1 wide)
+REPEATS = 4        # min-of-N wall discipline from PR 4
+
+
+def _mixed_prompts(domains, batch, width=12, seed=5):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    doms = list(domains.values())
+    prompts = [doms[i % len(doms)].sample_prompt(rng)[:width]
+               for i in range(batch)]
+    return [p + [0] * (width - len(p)) for p in prompts]
+
+
+def _step_driver(cfg, params, dcfg, dparams, domains, width, batch,
+                 n_steps):
+    """Jitted chain (width=0) / tree decode step + a fresh start state,
+    sized so ``n_steps`` supersteps can never overrun the cache."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import eagle
+    from repro.core import speculative as spec
+    from repro.models import transformer as T
+
+    toks = jnp.asarray(_mixed_prompts(domains, batch))
+    max_len = toks.shape[1] + (GAMMA + 1) * (n_steps + 2)
+    pre = T.prefill(cfg, params, toks, max_len=max_len)
+    first = pre["logits"].argmax(-1).astype(jnp.int32)
+    dcache = eagle.init_draft_cache(dcfg, batch, max_len)
+    dcache = spec.seed_draft_cache(cfg, dcfg, params, dparams, dcache,
+                                   pre, toks)
+    carry = spec.init_carry(cfg, dcfg, pre, first, GAMMA)
+    if width:
+        fn = jax.jit(lambda c, dc, cr: spec.tree_decode_step(
+            cfg, dcfg, params, dparams, c, dc, cr, gamma=GAMMA,
+            width=width))
+    else:
+        fn = jax.jit(lambda c, dc, cr: spec.spec_decode_step(
+            cfg, dcfg, params, dparams, c, dc, cr, gamma=GAMMA))
+    return fn, (pre["cache"], dcache, carry)
+
+
+def _run_steps(fn, start, n_steps):
+    """(accepted draft tokens, committed tokens, best-of-N wall)."""
+    import jax
+    import numpy as np
+
+    cache, dcache, carry = start
+    best_wall, tot = float("inf"), 0
+    for rep in range(REPEATS + 1):            # rep 0 warms the jit
+        out = {"cache": cache, "dcache": dcache, "carry": carry}
+        jax.block_until_ready(out["cache"])
+        t0 = time.perf_counter()
+        tot = 0
+        for _ in range(n_steps):
+            out = fn(out["cache"], out["dcache"], out["carry"])
+            tot += int(np.asarray(out["n_commit"]).sum())
+        jax.block_until_ready(out["tokens"])
+        wall = time.perf_counter() - t0
+        if rep and wall < best_wall:
+            best_wall = wall
+    return tot, best_wall
+
+
+def _accept_scenario(cfg, params, dcfg, dparams, domains, smoke):
+    batch = 8
+    n_steps = 24 if smoke else 48
+    stats = {}
+    for width in (0, WIDTH):
+        fn, start = _step_driver(cfg, params, dcfg, dparams, domains,
+                                 width, batch, n_steps)
+        committed, wall = _run_steps(fn, start, n_steps)
+        # every superstep commits >= 1 token (the bonus/correction);
+        # the rest are accepted draft tokens — the tree's currency
+        accepted = committed - n_steps * batch
+        stats[width] = dict(acc=accepted / (n_steps * batch),
+                            commit=committed / (n_steps * batch),
+                            toks=committed / wall, wall=wall)
+    chain, tree = stats[0], stats[WIDTH]
+    acc_ratio = tree["acc"] / max(chain["acc"], 1e-9)
+    toks_ratio = tree["toks"] / max(chain["toks"], 1e-9)
+    emit("tree/accept", 0.0,
+         f"W={WIDTH};gamma={GAMMA};passes={n_steps};"
+         f"acc_tok_per_pass={tree['acc']:.3f}vs{chain['acc']:.3f};"
+         f"ratio={acc_ratio:.2f}x;"
+         f"commit_per_pass={tree['commit']:.3f}vs{chain['commit']:.3f};"
+         f"tok_s={tree['toks']:.0f}vs{chain['toks']:.0f};"
+         f"tok_s_uplift={toks_ratio:.2f}x")
+    if acc_ratio < ACCEPT_BAR:
+        raise AssertionError(
+            f"tree accepted {tree['acc']:.3f} draft tokens/pass vs chain "
+            f"{chain['acc']:.3f} ({acc_ratio:.2f}x < {ACCEPT_BAR}x): the "
+            f"W={WIDTH} tree is not recovering rejected first guesses")
+    if toks_ratio < TOKS_FLOOR:
+        raise AssertionError(
+            f"tree tokens/s {tree['toks']:.0f} vs chain "
+            f"{chain['toks']:.0f} ({toks_ratio:.2f}x < {TOKS_FLOOR}x): "
+            f"the tree verify block costs more wall than its width "
+            f"explains")
+
+
+def _build_engine(cfg, params, dcfg, dparams, **kw):
+    from repro.serving.engine import ServingEngine
+    from repro.serving.policy import ServingConfig
+
+    scfg = ServingConfig(gamma=GAMMA, seed=11, superstep_rounds=8,
+                         **dict({"max_len": 96, "batch_size": 4}, **kw))
+    return ServingEngine(cfg, params, dcfg, dparams, config=scfg)
+
+
+def _requests(trace):
+    from repro.serving.request import Request
+
+    return [Request(prompt=list(ev.prompt), domain=ev.domain,
+                    max_new_tokens=ev.max_new_tokens) for ev in trace]
+
+
+def _serve(cfg, params, dcfg, dparams, trace, **kw):
+    eng = _build_engine(cfg, params, dcfg, dparams, **kw)
+    reqs = _requests(trace)
+    eng.serve_stream(reqs)
+    if eng.allocator is not None:
+        eng.release_prefix_cache()
+        eng.allocator.assert_clean()    # zero leaked pages after drain
+    return [list(r.generated) for r in reqs]
+
+
+def _parity_scenario(cfg, params, dcfg, dparams, domains, smoke):
+    from repro.data.workloads import arrival_trace
+
+    n_req = 12 if smoke else 20
+    trace = arrival_trace(domains, n_req, mode="bursty", burst_size=4,
+                          max_new_range=(6, 12), prompt_len=(8, 20),
+                          seed=23)
+    for greedy in (True, False):
+        chain = _serve(cfg, params, dcfg, dparams, trace, greedy=greedy)
+        for name, kw in (("dense", {}), ("paged", {"page_size": 8})):
+            tree = _serve(cfg, params, dcfg, dparams, trace,
+                          greedy=greedy, tree_width=1, **kw)
+            if tree != chain:
+                mode = "greedy" if greedy else "sampled"
+                raise AssertionError(
+                    f"width=1 tree {name} {mode} streams diverged from "
+                    f"the chain engine: the degenerate tree is not "
+                    f"bitwise chain-equal")
+        mode = "greedy" if greedy else "sampled"
+        emit(f"tree/parity/{mode}", 0.0,
+             f"requests={n_req};width=1;byte_identical=1")
+
+
+def _paged_scenario(cfg, params, dcfg, dparams, domains, smoke):
+    from repro.data.workloads import arrival_trace
+
+    n_req = 12 if smoke else 20
+    trace = arrival_trace(domains, n_req, mode="bursty", burst_size=4,
+                          max_new_range=(6, 12), prompt_len=(8, 20),
+                          seed=31)
+    dense = _serve(cfg, params, dcfg, dparams, trace, tree_width=WIDTH)
+    paged = _serve(cfg, params, dcfg, dparams, trace, tree_width=WIDTH,
+                   page_size=8)
+    if paged != dense:
+        raise AssertionError(
+            f"width={WIDTH} paged streams diverged from dense: tree "
+            f"verify rows are not landing on the same bytes")
+    emit("tree/paged", 0.0,
+         f"requests={n_req};width={WIDTH};byte_identical=1;leaked_pages=0")
+
+
+def run(smoke: bool = False):
+    cfg, params, domains = demo_target(30 if smoke else 120)
+    dcfg, dparams, _ = trained_draft("science", steps=30 if smoke else 90)
+    _accept_scenario(cfg, params, dcfg, dparams, domains, smoke)
+    _parity_scenario(cfg, params, dcfg, dparams, domains, smoke)
+    _paged_scenario(cfg, params, dcfg, dparams, domains, smoke)
+
+
+if __name__ == "__main__":
+    run()

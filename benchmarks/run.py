@@ -30,6 +30,7 @@ MODULES = [
     ("decoupled", "benchmarks.bench_decoupled"),
     ("slo", "benchmarks.bench_slo"),
     ("paged", "benchmarks.bench_paged"),
+    ("tree", "benchmarks.bench_tree"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -55,7 +56,11 @@ MODULES = [
 # added syncs) + the paged-KV gate (>= 4x served slots at the dense HBM
 # footprint with zero deferrals, dense/paged stream byte parity greedy
 # and sampled, prefix-sharing registry hits with <= 0.7x prefill
-# row-token work, zero leaked pages after drain) + the kernel oracles.
+# row-token work, zero leaked pages after drain) + the tree-speculation
+# gate (accepted draft tokens per target pass >= 1.2x the linear chain
+# at equal passes, tokens/s uplift reported with a conservative CPU
+# floor, width=1 engine streams byte-identical to the chain, zero
+# leaked pages with paging on) + the kernel oracles.
 # ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
@@ -63,6 +68,7 @@ SMOKE_MODULES = [
     ("decoupled", "benchmarks.bench_decoupled"),
     ("slo", "benchmarks.bench_slo"),
     ("paged", "benchmarks.bench_paged"),
+    ("tree", "benchmarks.bench_tree"),
     ("kernels", "benchmarks.bench_kernels"),
 ]
 

@@ -257,6 +257,52 @@ def draft_propose(dcfg: ModelConfig, dparams, embed_params, dcache,
     return draft_tokens, draft_logits, cache_f
 
 
+def draft_propose_tree(dcfg: ModelConfig, dparams, embed_params, dcache,
+                       h_last, first_logits, gamma: int, width: int, *,
+                       greedy: bool = True, key=None, keys=None):
+    """Draft a token *tree*: ``width`` parallel chains of depth ``gamma``
+    sharing the root position, for one tree-masked target verify pass.
+
+    Branch 0 is the verbatim ``draft_propose`` chain (same randomness,
+    same tokens — width == 1 is bitwise the chain).  Branch r >= 1
+    re-proposes from the same post-extend cache with the previously
+    picked depth-1 siblings masked to NEG_INF and a greedy
+    continuation, so sibling roots are distinct and each branch is the
+    draft's best completion of its alternative first token.  Every
+    branch writes its speculative K/V at the same cache slots
+    [lengths, lengths + gamma) — isolation comes from the causal
+    frontier (each propose starts at the same base lengths, so a
+    branch never reads a prior branch's stale rows), and the propose
+    K/V is scratch that the next ``draft_extend`` overwrites anyway.
+
+    Returns (tokens (B, width, γ), logits (B, width, γ, V), dcache')
+    where dcache' is branch 0's propose cache (lengths advanced by γ,
+    reset by the caller on commit).  Branch r's depth-1 logits row is
+    the sibling-masked distribution — exactly the proposal density the
+    residual-sampling acceptance must divide by.
+    """
+    b = h_last.shape[0]
+    toks_all, logits_all = [], []
+    masked = first_logits
+    cache0 = None
+    bidx = jnp.arange(b)
+    for r in range(width):
+        if r == 0:
+            toks, logitss, cache0 = draft_propose(
+                dcfg, dparams, embed_params, dcache, h_last, first_logits,
+                gamma, greedy=greedy, key=key, keys=keys)
+        else:
+            toks, logitss, _ = draft_propose(
+                dcfg, dparams, embed_params, dcache, h_last, masked,
+                gamma, greedy=True)
+        masked = masked.at[bidx, toks[:, 0]].set(attn.NEG_INF)
+        toks_all.append(toks)
+        logits_all.append(logitss)
+    tokens = jnp.stack(toks_all, axis=1)              # (B, w, γ)
+    logits = jnp.stack(logits_all, axis=1)            # (B, w, γ, V)
+    return tokens, logits, cache0
+
+
 def reset_propose(dcache, gamma: int):
     """Roll the speculative lengths back after verification."""
     return dict(dcache, lengths=dcache["lengths"] - gamma)

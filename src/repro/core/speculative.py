@@ -92,6 +92,199 @@ def verify_sample(key, target_logits, draft_logits, draft_tokens,
     return n_acc, bonus
 
 
+# ------------------------------------------------------ tree verification
+def tree_path_slots(sel, gamma: int):
+    """Block slots of the accepted root path: position 0 is the root
+    (slot 0), position j >= 1 is branch ``sel``'s depth-j node at slot
+    1 + sel*gamma + (j-1).  sel: (B,).  Returns (B, γ+1) int32."""
+    j = jnp.arange(gamma + 1)[None, :]
+    return jnp.where(j == 0, 0,
+                     1 + sel[:, None] * gamma + (j - 1)).astype(jnp.int32)
+
+
+def verify_tree_greedy(target_logits, draft_tokens):
+    """Greedy tree acceptance: walk every branch's exact-match prefix
+    under the tree-scored logits and keep the longest root path.
+
+    target_logits: (B, width*γ + 1, V) from the tree-masked verify pass
+    (slot layout of ``tree_path_slots``); draft_tokens: (B, width, γ).
+    Returns (n_acc (B,), sel (B,) winning branch, bonus (B,)).  Sibling
+    roots are distinct, so at most one branch survives depth 1 and the
+    walk is exactly "descend the matching child".  width == 1 computes
+    ``verify_greedy`` op-for-op."""
+    b, w, gamma = draft_tokens.shape
+    r = jnp.arange(w)[:, None]
+    # parent slot of node (r, j): the root for j=1, else (r, j-1)
+    pslots = jnp.concatenate(
+        [jnp.zeros((w, 1), jnp.int32),
+         (1 + r * gamma + jnp.arange(max(gamma - 1, 0))[None, :]
+          ).astype(jnp.int32)], axis=1)                       # (w, γ)
+    tgt = target_logits[:, pslots.reshape(-1)].argmax(-1).astype(
+        jnp.int32).reshape(b, w, gamma)
+    match = tgt == draft_tokens
+    n_branch = jnp.cumprod(match.astype(jnp.int32), axis=2).sum(axis=2)
+    n_acc = n_branch.max(axis=1)
+    sel = n_branch.argmax(axis=1).astype(jnp.int32)
+    last_slot = jnp.where(n_acc == 0, 0, 1 + sel * gamma + (n_acc - 1))
+    bonus_logits = jnp.take_along_axis(
+        target_logits, last_slot[:, None, None], axis=1)[:, 0]
+    bonus = bonus_logits.argmax(-1).astype(jnp.int32)
+    return n_acc, sel, bonus
+
+
+def verify_tree_sample(key, target_logits, draft_logits, draft_tokens,
+                       temperature: float = 1.0, keys=None):
+    """Stochastic tree acceptance: sequential sibling tests with residual
+    updates at depth 1 (SpecInfer-style k-sequential verification), then
+    the per-chain Leviathan rule down the selected branch.
+
+    target_logits: (B, width*γ + 1, V); draft_logits: (B, width, γ, V)
+    where branch r's depth-1 row is the sibling-masked proposal density
+    ``draft_propose_tree`` actually sampled from; draft_tokens:
+    (B, width, γ).  Depth-1 walk: test branch r with
+    u_r < min(1, p(x_r)/q_r(x_r)) against the running residual
+    p ← max(p − q_r, 0) of the previously rejected siblings, so
+    committed tokens stay distributed exactly as target samples.  The
+    bonus draws from the residual at the first failing depth (or the
+    target at the last path slot on full accept).  Randomness: branch 0
+    consumes the chain's exact uniform stream; branch r >= 1 folds r
+    into the acceptance key — width == 1 is bit-for-bit
+    ``verify_sample``.  Returns (n_acc, sel, bonus)."""
+    b, t, v = target_logits.shape
+    _, w, gamma = draft_tokens.shape
+    q = jax.nn.softmax(draft_logits / temperature, axis=-1)   # (B,w,γ,V)
+    if keys is None:
+        k_acc, k_res = jax.random.split(key)
+        u = jnp.stack(
+            [jax.random.uniform(k_acc, (b, gamma)) if r == 0 else
+             jax.random.uniform(jax.random.fold_in(k_acc, r), (b, gamma))
+             for r in range(w)], axis=1)                      # (B,w,γ)
+    else:
+        k_acc = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+        k_res = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
+        u = jnp.stack(
+            [jax.vmap(lambda k: jax.random.uniform(k, (gamma,)))(k_acc)
+             if r == 0 else
+             jax.vmap(lambda k, _r=r: jax.random.uniform(
+                 jax.random.fold_in(k, _r), (gamma,)))(k_acc)
+             for r in range(w)], axis=1)
+
+    # --- depth 1: sequential sibling tests with residual updates
+    p_root = jax.nn.softmax(target_logits[:, 0] / temperature, axis=-1)
+    p_cur = p_root
+    found = jnp.zeros((b,), bool)
+    sel = jnp.zeros((b,), jnp.int32)
+    for r in range(w):
+        x_r = draft_tokens[:, r, 0]
+        q_r = q[:, r, 0]
+        q_x = jnp.take_along_axis(q_r, x_r[:, None], axis=-1)[:, 0]
+        if r == 0:
+            p_test = p_cur          # exactly the chain's first test
+        else:
+            p_test = p_cur / jnp.maximum(p_cur.sum(-1, keepdims=True),
+                                         1e-20)
+        p_x = jnp.take_along_axis(p_test, x_r[:, None], axis=-1)[:, 0]
+        ok_r = u[:, r, 0] < jnp.minimum(1.0, p_x / jnp.maximum(q_x, 1e-20))
+        sel = jnp.where(ok_r & ~found, r, sel)
+        upd = ~(found | ok_r)
+        p_cur = jnp.where(upd[:, None], jnp.maximum(p_cur - q_r, 0.0),
+                          p_cur)
+        found = found | ok_r
+
+    # --- depths 2..γ: per-chain rule down the selected branch
+    tok_sel = jnp.take_along_axis(draft_tokens, sel[:, None, None],
+                                  axis=1)[:, 0]               # (B, γ)
+    q_sel = jnp.take_along_axis(q, sel[:, None, None, None], axis=1)[:, 0]
+    u_sel = jnp.take_along_axis(u, sel[:, None, None], axis=1)[:, 0]
+    if gamma > 1:
+        deep_slots = (1 + sel[:, None] * gamma
+                      + jnp.arange(gamma - 1)[None, :])       # (B, γ-1)
+        p_deep = jax.nn.softmax(
+            jnp.take_along_axis(target_logits, deep_slots[..., None],
+                                axis=1) / temperature, axis=-1)
+        p_tok = jnp.take_along_axis(p_deep, tok_sel[:, 1:, None],
+                                    axis=-1)[..., 0]
+        q_tok = jnp.take_along_axis(q_sel[:, 1:], tok_sel[:, 1:, None],
+                                    axis=-1)[..., 0]
+        ok_deep = u_sel[:, 1:] < jnp.minimum(
+            1.0, p_tok / jnp.maximum(q_tok, 1e-20))
+        ok_full = jnp.concatenate([found[:, None], ok_deep], axis=1)
+    else:
+        ok_full = found[:, None]
+    n_acc = jnp.cumprod(ok_full.astype(jnp.int32), axis=1).sum(axis=1)
+
+    # --- bonus: residual at the first failing depth, or the target at
+    # the last path slot on full accept; n_acc == 0 uses the depth-1
+    # residual accumulated over every rejected sibling
+    bslot = jnp.where(n_acc == 0, 0, 1 + sel * gamma + (n_acc - 1))
+    p_rej = jax.nn.softmax(
+        jnp.take_along_axis(target_logits, bslot[:, None, None],
+                            axis=1)[:, 0] / temperature, axis=-1)
+    sel_depth = jnp.minimum(n_acc, gamma)
+    q_rej = jnp.take_along_axis(
+        jnp.pad(q_sel, ((0, 0), (0, 1), (0, 0))),
+        sel_depth[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(p_rej - q_rej, 0.0)
+    residual = jnp.where((n_acc == 0)[:, None], p_cur, residual)
+    use_residual = (n_acc < gamma)[:, None]
+    dist = jnp.where(use_residual, residual, p_rej)
+    dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-20)
+    logd = jnp.log(dist + 1e-20)
+    if keys is None:
+        bonus = jax.random.categorical(k_res, logd).astype(jnp.int32)
+    else:
+        bonus = jax.vmap(jax.random.categorical)(k_res, logd
+                                                 ).astype(jnp.int32)
+    return n_acc, sel, bonus
+
+
+def compact_tree_cache(cache, sel, gamma: int):
+    """Rewrite the accepted branch's K/V rows into chain order before
+    ``commit_cache``: the tree verify pass wrote width*γ + 1 rows at
+    cache positions lengths + [0..T); the accepted path's rows (slots
+    1 + sel*γ + [0..γ)) move to positions lengths + [1..γ], after which
+    the cache looks exactly like a linear-chain verify block and the
+    ordinary commit applies.  Rows past the path are stale-but-masked
+    (same contract as the chain's uncommitted tail).  sel == 0 is a
+    same-position copy — the width == 1 path is byte-preserving.
+
+    Paged caches move rows *through* the block table: positions resolve
+    via ``paging.page_slot``, so unreserved/inactive lanes route to the
+    trash page and allocator invariants hold."""
+    lengths = cache["lengths"]
+    b = lengths.shape[0]
+    src = lengths[:, None] + 1 + sel[:, None] * gamma \
+        + jnp.arange(gamma)[None, :]                           # (B, γ)
+    dst = lengths[:, None] + 1 + jnp.arange(gamma)[None, :]    # (B, γ)
+    page_tbl = cache.get("page_tbl")
+    if page_tbl is not None:
+        from repro.core import paging
+
+        def move(pool):
+            # pool: (repeats, num_pages + 1, P, Hk, D)
+            p = pool.shape[2]
+            trash = pool.shape[1] - 1
+            pg_s, sl_s = paging.page_slot(page_tbl, p, src, trash)
+            pg_d, sl_d = paging.page_slot(page_tbl, p, dst, trash)
+            rows = pool[:, pg_s, sl_s]
+            return pool.at[:, pg_d, sl_d].set(rows)
+    else:
+        bidx = jnp.arange(b)[:, None]
+
+        def move(leaf):
+            # leaf: (repeats, B, Smax, ...)
+            rows = leaf[:, bidx, src]
+            return leaf.at[:, bidx, dst].set(rows)
+
+    out = {}
+    for k, v in cache.items():
+        if k in ("lengths", "pad", "page_tbl"):
+            out[k] = v
+        else:
+            out[k] = jax.tree.map(move, v)
+    return out
+
+
 # --------------------------------------------------------------- carry
 class SpecCarry(NamedTuple):
     """Pending (feature, token) pairs the draft must ingest next round.
@@ -219,6 +412,96 @@ def spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
             "dcache": dcache, "carry": carry, "captures": caps,
             "accept_mask": accept_mask, "n_acc": n_acc, "block": block,
             "target_logits": tl}
+
+
+def tree_decode_step(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
+                     cache, dcache, carry: SpecCarry, *, gamma: int = 3,
+                     width: int = 1, greedy: bool = True, key=None,
+                     keys=None, moe_impl: str = "sort"):
+    """One speculative serving step over a draft token *tree*.
+
+    Identical contract to ``spec_decode_step`` — same carry/telemetry
+    shapes (γ+1), same key discipline — but the draft proposes ``width``
+    sibling chains sharing the root, the target scores all of them in
+    one tree-masked verify pass (T = width*γ + 1 rows), acceptance
+    walks the tree and keeps the longest root path, and only that
+    path's K/V rows are compacted into chain order and committed
+    (``compact_tree_cache``).  Captures/carry hold accepted-path
+    features only, so SignalStore semantics are unchanged.  width == 1
+    runs the chain computation op-for-op (bitwise parity pinned by
+    tests/test_tree.py).
+
+    Returns the ``spec_decode_step`` dict plus ``sel`` (winning
+    branch); ``block`` is the full flattened tree block (B, T) and
+    ``target_logits`` the path-gathered (B, γ+1, V) rows.
+    """
+    b = carry.tokens.shape[0]
+    if keys is not None:
+        k_draft = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+        k_ver = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
+    else:
+        if key is None:
+            key = jax.random.key(0)
+        k_draft, k_ver = jax.random.split(key)
+
+    # 1) draft catches up on everything committed last round
+    ext_logits, ext_h, dcache = eagle.draft_extend(
+        dcfg, dparams, tparams["embed"], dcache,
+        carry.feats, carry.tokens, carry.advance)
+    last = (carry.advance - 1)[:, None, None]
+    h_last = jnp.take_along_axis(ext_h, last, axis=1)[:, 0]
+    first_logits = jnp.take_along_axis(ext_logits, last, axis=1)[:, 0]
+
+    # 2) draft the token tree (branch 0 == the chain proposal)
+    toks_tree, logits_tree, dcache = eagle.draft_propose_tree(
+        dcfg, dparams, tparams["embed"], dcache, h_last, first_logits,
+        gamma, width, greedy=greedy,
+        key=None if keys is not None else k_draft,
+        keys=k_draft if keys is not None else None)
+
+    # 3) one tree-masked target pass over [t0, flat nodes]
+    t0 = jnp.take_along_axis(carry.tokens, (carry.advance - 1)[:, None],
+                             axis=1)
+    block = jnp.concatenate([t0, toks_tree.reshape(b, width * gamma)],
+                            axis=1)
+    out = T.decode_step(cfg, tparams, cache, block, moe_impl=moe_impl,
+                        tree=(width, gamma))
+    tl = out["logits"]                                     # (B, T, V)
+
+    # 4) tree acceptance: longest root path
+    if greedy:
+        n_acc, sel, bonus = verify_tree_greedy(tl, toks_tree)
+    elif keys is not None:
+        n_acc, sel, bonus = verify_tree_sample(None, tl, logits_tree,
+                                               toks_tree, keys=k_ver)
+    else:
+        n_acc, sel, bonus = verify_tree_sample(k_ver, tl, logits_tree,
+                                               toks_tree)
+    n_commit = n_acc + 1
+
+    # 5) compact the accepted path into chain slots, then commit
+    cache = T.commit_cache(cfg, compact_tree_cache(out["cache"], sel,
+                                                   gamma), n_commit)
+    dcache = eagle.reset_propose(dcache, gamma)
+
+    # 6) committed tokens / carry from the accepted path only
+    path = tree_path_slots(sel, gamma)                     # (B, γ+1)
+    tok_sel = jnp.take_along_axis(toks_tree, sel[:, None, None],
+                                  axis=1)[:, 0]            # (B, γ)
+    idx = jnp.arange(gamma + 1)[None, :]
+    accept_mask = idx < n_commit[:, None]
+    committed = jnp.where(idx < n_acc[:, None],
+                          jnp.pad(tok_sel, ((0, 0), (0, 1))),
+                          bonus[:, None])
+    committed = jnp.where(accept_mask, committed, 0)
+    caps = jnp.take_along_axis(out["captures"], path[..., None], axis=1)
+    tl_path = jnp.take_along_axis(tl, path[..., None], axis=1)
+    carry = SpecCarry(caps, committed, n_commit)
+
+    return {"tokens": committed, "n_commit": n_commit, "cache": cache,
+            "dcache": dcache, "carry": carry, "captures": caps,
+            "accept_mask": accept_mask, "n_acc": n_acc, "sel": sel,
+            "block": block, "target_logits": tl_path}
 
 
 def plain_decode_step(cfg: ModelConfig, tparams, cache, carry_token, *,
@@ -459,8 +742,15 @@ def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
                      threshold_table=None, *, rounds: int = 8,
                      gamma: int = 3, greedy: bool = True,
                      ema_decay: float = 0.9, eos_id: Optional[int] = None,
-                     collect_signals: bool = True, moe_impl: str = "sort"):
+                     collect_signals: bool = True, moe_impl: str = "sort",
+                     tree_width: int = 0):
     """K speculative rounds fused into one compiled function.
+
+    ``tree_width`` >= 1 swaps the speculative arm for
+    ``tree_decode_step`` (a ``tree_width``-branch token tree verified in
+    one tree-masked pass) — carry, telemetry and signal shapes are all
+    γ+1 either way, so nothing downstream changes; 0 is the linear
+    chain.
 
     ``lax.scan`` over ``rounds``; each round
       1. decides speculate-vs-plain in-graph (Eq. 5 threshold table +
@@ -527,10 +817,17 @@ def decode_superstep(cfg: ModelConfig, dcfg: ModelConfig, tparams, dparams,
 
             def _spec(args):
                 cache, dcache, carry = args
-                out = spec_decode_step(cfg, dcfg, tparams, dparams, cache,
-                                       dcache, carry, gamma=gamma,
-                                       greedy=greedy, keys=keys,
-                                       moe_impl=moe_impl)
+                if tree_width:
+                    out = tree_decode_step(cfg, dcfg, tparams, dparams,
+                                           cache, dcache, carry,
+                                           gamma=gamma, width=tree_width,
+                                           greedy=greedy, keys=keys,
+                                           moe_impl=moe_impl)
+                else:
+                    out = spec_decode_step(cfg, dcfg, tparams, dparams,
+                                           cache, dcache, carry,
+                                           gamma=gamma, greedy=greedy,
+                                           keys=keys, moe_impl=moe_impl)
                 return (out["cache"], out["dcache"], out["carry"],
                         out["tokens"], out["n_commit"], out["captures"],
                         out["accept_mask"])

@@ -44,6 +44,20 @@ admission-time page reservations (slot count bounded by HBM actually
 used, not ``batch x max_len``), and provenance-keyed copy-on-write
 sharing of committed prompt-prefix pages across lanes — byte-identical
 streams to dense serving, pinned in tests/test_paged.py.
+
+Tree speculation: ``tree_width`` >= 1 swaps the linear gamma-chain
+draft for a token tree — width top-k first continuations each extended
+to a gamma-deep branch, flattened branch-major into one fixed
+``width * gamma + 1``-row block (slot 0 = the committed token, branch
+r's depth-j node at ``1 + r*gamma + (j-1)``) and verified in a single
+tree-masked target pass.  The acceptance rule walks every branch and
+commits the longest accepted root path; the commit compacts that
+branch's K/V rows into the chain layout, so caches, telemetry, and
+signal capture (accepted-path features only) keep their chain shapes
+— the training loop and SignalStore semantics are unchanged.
+``tree_width=1`` is bitwise identical to the chain engine
+(tests/test_tree.py); the shape is carried by the SpeculationPolicy,
+the seam a learned speculation controller would tune it through.
 """
 from __future__ import annotations
 
@@ -77,6 +91,12 @@ class TideConfig:
     batch_size: int = 4
     max_len: int = 160
     greedy: bool = True
+    superstep_rounds: int = 8         # 0 = per-step reference loop
+    eos_id: Optional[int] = None
+    ema: float = 0.9                  # acceptance-EMA decay
+    tree_width: int = 0               # >=1: draft token trees, verified
+    #                                   in one tree-masked target pass
+    #                                   (width=1 == chain, bitwise)
     adaptive_spec: bool = True        # False = TIDE-default (paper §5.4)
     selective_training: bool = True
     signal_window: int = 24
@@ -103,6 +123,8 @@ class TideConfig:
     # ---- serving control plane (see serving/policy.py)
     admission: str = "fifo"           # fifo | priority | deadline (EDF)
     commit: str = "cohort"            # cohort | eager chunk-pipeline commit
+    admission_lookahead: int = 64     # reorder window (non-FIFO policies)
+    idle_wait_s: float = 0.005        # gated-arrival idle-tick bound
     spec_park_patience: int = 0       # >0: park speculation + capture
     #                                   after N gated-off rounds
     spec_probe_interval: int = 8      # parked dispatches between probes
@@ -113,10 +135,14 @@ class TideConfig:
     # knobs shared (by name) with ServingConfig: assembled into one
     # when ``serving`` is omitted, mirrored back when it is given — one
     # list, so a knob added to either side cannot silently desync
+    # (tests/test_config_mirror.py asserts the list covers every
+    # ServingConfig field)
     _SHARED_FIELDS = ("gamma", "batch_size", "max_len", "greedy", "seed",
+                      "superstep_rounds", "eos_id", "ema", "tree_width",
                       "gate_arrivals", "prefill_chunk", "reseed_window",
                       "page_size", "num_pages", "share_prefix",
-                      "admission", "commit", "spec_park_patience",
+                      "admission", "commit", "admission_lookahead",
+                      "idle_wait_s", "spec_park_patience",
                       "spec_probe_interval", "trainer_threads")
 
     def __post_init__(self):

@@ -24,9 +24,33 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _tree_mask(qi, kpos, length, pad, *, t: int, window: int,
+               tree_w: int, tree_g: int):
+    """Tree-causal verify mask from iota arithmetic alone: the t =
+    tree_w*tree_g + 1 block rows at cache positions [length, length+t)
+    are a flattened draft tree (slot 0 root, branch-major chains of
+    depth tree_g); a query sees committed history plus its own
+    root-path ancestors.  Static (tree_w, tree_g) means no mask arrays
+    cross the kernel boundary."""
+    kslot = kpos - length
+    committed = (kpos < length) & (kpos >= pad)
+    in_block = (kpos >= length) & (kpos < length + t)
+    anc = (kslot == 0) | (
+        (qi > 0) & (kslot > 0) & (kslot < t)
+        & ((kslot - 1) // tree_g == (qi - 1) // tree_g)
+        & ((kslot - 1) % tree_g <= (qi - 1) % tree_g))
+    mask = committed | (in_block & anc)
+    if window:
+        qdepth = jnp.where(qi == 0, 0, (qi - 1) % tree_g + 1)
+        kdepth = jnp.where(kslot == 0, 0, (kslot - 1) % tree_g + 1)
+        k_logical = jnp.where(in_block, length + kdepth, kpos)
+        mask &= k_logical > length + qdepth - window
+    return mask
+
+
 def _kernel(len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
             acc_scr, *, t: int, t_pad: int, block_kv: int, nkv: int,
-            window: int, scale: float):
+            window: int, scale: float, tree_w: int = 0, tree_g: int = 0):
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -47,13 +71,17 @@ def _kernel(len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bkv, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jnp.dot(q, k.T) * scale                     # (t_pad, bkv)
-        qpos = length + jax.lax.broadcasted_iota(jnp.int32,
-                                                 (t_pad, block_kv), 0)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (t_pad, block_kv), 0)
         kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32,
                                                  (t_pad, block_kv), 1)
-        mask = (kpos <= qpos) & (kpos >= pad)
-        if window:
-            mask &= kpos > qpos - window
+        if tree_w:
+            mask = _tree_mask(qi, kpos, length, pad, t=t, window=window,
+                              tree_w=tree_w, tree_g=tree_g)
+        else:
+            qpos = length + qi
+            mask = (kpos <= qpos) & (kpos >= pad)
+            if window:
+                mask &= kpos > qpos - window
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -72,7 +100,8 @@ def _kernel(len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 def _paged_kernel(tbl_ref, len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, t: int, t_pad: int,
-                  page_size: int, n_tbl: int, window: int, scale: float):
+                  page_size: int, n_tbl: int, window: int, scale: float,
+                  tree_w: int = 0, tree_g: int = 0):
     """Paged flash-decoding step: one block table *page* per kv-grid
     step.  The page id was scalar-prefetched from the block table by
     the BlockSpec index_map, so k_ref/v_ref already hold this page's
@@ -98,13 +127,17 @@ def _paged_kernel(tbl_ref, len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref,
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (P, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jnp.dot(q, k.T) * scale                     # (t_pad, P)
-        qpos = length + jax.lax.broadcasted_iota(jnp.int32,
-                                                 (t_pad, page_size), 0)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (t_pad, page_size), 0)
         kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32,
                                                  (t_pad, page_size), 1)
-        mask = (kpos <= qpos) & (kpos >= pad)
-        if window:
-            mask &= kpos > qpos - window
+        if tree_w:
+            mask = _tree_mask(qi, kpos, length, pad, t=t, window=window,
+                              tree_w=tree_w, tree_g=tree_g)
+        else:
+            qpos = length + qi
+            mask = (kpos <= qpos) & (kpos >= pad)
+            if window:
+                mask &= kpos > qpos - window
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -122,7 +155,8 @@ def _paged_kernel(tbl_ref, len_ref, pad_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def verify_attention_paged(q, k_pool, v_pool, tbl, lengths, pad=None, *,
-                           window: int = 0, interpret: bool = False):
+                           window: int = 0, interpret: bool = False,
+                           tree=(0, 0)):
     """Block-table variant: q (B, T, Hq, D); k/v_pool (num_pages + 1,
     P, Hk, D); tbl (B, n_tbl) int32 page ids.  Each kv-grid step DMAs
     the page the table names (scalar-prefetched index_map) — the paged
@@ -142,7 +176,8 @@ def verify_attention_paged(q, k_pool, v_pool, tbl, lengths, pad=None, *,
     grid = (b, hq, n_tbl)
     kern = functools.partial(
         _paged_kernel, t=t, t_pad=t_pad, page_size=page_size, n_tbl=n_tbl,
-        window=window, scale=1.0 / math.sqrt(d))
+        window=window, scale=1.0 / math.sqrt(d),
+        tree_w=tree[0], tree_g=tree[1])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,           # tbl, lengths, pad
         grid=grid,
@@ -178,7 +213,7 @@ def verify_attention_paged(q, k_pool, v_pool, tbl, lengths, pad=None, *,
 
 def verify_attention(q, k_cache, v_cache, lengths, pad=None, *,
                      window: int = 0, block_kv: int = 512,
-                     interpret: bool = False):
+                     interpret: bool = False, tree=(0, 0)):
     """q: (B, T, Hq, D); k/v_cache: (B, Smax, Hk, D); lengths/pad: (B,).
     Returns (B, T, Hq, D)."""
     b, t, hq, d = q.shape
@@ -196,7 +231,8 @@ def verify_attention(q, k_cache, v_cache, lengths, pad=None, *,
     grid = (b, hq, nkv)
     kern = functools.partial(
         _kernel, t=t, t_pad=t_pad, block_kv=block_kv, nkv=nkv,
-        window=window, scale=1.0 / math.sqrt(d))
+        window=window, scale=1.0 / math.sqrt(d),
+        tree_w=tree[0], tree_g=tree[1])
     out = pl.pallas_call(
         kern,
         grid=grid,

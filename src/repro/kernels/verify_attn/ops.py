@@ -8,7 +8,9 @@ import jax
 from repro.kernels.verify_attn.kernel import (verify_attention,
                                               verify_attention_paged)
 from repro.kernels.verify_attn.ref import (verify_attention_paged_ref,
-                                           verify_attention_ref)
+                                           verify_attention_ref,
+                                           verify_attention_tree_paged_ref,
+                                           verify_attention_tree_ref)
 
 
 def _on_tpu() -> bool:
@@ -16,25 +18,39 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_kv",
-                                             "force_kernel"))
+                                             "force_kernel", "tree"))
 def verify_attn(q, k_cache, v_cache, lengths, pad=None, *, window: int = 0,
-                block_kv: int = 512, force_kernel: bool = False):
+                block_kv: int = 512, force_kernel: bool = False,
+                tree: tuple = (0, 0)):
+    """``tree=(width, gamma)`` with width > 0 scores a flattened draft
+    tree block (T = width*gamma + 1 rows) under the tree-causal mask;
+    (0, 0) is the linear verify chain."""
     if _on_tpu() or force_kernel:
         return verify_attention(q, k_cache, v_cache, lengths, pad,
                                 window=window, block_kv=block_kv,
-                                interpret=not _on_tpu())
+                                interpret=not _on_tpu(), tree=tree)
+    if tree[0]:
+        return verify_attention_tree_ref(q, k_cache, v_cache, lengths, pad,
+                                         tree=tree, window=window)
     return verify_attention_ref(q, k_cache, v_cache, lengths, pad,
                                 window=window)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "force_kernel"))
+@functools.partial(jax.jit, static_argnames=("window", "force_kernel",
+                                             "tree"))
 def verify_attn_paged(q, k_pool, v_pool, tbl, lengths, pad=None, *,
-                      window: int = 0, force_kernel: bool = False):
+                      window: int = 0, force_kernel: bool = False,
+                      tree: tuple = (0, 0)):
     """Block-table verify attention: KV pages are DMA'd through the
-    scalar-prefetched table (TPU) or gathered densely (oracle)."""
+    scalar-prefetched table (TPU) or gathered densely (oracle).
+    ``tree=(width, gamma)`` as in ``verify_attn``."""
     if _on_tpu() or force_kernel:
         return verify_attention_paged(q, k_pool, v_pool, tbl, lengths, pad,
                                       window=window,
-                                      interpret=not _on_tpu())
+                                      interpret=not _on_tpu(), tree=tree)
+    if tree[0]:
+        return verify_attention_tree_paged_ref(q, k_pool, v_pool, tbl,
+                                               lengths, pad, tree=tree,
+                                               window=window)
     return verify_attention_paged_ref(q, k_pool, v_pool, tbl, lengths, pad,
                                       window=window)

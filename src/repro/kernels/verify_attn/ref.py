@@ -46,3 +46,56 @@ def verify_attention_paged_ref(q, k_pool, v_pool, tbl, lengths, pad=None, *,
     v_cache = v_pool[tbl].reshape(kv_shape)
     return verify_attention_ref(q, k_cache, v_cache, lengths, pad,
                                 window=window)
+
+
+def verify_attention_tree_ref(q, k_cache, v_cache, lengths, pad=None, *,
+                              tree, window: int = 0):
+    """Tree-masked oracle: the T = width*gamma + 1 queries are a
+    flattened draft tree (slot 0 root, then branch-major chains of
+    depth gamma) written at cache positions lengths[b] + [0..T); each
+    query attends committed history [pad, lengths) plus its own
+    root-path ancestors inside the block.  width == 1 degenerates to
+    ``verify_attention_ref`` boolean-for-boolean."""
+    width, gamma = tree
+    b, t, hq, d = q.shape
+    smax, hk = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    qf = q.astype(jnp.float32).reshape(b, t, hk, g, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf, kf) / jnp.sqrt(d)
+    qi = jnp.arange(t)[None, :, None]                         # (1, T, 1)
+    kpos = jnp.arange(smax)[None, None, :]                    # (1, 1, S)
+    length_b = lengths[:, None, None]
+    kslot = kpos - length_b
+    committed = kpos < length_b
+    if pad is not None:
+        committed = committed & (kpos >= pad[:, None, None])
+    in_block = (kpos >= length_b) & (kpos < length_b + t)
+    same_branch = (kslot - 1) // gamma == (qi - 1) // gamma
+    anc = ((kslot == 0)
+           | ((qi > 0) & (kslot > 0) & (kslot < t) & same_branch
+              & ((kslot - 1) % gamma <= (qi - 1) % gamma)))
+    mask = committed | (in_block & anc)
+    if window:
+        qdepth = jnp.where(qi == 0, 0, (qi - 1) % gamma + 1)
+        kdepth = jnp.where(kslot == 0, 0, (kslot - 1) % gamma + 1)
+        k_logical = jnp.where(in_block, length_b + kdepth, kpos)
+        mask = mask & (k_logical > length_b + qdepth - window)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, vf)
+    return out.reshape(b, t, hq, d).astype(q.dtype)
+
+
+def verify_attention_tree_paged_ref(q, k_pool, v_pool, tbl, lengths,
+                                    pad=None, *, tree, window: int = 0):
+    """Paged tree oracle: gather-dense through the block table, then the
+    dense tree reference (same structure as the non-tree paged oracle)."""
+    b = q.shape[0]
+    n_tbl, p = tbl.shape[1], k_pool.shape[1]
+    kv_shape = (b, n_tbl * p) + k_pool.shape[2:]
+    k_cache = k_pool[tbl].reshape(kv_shape)
+    v_cache = v_pool[tbl].reshape(kv_shape)
+    return verify_attention_tree_ref(q, k_cache, v_cache, lengths, pad,
+                                     tree=tree, window=window)

@@ -6,12 +6,17 @@ on the production mesh instead.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tide-tiny --requests 48
   PYTHONPATH=src python -m repro.launch.serve --arch tide-tiny --continuous
+  PYTHONPATH=src python -m repro.launch.serve --arch tide-tiny --tree-width 4
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b --dryrun
 
 ``--continuous`` serves a ragged Poisson arrival trace through the
 continuous-batching ``serve_stream`` loop (in-flight slot refill)
 instead of run-to-completion waves, and reports goodput, slot
 occupancy, and TTFT/latency percentiles.
+
+Every ``ServingConfig`` field has a flag here (and a flat
+``TideConfig`` mirror) — ``build_parser``/``config_from_args`` are the
+one mapping, asserted total by tests/test_config_mirror.py.
 """
 from __future__ import annotations
 
@@ -19,13 +24,34 @@ import argparse
 import time
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tide-tiny")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gamma", type=int, default=3)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="engine cache length (0 = auto: 96 for waves, "
+                         "160 for --continuous)")
     ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--sample", action="store_true",
+                    help="per-request-keyed sampled decoding instead of "
+                         "greedy argmax")
+    ap.add_argument("--superstep-rounds", type=int, default=8,
+                    help="speculative rounds fused per superstep "
+                         "dispatch (0 = per-step reference loop)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token id (default: budget-only stop)")
+    ap.add_argument("--accept-ema", type=float, default=0.9,
+                    help="acceptance-length EMA decay for the Eq. 5 gate")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine base seed (per-request sampling streams)")
+    ap.add_argument("--tree-width", type=int, default=0,
+                    help=">=1: tree speculation — draft W top-k "
+                         "branches, each gamma deep, verified in one "
+                         "tree-masked target pass; the longest accepted "
+                         "root path commits (1 = degenerate tree, "
+                         "bitwise equal to the chain; 0 = chain)")
     ap.add_argument("--pretrain-steps", type=int, default=120)
     ap.add_argument("--no-adaptive", action="store_true")
     ap.add_argument("--continuous", action="store_true",
@@ -40,6 +66,8 @@ def main():
                     help="replay trace arrival timestamps (idle "
                          "supersteps in gaps) instead of serving the "
                          "trace as a backlog; implies --continuous")
+    ap.add_argument("--idle-wait-s", type=float, default=0.005,
+                    help="max host sleep per gated-arrival idle tick")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked refill prefill width (multiple of 8; "
                          "0 = one-shot): bounds the stall a long prompt "
@@ -53,6 +81,12 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page-pool size (0 = the dense footprint, "
                          "batch * max_len / page_size)")
+    ap.add_argument("--no-share-prefix", action="store_true",
+                    help="disable COW prompt-prefix page sharing")
+    ap.add_argument("--reseed-window", type=int, default=None,
+                    help="deploy-time draft-cache re-seed ring size "
+                         "(default: 32 under --async-train on dense "
+                         "engines, else 0)")
     ap.add_argument("--policy", choices=["fifo", "priority", "deadline"],
                     default="fifo",
                     help="admission policy: fifo (arrival order), "
@@ -67,10 +101,14 @@ def main():
                          "densest decode rounds) or eager (each pipeline "
                          "commits when its prefill finishes — better "
                          "short-prompt TTFT under mixed bursts)")
+    ap.add_argument("--admission-lookahead", type=int, default=64,
+                    help="queue reorder window for non-FIFO admission")
     ap.add_argument("--spec-park", type=int, default=0,
                     help=">0: park speculation + signal capture after N "
                          "consecutive gated-off rounds; resume via "
                          "periodic forced-speculation acceptance probes")
+    ap.add_argument("--spec-probe-interval", type=int, default=8,
+                    help="parked dispatches between acceptance probes")
     ap.add_argument("--trainer-threads", type=int, default=0,
                     help=">0: bound the async trainer's host-thread "
                          "contention with serving by deprioritizing the "
@@ -80,7 +118,41 @@ def main():
                          "process trainer — see ROADMAP)")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
-    args = ap.parse_args()
+    return ap
+
+
+def config_from_args(args):
+    """Assemble the ``ServingConfig`` the parsed flags name (the
+    testable flag → config-field mapping; ``completion_sink`` is the
+    one field with no flag — it is a host callback, not a knob)."""
+    from repro.serving.policy import ServingConfig
+
+    continuous = (getattr(args, "continuous", False) or args.gate_arrivals
+                  or args.policy != "fifo")
+    reseed = args.reseed_window
+    if reseed is None:
+        reseed = (32 if getattr(args, "async_train", False)
+                  and not args.page_size else 0)
+    return ServingConfig(
+        gamma=args.gamma, batch_size=args.batch,
+        max_len=args.max_len or (160 if continuous else 96),
+        greedy=not args.sample,
+        superstep_rounds=args.superstep_rounds,
+        eos_id=args.eos_id, ema=args.accept_ema, seed=args.seed,
+        admission=args.policy, commit=args.commit,
+        admission_lookahead=args.admission_lookahead,
+        gate_arrivals=args.gate_arrivals, idle_wait_s=args.idle_wait_s,
+        prefill_chunk=args.prefill_chunk,
+        page_size=args.page_size, num_pages=args.num_pages,
+        share_prefix=not args.no_share_prefix,
+        spec_park_patience=args.spec_park,
+        spec_probe_interval=args.spec_probe_interval,
+        reseed_window=reseed, trainer_threads=args.trainer_threads,
+        tree_width=args.tree_width)
+
+
+def main():
+    args = build_parser().parse_args()
 
     if args.dryrun:
         import os
@@ -120,22 +192,10 @@ def main():
                                      steps=args.pretrain_steps, lr=3e-3)
     print(f"  loss {losses[0]:.2f} -> {losses[-1]:.2f}")
 
-    from repro.serving.policy import ServingConfig
-
     n = args.requests
     args.continuous = (args.continuous or args.gate_arrivals
                        or args.policy != "fifo")
-    scfg = ServingConfig(gamma=args.gamma, batch_size=args.batch,
-                         max_len=96 if not args.continuous else 160,
-                         admission=args.policy, commit=args.commit,
-                         spec_park_patience=args.spec_park,
-                         gate_arrivals=args.gate_arrivals,
-                         prefill_chunk=args.prefill_chunk,
-                         page_size=args.page_size,
-                         num_pages=args.num_pages,
-                         reseed_window=(32 if args.async_train
-                                        and not args.page_size else 0),
-                         trainer_threads=args.trainer_threads)
+    scfg = config_from_args(args)
     tc = TideConfig(serving=scfg,
                     n_threshold=4, signal_window=16,
                     adaptive_spec=not args.no_adaptive,

@@ -276,6 +276,60 @@ def decode_attend(q, k_cache, v_cache, lengths, pad=None, *, window: int = 0,
     return attend(q, k_cache, v_cache, mask[:, None, None], softcap=softcap)
 
 
+def tree_offsets(width: int, gamma: int) -> jnp.ndarray:
+    """Logical depth of each slot in a flattened draft-token tree block.
+
+    The tree is `width` parallel chains of depth `gamma` sharing one root:
+    slot 0 is the root token t0, slot(r, j) = 1 + r*gamma + (j-1) holds
+    branch r's depth-j node (branch-major).  Returns (width*gamma + 1,)
+    int32 depths: [0, 1..gamma, 1..gamma, ...].
+    """
+    idx = jnp.arange(width * gamma + 1)
+    return jnp.where(idx == 0, 0, (idx - 1) % gamma + 1).astype(jnp.int32)
+
+
+def tree_block_visible(qi, kslot, width: int, gamma: int):
+    """Within-block tree-causal visibility: query slot ``qi`` sees key
+    slot ``kslot`` iff the key is the shared root or a same-branch
+    ancestor-or-self.  Both args broadcastable int arrays; static
+    (width, gamma) so no mask tensors ever cross the kernel boundary."""
+    t = width * gamma + 1
+    same_branch = (kslot - 1) // gamma == (qi - 1) // gamma
+    anc = (kslot - 1) % gamma <= (qi - 1) % gamma
+    return (kslot == 0) | (
+        (qi > 0) & (kslot > 0) & (kslot < t) & same_branch & anc)
+
+
+def decode_attend_tree(q, k_cache, v_cache, lengths, pad=None, *,
+                       tree: Tuple[int, int], window: int = 0,
+                       softcap: float = 0.0):
+    """Tree-masked verify attention: the T = width*gamma + 1 block rows
+    (written at cache positions lengths + [0..T)) are a flattened draft
+    tree; query slot i attends all committed history plus its own
+    root-path ancestors only.  With width == 1 the mask degenerates to
+    the linear ``decode_attend`` mask boolean-for-boolean."""
+    width, gamma = tree
+    b, t, hq, d = q.shape
+    smax = k_cache.shape[1]
+    off = tree_offsets(width, gamma)                           # (T,)
+    qi = jnp.arange(t)[None, :, None]                          # (1, T, 1)
+    kpos = jnp.arange(smax)[None, None, :]                     # (1, 1, S)
+    length_b = lengths[:, None, None]
+    kslot = kpos - length_b                                    # (B, 1, S)
+    committed = kpos < length_b
+    if pad is not None:
+        committed = committed & (kpos >= pad[:, None, None])
+    in_block = (kpos >= length_b) & (kpos < length_b + t)
+    mask = committed | (in_block
+                        & tree_block_visible(qi, kslot, width, gamma))
+    if window:
+        kdepth = jnp.where(kslot == 0, 0, (kslot - 1) % gamma + 1)
+        k_logical = jnp.where(in_block, length_b + kdepth, kpos)
+        q_logical = length_b + off[None, :, None]
+        mask = mask & (k_logical > q_logical - window)
+    return attend(q, k_cache, v_cache, mask[:, None, None], softcap=softcap)
+
+
 def decode_attend_windowed(q, k_cache, v_cache, lengths, pad=None, *,
                            window: int, softcap: float = 0.0):
     """Sliding-window decode that only *reads* the last `window + T` cache
@@ -376,7 +430,7 @@ def self_attention_prefill(cfg: ModelConfig, params, x, positions, pad=None, *,
 
 def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
                           lengths, pad=None, *, window: int = 0,
-                          page_tbl=None):
+                          page_tbl=None, tree: Optional[Tuple[int, int]] = None):
     """x: (B, T, D) new tokens at cache positions lengths + [0..T).
     RoPE positions are lengths - pad + t (pad-adjusted true token index).
     Writes the new K/V into the cache functionally and attends.
@@ -387,12 +441,21 @@ def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
     (B, n_tbl * P) view through the *same* dispatch below, so the paged
     path is structurally the dense computation over identical valid
     bytes — bitwise-equal outputs (garbage keys are masked to the same
-    exact-zero softmax weight on both paths)."""
+    exact-zero softmax weight on both paths).
+
+    Tree mode (``tree=(width, gamma)``): the T = width*gamma + 1 rows are
+    a flattened draft tree (slot 0 root, then branch-major chains); RoPE
+    positions use each slot's logical depth, the K/V scatter is
+    unchanged (flat slots lengths + [0..T)), and attention runs the
+    tree-causal mask so every branch scores in this single pass."""
     from repro.core import paging
     dt = x.dtype
     b, t, _ = x.shape
     q, k, v = qkv_proj(params, x, dt)
-    rope_pos = lengths[:, None] + jnp.arange(t)[None, :]
+    if tree is not None:
+        rope_pos = lengths[:, None] + tree_offsets(*tree)[None, :]
+    else:
+        rope_pos = lengths[:, None] + jnp.arange(t)[None, :]
     if pad is not None:
         rope_pos = rope_pos - pad[:, None]
     q = apply_rope(q, rope_pos, cfg.rope_theta)
@@ -406,7 +469,11 @@ def self_attention_decode(cfg: ModelConfig, params, x, k_cache, v_cache,
     else:
         k_pool = k_cache = scatter_kv(k_cache, k, lengths)
         v_pool = v_cache = scatter_kv(v_cache, v, lengths)
-    if window and k_cache.shape[1] > 4 * (window + t):
+    if tree is not None:
+        o = decode_attend_tree(q, k_cache, v_cache, lengths, pad,
+                               tree=tree, window=window,
+                               softcap=cfg.attn_logit_softcap)
+    elif window and k_cache.shape[1] > 4 * (window + t):
         o = decode_attend_windowed(q, k_cache, v_cache, lengths, pad,
                                    window=window,
                                    softcap=cfg.attn_logit_softcap)

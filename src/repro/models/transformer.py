@@ -165,15 +165,18 @@ def apply_layer_prefill(cfg: ModelConfig, blk: BlockDef, p, x, positions, pad,
 
 
 def apply_layer_decode(cfg: ModelConfig, blk: BlockDef, p, x, entry, lengths,
-                       pad, moe_impl: str, page_tbl=None):
+                       pad, moe_impl: str, page_tbl=None, tree=None):
     """Returns (x, new_entry, aux). SSM entries gain a per-step T axis.
     With ``page_tbl``, attention entries are page pools written/read
-    through the shared block table (see ``core.paging``)."""
+    through the shared block table (see ``core.paging``).  With
+    ``tree=(width, gamma)``, the block rows are a flattened draft tree
+    scored under the tree-causal mask (attention mixers only — see
+    ``tree_check``)."""
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if blk.mixer in (ATTN, ATTN_SW):
         out, (kc, vc) = attn.self_attention_decode(
             cfg, p["mix"], h, entry["k"], entry["v"], lengths, pad,
-            window=cfg.window, page_tbl=page_tbl)
+            window=cfg.window, page_tbl=page_tbl, tree=tree)
         new = dict(entry, k=kc, v=vc)
     elif blk.mixer == MLA:
         out, (ckv, kr) = mla_mod.mla_decode(
@@ -253,7 +256,7 @@ def run_group_prefill(cfg, group_params, pattern, repeats, x, positions, pad,
 
 def run_group_decode(cfg, group_params, pattern, repeats, x, cache_group,
                      lengths, pad, base_idx: int, cap_targets, want_caps,
-                     moe_impl, page_tbl=None):
+                     moe_impl, page_tbl=None, tree=None):
     P = len(pattern)
 
     def body(carry, xs):
@@ -263,7 +266,7 @@ def run_group_decode(cfg, group_params, pattern, repeats, x, cache_group,
         for pi, blk in enumerate(pattern):
             x, entry, a = apply_layer_decode(
                 cfg, blk, p_slice[f"pos{pi}"], x, c_slice[f"pos{pi}"],
-                lengths, pad, moe_impl, page_tbl=page_tbl)
+                lengths, pad, moe_impl, page_tbl=page_tbl, tree=tree)
             aux = aux + a
             lidx = base_idx + i * P + pi
             caps = _update_caps(caps, cap_targets, lidx, x)
@@ -361,10 +364,12 @@ def prefill(cfg: ModelConfig, params, tokens, extra=None, *,
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, *,
-                moe_impl: str = "sort", want_caps: bool = True):
+                moe_impl: str = "sort", want_caps: bool = True, tree=None):
     """Verify/decode block: tokens (B, T) at cache positions
     lengths + [0..T). Returns dict(logits (B,T,V), cache (uncommitted),
-    captures (B,T,3D))."""
+    captures (B,T,3D)).  With ``tree=(width, gamma)`` the block is a
+    flattened draft tree (T = width*gamma + 1) scored in one
+    tree-masked pass."""
     b, t = tokens.shape
     lengths, pad = cache["lengths"], cache["pad"]
     page_tbl = cache.get("page_tbl")
@@ -379,7 +384,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, *,
         x, cgroup, caps, _ = run_group_decode(
             cfg, params[name], pattern, repeats, x, cache[name], lengths,
             pad, base, cap_targets, want_caps, moe_impl,
-            page_tbl=page_tbl)
+            page_tbl=page_tbl, tree=tree)
         new_cache[name] = cgroup
         if want_caps:
             caps_all.append(caps)
@@ -517,6 +522,20 @@ def paged_check(cfg: ModelConfig, max_len: int, page_size: int):
             if blk.mixer not in (ATTN, ATTN_SW):
                 raise ValueError(
                     f"paged KV cache supports attention mixers only; "
+                    f"config has {blk.mixer!r}")
+
+
+def tree_check(cfg: ModelConfig):
+    """Validate a tree-speculation request: the tree verify pass scores
+    all branches in one block and commits only the accepted root path,
+    which requires per-position K/V rollback — attention mixers only
+    (SSM/RWKV commit picks one step state along the block T axis, which
+    is path-order-dependent under a tree)."""
+    for _, pattern, _ in model_groups(cfg):
+        for blk in pattern:
+            if blk.mixer not in (ATTN, ATTN_SW):
+                raise ValueError(
+                    f"tree speculation supports attention mixers only; "
                     f"config has {blk.mixer!r}")
 
 

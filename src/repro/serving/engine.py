@@ -122,6 +122,27 @@ Architecture (slot lifecycle):
     pages cover only positions below every borrower's first divergent
     write.  ``reseed_window`` is mutually exclusive with paging (the
     deploy-time re-seed op rewrites dense draft lanes).
+  * **Tree speculation** (``tree_width=W`` >= 1): each speculative
+    round drafts a token *tree* instead of a linear chain — W top-k
+    first continuations, each extended to a gamma-deep branch by the
+    EAGLE draft — flattened branch-major into one fixed block of
+    T = W*gamma + 1 rows (slot 0 = the committed token, branch r's
+    depth-j node at slot 1 + r*gamma + (j-1)).  One tree-masked target
+    forward (``verify_attn(tree=(W, gamma))``; in-block visibility is
+    same-branch ancestors plus the shared root, derived from iota
+    arithmetic — no mask tensors) scores every branch at the cost of a
+    single verify pass, the acceptance rule (greedy match or
+    SpecInfer-style sequential residual sampling over the sibling set)
+    picks the longest accepted root path, and the commit *compacts*
+    that branch's K/V rows into the chain layout before
+    ``commit_cache`` — non-path rows stay past the committed length
+    where the next block's scatter rewrites them (dense) or routes to
+    the trash page (paged), so allocator invariants are untouched.
+    Only accepted-path features enter signal capture, so SignalStore
+    semantics are unchanged.  ``tree_width=1`` is the degenerate tree,
+    **bitwise identical** to the chain engine on full streams
+    (tests/test_tree.py); 0 (default) keeps the chain path compiled
+    as-is.  Attention mixers only (``T.tree_check``).
   * Pipelining is preserved: superstep t+1 is dispatched *before*
     superstep t's telemetry is pulled to the host; completions observed
     in t schedule refills that are enqueued behind t+1 and take effect
@@ -452,6 +473,14 @@ class ServingEngine:
         self.policy = policy
         self.drafter = policy.speculation.drafter
         self.policy.speculation.prepare(self.batch)
+        # draft-tree speculation: the shape is policy-owned (the
+        # SpeculationPolicy is the seam a learned controller would tune
+        # it through); the config field seeds the default policy, and an
+        # explicitly-passed policy's width wins.  0 = linear chain.
+        self.tree_width = (policy.speculation.tree_width
+                           or config.tree_width)
+        if self.tree_width:
+            T.tree_check(cfg)
         # decoupled-training deploy slot: a callable returning the latest
         # published DraftVersion (or None); polled once per superstep —
         # a host attribute read, zero extra device syncs
@@ -521,8 +550,15 @@ class ServingEngine:
             return eagle.seed_prompt_pairs(dcfg, dparams, params["embed"],
                                            dcache, caps, tokens, pad)
 
+        tree_width = self.tree_width
+
         @jax.jit
         def _spec_step(params, dparams, cache, dcache, carry, keys):
+            if tree_width:
+                return spec.tree_decode_step(
+                    cfg, dcfg, params, dparams, cache, dcache, carry,
+                    gamma=gamma, width=tree_width, greedy=self.greedy,
+                    keys=keys)
             return spec.spec_decode_step(
                 cfg, dcfg, params, dparams, cache, dcache, carry,
                 gamma=gamma, greedy=self.greedy, keys=keys)
@@ -850,7 +886,8 @@ class ServingEngine:
                 rounds=self.superstep_rounds, gamma=gamma,
                 greedy=self.greedy, ema_decay=self._ema,
                 eos_id=self.eos_id,
-                collect_signals=self.extractor is not None)
+                collect_signals=self.extractor is not None,
+                tree_width=self.tree_width)
 
             @functools.partial(jax.jit, donate_argnums=(2, 3, 4))
             def _superstep(params, dparams, cache, dcache, state, max_new,
@@ -1158,9 +1195,13 @@ class ServingEngine:
     def _reservation(self, width: int, req: Request) -> int:
         """Token reservation for one lane: prompt width plus the decode
         budget plus the superstep overshoot (a verify round scatters
-        gamma + 1 candidate K/V rows past the committed length before
-        the accept masks land)."""
-        return width + req.max_new_tokens + self.gamma + 1
+        the whole draft block's candidate K/V rows — gamma + 1 for the
+        linear chain, tree_width * gamma + 1 for a draft tree — past
+        the committed length before the accept masks land; the tree
+        commit then compacts the accepted branch back into the chain
+        layout, so only the block rows themselves ever overshoot)."""
+        block = self.gamma * max(self.tree_width, 1) + 1
+        return width + req.max_new_tokens + block
 
     def _admission_guard(self, req: Request,
                          accepted: List[Request]) -> bool:

@@ -192,8 +192,17 @@ class SpeculationPolicy:
     name = "adaptive"
 
     def __init__(self, drafter=None, park_patience: int = 0,
-                 probe_interval: int = 8):
+                 probe_interval: int = 8, tree_width: int = 0):
         self.drafter = drafter
+        # Draft-tree shape: 0 = linear gamma-chain (the default engine),
+        # >= 1 = a width-way token tree verified in one tree-masked
+        # target pass (width=1 is the degenerate tree, bitwise equal to
+        # the chain).  The policy owns the shape because it is the
+        # speculation-side knob a learned controller would tune; today
+        # it is a construction-time choice — the engine compiles one
+        # superstep per shape, so per-dispatch selection needs a table
+        # of compiled widths (the ROADMAP's RL/bandit extension point).
+        self.tree_width = int(tree_width)
         self.park_patience = int(park_patience)
         self.probe_interval = max(int(probe_interval), 1)
         self.parked = False
@@ -359,6 +368,14 @@ class ServingConfig:
     # ---- speculation runtime control (0 = gate only, never park)
     spec_park_patience: int = 0
     spec_probe_interval: int = 8
+    # ---- tree speculation (0 = linear gamma-chain drafts)
+    # tree_width >= 1 drafts a token tree — width top-k first
+    # continuations, each extended to a gamma-deep chain — and verifies
+    # every branch in one tree-masked target pass, committing the
+    # longest accepted root path.  width=1 is the degenerate tree,
+    # bitwise identical to the chain engine (tests/test_tree.py);
+    # attention-mixer models only.
+    tree_width: int = 0
     # ---- decoupled training
     reseed_window: int = 0
     # >0: deprioritize the background training thread at the OS
@@ -376,4 +393,5 @@ class ServingConfig:
             commit=COMMIT_POLICIES[self.commit](),
             speculation=SpeculationPolicy(
                 drafter, park_patience=self.spec_park_patience,
-                probe_interval=self.spec_probe_interval))
+                probe_interval=self.spec_probe_interval,
+                tree_width=self.tree_width))

@@ -1,11 +1,24 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS here — tests must see the
 real single CPU device (the dry-run sets its own flags in-process)."""
+import resource
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.models.config import (ATTN, CROSS, FFN_GELU, FFN_MOE, FFN_SWIGLU,
                                  MAMBA, MLA, RWKV6, BlockDef, ModelConfig)
+
+# LLVM's backend_compile recurses deeply on large fused programs; with
+# the default 8 MB soft stack limit a big compile late in the full-tier
+# session segfaults the interpreter.  The main-thread stack grows on
+# demand against the soft limit, so raising it here (hard limit permits)
+# covers every compile the suite triggers.
+_soft, _hard = resource.getrlimit(resource.RLIMIT_STACK)
+_want = 512 * 1024 * 1024
+if _soft != resource.RLIM_INFINITY and _soft < _want:
+    if _hard == resource.RLIM_INFINITY or _hard >= _want:
+        resource.setrlimit(resource.RLIMIT_STACK, (_want, _hard))
 
 
 def pytest_configure(config):

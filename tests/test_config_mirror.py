@@ -1,0 +1,128 @@
+"""Config-surface totality: every ``ServingConfig`` knob must be
+reachable from every front door.
+
+Three surfaces expose the same knobs — the ``ServingConfig`` dataclass
+(engine API), the flat ``TideConfig`` mirror (system API), and the
+``launch/serve`` CLI flags — and they drift silently: adding a field to
+``ServingConfig`` without a ``_SHARED_FIELDS`` entry or a flag leaves a
+knob that exists but cannot be set from the system/CLI layer.  These
+tests make the drift loud by asserting totality structurally, so the
+failure message IS the checklist for wiring a new knob.
+
+``completion_sink`` is the one exempt field: it is a host callback
+handed to the engine by the system layer, not a serializable knob.
+
+All checks are pure dataclass/argparse introspection — no models, no
+jit — so the file runs in milliseconds in the fast tier.
+"""
+import dataclasses
+
+from repro.core.tide import TideConfig
+from repro.launch import serve
+from repro.serving.policy import ServingConfig
+
+# host-callback field: not a knob, no flat mirror, no CLI flag
+EXEMPT = {"completion_sink"}
+
+SERVING_FIELDS = {f.name: f for f in dataclasses.fields(ServingConfig)}
+KNOBS = {n: f for n, f in SERVING_FIELDS.items() if n not in EXEMPT}
+
+
+def test_shared_fields_cover_every_serving_knob():
+    shared = set(TideConfig._SHARED_FIELDS)
+    missing = set(KNOBS) - shared
+    assert not missing, (
+        f"ServingConfig fields {sorted(missing)} have no TideConfig "
+        f"flat mirror: add them to TideConfig._SHARED_FIELDS (and a "
+        f"matching flat field)")
+    stale = shared - set(KNOBS)
+    assert not stale, (
+        f"TideConfig._SHARED_FIELDS names {sorted(stale)} which are "
+        f"not ServingConfig fields")
+
+
+def test_flat_mirror_defaults_match_serving_defaults():
+    """The mirror logic only forwards flat values, so a flat default
+    that drifts from the serving default would silently override an
+    explicit ``serving=``-side choice (or vice versa)."""
+    tide_fields = {f.name: f for f in dataclasses.fields(TideConfig)}
+    for name in TideConfig._SHARED_FIELDS:
+        sf, tf = SERVING_FIELDS[name], tide_fields[name]
+        assert sf.default == tf.default, (
+            f"default mismatch for {name}: ServingConfig={sf.default!r} "
+            f"TideConfig={tf.default!r}")
+
+
+def test_flat_fields_mirror_into_serving():
+    """Setting the flat TideConfig field lands on tc.serving.<field>."""
+    probe = {"gamma": 5, "batch_size": 7, "max_len": 320, "greedy": False,
+             "superstep_rounds": 3, "eos_id": 9, "ema": 0.5, "seed": 13,
+             "admission": "deadline", "commit": "eager",
+             "admission_lookahead": 17, "gate_arrivals": True,
+             "idle_wait_s": 0.25, "prefill_chunk": 16, "page_size": 8,
+             "num_pages": 40, "share_prefix": False,
+             "spec_park_patience": 6, "spec_probe_interval": 4,
+             "tree_width": 2, "reseed_window": 8, "trainer_threads": 2}
+    assert set(probe) == set(TideConfig._SHARED_FIELDS), (
+        "probe table out of date: update it alongside _SHARED_FIELDS")
+    for name, value in probe.items():
+        tc = TideConfig(**{name: value})
+        assert getattr(tc.serving, name) == value, name
+        # and back: an explicit serving= config populates the flat view
+        tc2 = TideConfig(serving=ServingConfig(**{name: value}))
+        assert getattr(tc2, name) == value, name
+
+
+def test_serve_flags_cover_every_serving_knob():
+    """Every knob must be settable from the launch/serve CLI: parse a
+    known argv per field and assert it lands on the assembled
+    ServingConfig.  The table's key set is pinned to the field set, so
+    a new field fails here until it grows a flag AND a table row."""
+    flag_cases = {
+        "gamma": (["--gamma", "5"], 5),
+        "batch_size": (["--batch", "7"], 7),
+        "max_len": (["--max-len", "320"], 320),
+        "greedy": (["--sample"], False),
+        "superstep_rounds": (["--superstep-rounds", "3"], 3),
+        "eos_id": (["--eos-id", "9"], 9),
+        "ema": (["--accept-ema", "0.5"], 0.5),
+        "seed": (["--seed", "13"], 13),
+        "admission": (["--policy", "deadline"], "deadline"),
+        "commit": (["--commit", "eager"], "eager"),
+        "admission_lookahead": (["--admission-lookahead", "17"], 17),
+        "gate_arrivals": (["--gate-arrivals"], True),
+        "idle_wait_s": (["--idle-wait-s", "0.25"], 0.25),
+        "prefill_chunk": (["--prefill-chunk", "16"], 16),
+        "page_size": (["--page-size", "8"], 8),
+        "num_pages": (["--num-pages", "40"], 40),
+        "share_prefix": (["--no-share-prefix"], False),
+        "spec_park_patience": (["--spec-park", "6"], 6),
+        "spec_probe_interval": (["--spec-probe-interval", "4"], 4),
+        "tree_width": (["--tree-width", "2"], 2),
+        "reseed_window": (["--reseed-window", "8"], 8),
+        "trainer_threads": (["--trainer-threads", "2"], 2),
+    }
+    missing = set(KNOBS) - set(flag_cases)
+    assert not missing, (
+        f"ServingConfig fields {sorted(missing)} have no launch/serve "
+        f"flag case: add the flag to serve.build_parser, wire it in "
+        f"serve.config_from_args, and add a row here")
+    stale = set(flag_cases) - set(KNOBS)
+    assert not stale, f"flag cases for non-fields: {sorted(stale)}"
+    parser = serve.build_parser()
+    for name, (argv, expected) in flag_cases.items():
+        scfg = serve.config_from_args(parser.parse_args(argv))
+        assert getattr(scfg, name) == expected, (
+            f"flag {argv} did not land on ServingConfig.{name}")
+
+
+def test_serve_flag_defaults_assemble_serving_defaults():
+    """Bare argv builds the default config (modulo the documented
+    context-dependent fields: max_len auto-sizes by serving mode and
+    reseed_window by training mode)."""
+    scfg = serve.config_from_args(serve.build_parser().parse_args([]))
+    context_dependent = {"max_len", "reseed_window"}
+    for name in KNOBS:
+        if name in context_dependent:
+            continue
+        assert getattr(scfg, name) == SERVING_FIELDS[name].default, name

@@ -29,6 +29,7 @@ from repro.core.signals import SignalExtractor, SignalStore
 from repro.data.workloads import arrival_trace, make_domains, training_corpus
 from repro.models import transformer as T
 from repro.serving.engine import ServingEngine, ServingStats
+from repro.serving.policy import ServingConfig
 from repro.serving.request import Request, inert_request
 from repro.serving.scheduler import Scheduler
 from repro.training.trainer import pretrain_target
@@ -48,14 +49,15 @@ def pretrained():
 
 
 def _engine(pretrained, rounds, *, batch=4, extractor=True, eos_id=None,
-            max_len=96, greedy=True):
+            max_len=96, greedy=True, tree_width=0):
     cfg, params, dcfg, dparams, domains = pretrained
     store = SignalStore()
     ext = SignalExtractor(store, window=16) if extractor else None
-    eng = ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
-                        max_len=max_len, gamma=3, extractor=ext, seed=5,
-                        greedy=greedy, superstep_rounds=rounds,
-                        eos_id=eos_id)
+    config = ServingConfig(batch_size=batch, max_len=max_len, gamma=3,
+                           seed=5, greedy=greedy, superstep_rounds=rounds,
+                           eos_id=eos_id, tree_width=tree_width)
+    eng = ServingEngine(cfg, params, dcfg, dparams, extractor=ext,
+                        config=config)
     return eng, store
 
 
@@ -153,6 +155,27 @@ def test_sampled_stream_scheduling_invariant(pretrained):
         e_wv.serve_wave(r_wv[i:i + 4])
     assert [r.generated for r in r_wv] == [r.generated for r in r_ss], \
         "sampled streams depend on scheduling (wave vs continuous)"
+
+    # tree-sampled decoding rides the same per-lane streams: branch
+    # r >= 1 folds r into the lane's acceptance key, so a width=2 tree
+    # must stay refill-order-invariant across the same three schedules
+    r_tr = _requests(pretrained, budgets)
+    e_tr, _ = _engine(pretrained, 8, greedy=False, tree_width=2)
+    e_tr.serve_stream(list(r_tr))
+    assert e_tr.stats.refills == len(budgets) - e_tr.batch
+
+    r_ts = _requests(pretrained, budgets)
+    e_ts, _ = _engine(pretrained, 0, greedy=False, tree_width=2)
+    e_ts.serve_stream(list(r_ts))
+    assert [r.generated for r in r_ts] == [r.generated for r in r_tr], \
+        "tree-sampled superstep stream diverged from the per-step loop"
+
+    r_tw = _requests(pretrained, budgets)
+    e_tw, _ = _engine(pretrained, 8, greedy=False, tree_width=2)
+    for i in range(0, len(r_tw), 4):
+        e_tw.serve_wave(r_tw[i:i + 4])
+    assert [r.generated for r in r_tw] == [r.generated for r in r_tr], \
+        "tree-sampled streams depend on scheduling (wave vs continuous)"
 
 
 def test_stream_stats_and_latency(pretrained):

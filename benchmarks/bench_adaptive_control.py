@@ -8,10 +8,9 @@ baseline, finishing the identical workload sooner.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import demo_target, emit
-from repro.core.adaptive import AdaptiveDrafter, LatencyProfile
+from repro.core.adaptive import LatencyProfile
 from repro.core.tide import TideConfig, TideSystem
 from repro.data.workloads import MULTILINGUAL, Phase, WorkloadStream, \
     make_domains

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import demo_target, emit, timeit
-from repro.core import speculative as spec
 from repro.core.adaptive import PAPER_PROFILES
 from repro.models import transformer as T
 

@@ -63,7 +63,6 @@ commits together.  Gates:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import demo_target, emit, trained_draft
 

@@ -5,7 +5,6 @@ from the measured top-1 agreement α.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import demo_target, emit, trained_draft

@@ -27,7 +27,8 @@ import numpy as np
 from benchmarks.common import demo_target, emit, timeit, trained_draft
 
 
-def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len):
+def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len,
+                  **obs):
     from repro.core.signals import SignalExtractor, SignalStore
     from repro.serving.engine import ServingEngine
 
@@ -35,7 +36,7 @@ def _build_engine(cfg, params, dcfg, dparams, rounds, *, batch, max_len):
     ext = SignalExtractor(store, window=32)
     return ServingEngine(cfg, params, dcfg, dparams, batch_size=batch,
                          max_len=max_len, gamma=3, extractor=ext, seed=11,
-                         superstep_rounds=rounds)
+                         superstep_rounds=rounds, **obs)
 
 
 def _serve(eng, domains, *, waves, batch, max_new):
@@ -154,6 +155,81 @@ def run(smoke: bool = False):
             raise AssertionError(
                 f"K={rounds} superstep did not reduce host syncs per "
                 f"token by >=2x ({ref_sync:.3f} -> {s:.3f})")
+
+    _obs_overhead_gate(cfg, params, dcfg, dparams, domains, batch=batch,
+                       max_len=max_len, waves=waves, max_new=max_new)
+
+
+def _obs_overhead_gate(cfg, params, dcfg, dparams, domains, *, batch,
+                       max_len, waves, max_new, rounds=8, trials=4):
+    """Observability overhead gate (repro/obs, zero-sync rule).
+
+    Serves the identical wave sequence through an obs-off K=``rounds``
+    engine and an obs-on twin (live tracer + flight recorder + shared
+    metrics registry) and asserts the contract:
+
+      * token streams byte-identical and dispatches (device syncs)
+        exactly equal — obs hooks are host-side only, so they cannot
+        change what the device executes,
+      * obs-on hot-loop wall ≤ 1.03x obs-off + a 2 µs/token absolute
+        floor (min-of-``trials`` interleaved walls; the floor absorbs
+        shared-CPU noise at these tiny per-token walls),
+      * the trace actually covers the loop (superstep dispatch/unpack
+        spans present) and ``metrics.snapshot()`` agrees with the
+        legacy stats counters.
+    """
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.recorder import FlightRecorder
+    from repro.obs.trace import Tracer
+
+    eng_off = _build_engine(cfg, params, dcfg, dparams, rounds,
+                            batch=batch, max_len=max_len)
+    eng_on = _build_engine(cfg, params, dcfg, dparams, rounds,
+                           batch=batch, max_len=max_len,
+                           tracer=Tracer(), recorder=FlightRecorder(),
+                           metrics=MetricsRegistry())
+    walls = {"off": [], "on": []}
+    streams = {}
+    for eng, tag in ((eng_off, "off"), (eng_on, "on")):
+        _serve(eng, domains, waves=waves, batch=batch,
+               max_new=max_new)                      # compile warmup
+    for _ in range(trials):                          # interleaved walls
+        for eng, tag in ((eng_off, "off"), (eng_on, "on")):
+            eng.reset_adaptation(dparams)
+            streams[tag] = _serve(eng, domains, waves=waves, batch=batch,
+                                  max_new=max_new)
+            walls[tag].append(eng.stats.wall_s * 1e6
+                              / eng.stats.tokens_out)
+        if streams["on"] != streams["off"]:
+            raise AssertionError(
+                "obs-on token stream diverged from obs-off")
+        if eng_on.stats.dispatches != eng_off.stats.dispatches:
+            raise AssertionError(
+                "obs-on changed device dispatch count "
+                f"({eng_off.stats.dispatches} -> "
+                f"{eng_on.stats.dispatches}): zero-sync rule violated")
+    off_us, on_us = min(walls["off"]), min(walls["on"])
+    emit("hotloop/obs_overhead", on_us - off_us,
+         f"us_per_token;on={on_us:.1f};off={off_us:.1f};"
+         f"ratio={on_us / max(off_us, 1e-9):.3f}")
+    if on_us > off_us * 1.03 + 2.0:
+        raise AssertionError(
+            f"observability overhead gate: obs-on {on_us:.2f} µs/token "
+            f"> obs-off {off_us:.2f} * 1.03 + 2.0")
+    names = {e[1] for e in eng_on.tracer.events()}
+    for span in ("superstep.dispatch", "superstep.unpack"):
+        if span not in names:
+            raise AssertionError(f"trace missing {span!r} spans")
+    snap = eng_on.metrics.snapshot()
+    if snap["serving.tokens_out"] != eng_on.stats.tokens_out:
+        raise AssertionError(
+            "metrics.snapshot() disagrees with ServingStats: "
+            f"{snap['serving.tokens_out']} != {eng_on.stats.tokens_out}")
+    want = (trials + 1) * waves * batch   # warmup serve + every trial
+    if len(eng_on.recorder.timelines()) != want:
+        raise AssertionError(
+            f"flight recorder saw {len(eng_on.recorder.timelines())} "
+            f"requests, expected {want}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as C
-from benchmarks.common import demo_target, emit, timeit
+from benchmarks.common import demo_target, emit
 from repro.core.adaptive import PAPER_PROFILES, analytic_tpu_profile, \
     profile_engine
 from repro.models import transformer as T

@@ -12,11 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import demo_target, emit, timeit, trained_draft
+from benchmarks.common import demo_target, emit, trained_draft
 from repro.core import eagle, speculative as spec
 from repro.core.adaptive import (PAPER_PROFILES, LatencyProfile,
-                                 alpha_from_accept_len, practical_speedup,
-                                 profile_engine)
+                                 alpha_from_accept_len, practical_speedup)
 from repro.models import transformer as T
 
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Callable, Iterable, List, Optional, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import numpy as np

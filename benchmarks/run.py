@@ -16,10 +16,18 @@
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Run one: ``PYTHONPATH=src python -m benchmarks.run --only table2``
+
+Besides the CSV stream, each run writes a machine-readable report —
+``BENCH_smoke.json`` / ``BENCH_full.json`` (or ``--bench-out PATH``) —
+with per-bench status, wall seconds, emitted metric rows, and the
+overall pass/fail gate, so CI and regression tooling can diff runs
+without scraping stdout.  ``--only`` runs skip the default report (a
+filtered run is not comparable) unless ``--bench-out`` names one.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -73,8 +81,27 @@ SMOKE_MODULES = [
 ]
 
 
+def _write_report(path: str, mode: str, benches: list,
+                  failed: list) -> None:
+    """Write the machine-readable run report: per-bench status/seconds/
+    metric rows plus the overall gate verdict."""
+    doc = {
+        "schema": "tide-bench-report/v1",
+        "mode": mode,
+        "passed": not failed,
+        "failed": failed,
+        "benches": benches,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# report -> {path}", flush=True)
+
+
 def main() -> None:
     import inspect
+
+    from benchmarks import common
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -82,15 +109,26 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI perf-smoke: hotloop + kernels only, "
                          "reduced shapes")
+    ap.add_argument("--bench-out", default=None, metavar="PATH",
+                    help="machine-readable JSON report path (default: "
+                         "BENCH_smoke.json / BENCH_full.json; --only "
+                         "runs write no report unless this is given)")
     args = ap.parse_args()
     modules = SMOKE_MODULES if args.smoke else MODULES
+    mode = "smoke" if args.smoke else "full"
+    out = args.bench_out
+    if out is None and not args.only:
+        out = f"BENCH_{mode}.json"
     print("name,us_per_call,derived")
     failed = []
+    benches = []
     for tag, module in modules:
         if args.only and args.only not in tag:
             continue
         t0 = time.perf_counter()
+        row0 = len(common.ROWS)
         print(f"# === {tag} ({module}) ===", flush=True)
+        error = None
         try:
             fn = __import__(module, fromlist=["run"]).run
             kw = {}
@@ -99,10 +137,22 @@ def main() -> None:
             fn(**kw)
         except Exception:
             failed.append(tag)
+            error = traceback.format_exc()
             print(f"# {tag} FAILED:", file=sys.stderr)
             traceback.print_exc()
-        print(f"# === {tag} done in {time.perf_counter() - t0:.1f}s ===",
-              flush=True)
+        dt = time.perf_counter() - t0
+        benches.append({
+            "tag": tag, "module": module,
+            "status": "failed" if error else "passed",
+            "seconds": round(dt, 3),
+            "error": error,
+            "metrics": [{"name": n, "us_per_call": round(us, 3),
+                         "derived": d}
+                        for n, us, d in common.ROWS[row0:]],
+        })
+        print(f"# === {tag} done in {dt:.1f}s ===", flush=True)
+    if out:
+        _write_report(out, mode, benches, failed)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

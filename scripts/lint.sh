@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Lint gate: ruff (ruff.toml) when available, with a stdlib fallback so
+# the gate still catches syntax errors and unused imports on boxes
+# where ruff isn't installed (the CI image bakes in the jax toolchain
+# only; see requirements-dev.txt).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v ruff >/dev/null 2>&1; then
+    exec ruff check src/repro benchmarks tests scripts
+fi
+
+echo "ruff not installed; falling back to compileall + pyflakes-lite" >&2
+python -m compileall -q src/repro benchmarks tests
+python scripts/pyflakes_lite.py src/repro benchmarks tests
+echo "lint OK (fallback)"

@@ -1,0 +1,74 @@
+"""Stdlib fallback for the ruff gate (scripts/lint.sh): walk the AST of
+every .py file under the given roots and flag unused ``import`` /
+``from ... import`` bindings — the highest-signal pyflakes class that
+needs no third-party dependency.  ``__init__.py`` re-export surfaces
+and explicit ``# noqa`` lines are exempt.
+
+Usage: python scripts/pyflakes_lite.py SRC [SRC...]
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+
+def unused_imports(path: pathlib.Path) -> list:
+    src = path.read_text()
+    tree = ast.parse(src, filename=str(path))
+    noqa = {i + 1 for i, ln in enumerate(src.splitlines())
+            if "# noqa" in ln}
+    imports = {}   # bound name -> (lineno, shown name)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                imports[name] = (node.lineno, a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue    # compiler directives, not bindings
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                imports[name] = (node.lineno, a.name)
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # walk to the root name of dotted access
+            n = node
+            while isinstance(n, ast.Attribute):
+                n = n.value
+            if isinstance(n, ast.Name):
+                used.add(n.id)
+    # names re-exported via __all__ count as used
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            for elt in node.value.elts:
+                if isinstance(elt, ast.Constant):
+                    used.add(str(elt.value))
+    return [(ln, f"unused import: {shown}")
+            for bound, (ln, shown) in sorted(imports.items(),
+                                             key=lambda kv: kv[1][0])
+            if bound not in used and ln not in noqa]
+
+
+def main(roots: list) -> int:
+    bad = 0
+    for root in roots:
+        for path in sorted(pathlib.Path(root).rglob("*.py")):
+            if path.name == "__init__.py":
+                continue
+            for ln, msg in unused_imports(path):
+                print(f"{path}:{ln}: {msg}")
+                bad += 1
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:] or ["src/repro"]))

@@ -3,7 +3,7 @@ arXiv:2508.10925): 36L d_model=2880 64H (GQA kv=8, head_dim 64), MoE 128
 experts top-4, alternating sliding-window (128) / full attention layers,
 vocab ~201k.  Used by the paper-faithful benchmarks (Figs. 5–9, Tables 1–5).
 """
-from repro.models.config import (ATTN, ATTN_SW, FFN_MOE, BlockDef,
+from repro.models.config import (ATTN, FFN_MOE, BlockDef,
                                  ModelConfig, reduced)
 
 CONFIG = ModelConfig(

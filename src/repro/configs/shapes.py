@@ -8,13 +8,13 @@ no device allocation (the dry-run pattern).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
-from repro.models.config import ModelConfig, RWKV6, MAMBA, ATTN, CROSS, MLA
+from repro.models.config import ModelConfig, RWKV6, MAMBA, ATTN, MLA
 
 # Sliding window used for the dense/moe/vlm long-context decode variant.
 LONG_CONTEXT_WINDOW = 8192

@@ -20,7 +20,6 @@ container (DESIGN.md §2.4).
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 

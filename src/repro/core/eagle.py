@@ -15,7 +15,6 @@ jointly — we expose it through the identical module.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

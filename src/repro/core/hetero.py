@@ -17,7 +17,7 @@ background-thread interleaving on single-device hosts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 
 @dataclasses.dataclass(frozen=True)

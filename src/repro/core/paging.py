@@ -188,6 +188,19 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    def register_metrics(self, registry):
+        """Expose allocator telemetry under the ``paging.*`` metrics
+        namespace as callback gauges over this (host-side numpy)
+        bookkeeping — evaluated only at snapshot time."""
+        registry.gauge("paging.pages_in_use", fn=lambda: self.pages_in_use)
+        registry.gauge("paging.pages_free", fn=lambda: self.free_pages)
+        registry.gauge("paging.pages_peak", fn=lambda: self.peak_in_use)
+        registry.gauge("paging.prefix_hits", fn=lambda: self.prefix_hits)
+        registry.gauge("paging.prefix_tokens_saved",
+                       fn=lambda: self.prefix_tokens_saved)
+        registry.gauge("paging.evictions", fn=lambda: self.evictions)
+        registry.gauge("paging.cow_forks", fn=lambda: self.cow_forks)
+
     def _note_use(self):
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
 

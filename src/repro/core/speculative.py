@@ -14,7 +14,7 @@ bonus/correction token is sampled from logits[n_acc], so each step commits
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -58,6 +58,20 @@ signal capture (accepted-path features only) keep their chain shapes
 ``tree_width=1`` is bitwise identical to the chain engine
 (tests/test_tree.py); the shape is carried by the SpeculationPolicy,
 the seam a learned speculation controller would tune it through.
+
+Observability: the system owns one ``repro.obs`` instrument set shared
+by every component — a ``MetricsRegistry`` (``self.metrics``) whose
+``serving.* / train.* / paging.* / spec.*`` namespaces are fed by the
+engine's ServingStats, the training service/channel, the page
+allocator, and the speculation policy (``summary()`` remains a thin
+view over the same registry state); plus an optional span tracer and
+per-request flight recorder built from ``TideConfig.obs``
+(``ObsConfig``) and handed to the engine/service as collaborators.
+All hooks are host-side at existing telemetry boundaries — superstep
+unpack, admission, trainer publish, deploy poll — so observability-on
+serving adds **zero** device syncs and observability-off is
+byte-identical (nulls; gated in benchmarks/bench_hotloop.py).  See
+docs/observability.md.
 """
 from __future__ import annotations
 
@@ -73,6 +87,8 @@ from repro.core.controller import TrainingController
 from repro.core.signals import SignalExtractor
 from repro.core.transport import SignalChannel, pick_training_device
 from repro.models.config import ModelConfig
+from repro.obs import ObsConfig
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.engine import ServingEngine
 from repro.serving.policy import ServingConfig
 from repro.serving.request import Request
@@ -130,6 +146,10 @@ class TideConfig:
     spec_probe_interval: int = 8      # parked dispatches between probes
     trainer_threads: int = 0          # >0: pin/deprioritize the trainer
     #                                   client's host threads
+    # ---- observability (repro/obs; host-side only, zero device syncs).
+    #      Not a ServingConfig knob: the engine takes the built
+    #      tracer/recorder as collaborators, never a config field.
+    obs: Optional[ObsConfig] = None
     serving: Optional[ServingConfig] = None
 
     # knobs shared (by name) with ServingConfig: assembled into one
@@ -179,6 +199,12 @@ class TideSystem:
             dparams = eagle.draft_init(self.dcfg,
                                        jax.random.key(tide_cfg.seed + 7))
         self._dparams0 = dparams
+        # one shared instrument set for every component (see module
+        # docstring, "Observability"); tracer/recorder default to the
+        # null singletons when TideConfig.obs is unset
+        self.obs = tide_cfg.obs if tide_cfg.obs is not None else ObsConfig()
+        self.metrics = MetricsRegistry()
+        self.tracer, self.recorder = self.obs.build()
         train_device = (pick_training_device()
                         if tide_cfg.async_train else None)
         serve_device = jax.devices()[0] if train_device is not None else None
@@ -208,7 +234,8 @@ class TideSystem:
             train_min_steps=tide_cfg.train_min_steps, seed=tide_cfg.seed,
             device=train_device, publish_device=serve_device,
             trainer_threads=tide_cfg.trainer_threads,
-            engine_steps_fn=lambda: self.engine.stats.steps)
+            engine_steps_fn=lambda: self.engine.stats.steps,
+            tracer=self.tracer, registry=self.metrics)
         self.events = self.service.events
         # the engine consumes one unified ServingConfig + the composed
         # ServingPolicy it names (re-seed only makes sense with the
@@ -224,7 +251,9 @@ class TideSystem:
             else None,
             extractor=self.extractor,
             deploy_source=(self.service.poll if tide_cfg.async_train
-                           else None))
+                           else None),
+            tracer=self.tracer, recorder=self.recorder,
+            metrics=self.metrics)
         # start in collection mode so the cold draft trains immediately
         self.controller.collection_enabled = True
         if tide_cfg.async_train:
@@ -310,6 +339,19 @@ class TideSystem:
             self.engine.reset_adaptation(self._dparams0)
 
     # ------------------------------------------------------------- stats
+    def export_trace(self, path: Optional[str] = None) -> Dict:
+        """Export the span tracer's buffer as a Chrome/Perfetto
+        trace-event JSON document, writing it to ``path`` (default:
+        ``ObsConfig.trace_path``) when one is known."""
+        return self.tracer.export(path if path is not None
+                                  else self.obs.trace_path)
+
+    def snapshot(self) -> Dict:
+        """Flat metrics snapshot across every registry namespace
+        (``serving.* / train.* / paging.* / spec.*``).  The legacy
+        ``summary()`` keys are views over the same state."""
+        return self.metrics.snapshot()
+
     def summary(self) -> Dict:
         st = self.engine.stats
         return {

@@ -117,3 +117,12 @@ class SignalChannel(SignalStore):
     def stats(self) -> dict:
         return {"pushed": self.total_added, "dropped": self.dropped,
                 "depth": self.peek_count(), "bytes": self.total_bytes}
+
+    def register_metrics(self, registry):
+        """Expose the channel under the ``train.*`` metrics namespace as
+        callback gauges (evaluated at snapshot time only — recording
+        adds nothing to the push/drain paths)."""
+        registry.gauge("train.signals_pushed", fn=lambda: self.total_added)
+        registry.gauge("train.signals_dropped", fn=lambda: self.dropped)
+        registry.gauge("train.signal_bytes", fn=lambda: self.total_bytes)
+        registry.gauge("train.channel_depth", fn=self.peek_count)

@@ -18,7 +18,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

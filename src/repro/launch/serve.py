@@ -118,6 +118,23 @@ def build_parser() -> argparse.ArgumentParser:
                          "process trainer — see ROADMAP)")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
+    # ---- observability (repro/obs): main()-consumed, not ServingConfig
+    #      knobs — the engine takes built tracer/recorder collaborators
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of "
+                         "the run's host-side spans (superstep dispatch/"
+                         "unpack, prefill chunks, train cycles, deploys) "
+                         "to PATH at exit; chrome://tracing or ui."
+                         "perfetto.dev loads it")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    metavar="N",
+                    help=">0: print a Prometheus-text metrics snapshot "
+                         "(serving.*/train.*/paging.*/spec.* registry) "
+                         "every N seconds from a background thread")
+    ap.add_argument("--flight-record", action="store_true",
+                    help="enable the per-request flight recorder and "
+                         "print a timeline digest for the slowest "
+                         "requests at exit")
     return ap
 
 
@@ -196,12 +213,18 @@ def main():
     args.continuous = (args.continuous or args.gate_arrivals
                        or args.policy != "fifo")
     scfg = config_from_args(args)
+    from repro.obs import ObsConfig
+    obs = ObsConfig(trace=args.trace_out is not None,
+                    trace_path=args.trace_out,
+                    record=args.flight_record)
     tc = TideConfig(serving=scfg,
                     n_threshold=4, signal_window=16,
                     adaptive_spec=not args.no_adaptive,
-                    async_train=args.async_train)
+                    async_train=args.async_train,
+                    obs=obs)
     profile = analytic_tpu_profile(cfg, chips=1)
     sys_ = TideSystem(cfg, params, tc, profile=profile)
+    stop_metrics = _start_metrics_printer(sys_, args.metrics_interval)
     t0 = time.perf_counter()
     if args.continuous:
         # ragged budgets never exceed the user's --max-new-tokens cap
@@ -231,6 +254,7 @@ def main():
         # the service thread cleanly
         sys_.service.drain()
         sys_.close()
+    stop_metrics()
     s = sys_.summary()
     print(f"\n== TIDE summary ({time.perf_counter()-t0:.1f}s wall) ==")
     for k, v in s.items():
@@ -243,6 +267,52 @@ def main():
     last = np.mean([x["accept_len"] for x in tl[-q:]])
     print(f"  accept_len trend: {first:.2f} -> {last:.2f} "
           f"(draft adapted online, paper Fig. 5)")
+    if args.trace_out:
+        doc = sys_.export_trace()
+        print(f"  trace: {len(doc['traceEvents'])} events -> "
+              f"{args.trace_out}")
+    if args.flight_record:
+        _print_flight_digest(sys_.recorder)
+
+
+def _start_metrics_printer(sys_, interval: float):
+    """Background Prometheus-text snapshot printer (--metrics-interval).
+    Reads only host-side registry state — callback gauges and counters —
+    so it never perturbs serving.  Returns a stop() callable."""
+    if interval <= 0:
+        return lambda: None
+    import threading
+    stop = threading.Event()
+
+    def loop():
+        while not stop.wait(interval):
+            print(f"\n-- metrics @{time.strftime('%H:%M:%S')} --")
+            print(sys_.metrics.to_prometheus(), end="")
+
+    t = threading.Thread(target=loop, name="tide-metrics", daemon=True)
+    t.start()
+
+    def stop_fn():
+        stop.set()
+        t.join(timeout=5.0)
+
+    return stop_fn
+
+
+def _print_flight_digest(recorder, worst: int = 3):
+    """Per-request flight-recorder digest: the ``worst`` highest-latency
+    completed requests, with their event timelines."""
+    tls = sorted(recorder.timelines(),
+                 key=lambda tl: tl.get("latency_s") or 0.0, reverse=True)
+    print(f"\n== flight recorder ({len(tls)} requests) ==")
+    for tl in tls[:worst]:
+        print(f"  rid={tl['rid']} sid={tl['sid']} domain={tl['domain']} "
+              f"ttft={tl.get('ttft_s')} latency={tl.get('latency_s')}")
+        for ev in tl["events"]:
+            extra = {k: v for k, v in ev.items()
+                     if k not in ("kind", "round", "t")}
+            print(f"    r{ev['round']:>5} t={ev['t']:.3f}s {ev['kind']}"
+                  + (f" {extra}" if extra else ""))
 
 
 if __name__ == "__main__":

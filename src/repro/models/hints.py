@@ -11,7 +11,6 @@ single-device demo).
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 import jax
 

@@ -8,7 +8,6 @@ Prefill uses the expanded form for clarity; both are cross-checked in tests.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

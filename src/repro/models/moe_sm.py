@@ -24,7 +24,6 @@ no-drop regime and bounded disagreement under tight capacity.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

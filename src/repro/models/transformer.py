@@ -18,7 +18,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -31,7 +30,7 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models.config import (ATTN, ATTN_SW, CROSS, MAMBA, MLA, RWKV6,
                                  FFN_MOE, BlockDef, ModelConfig)
-from repro.models.layers import (EMBED, LAYERS, embed, embed_specs, ffn,
+from repro.models.layers import (LAYERS, embed, embed_specs, ffn,
                                  ffn_specs, head_specs, lm_head, rmsnorm,
                                  rmsnorm_specs)
 from repro.models.param import ParamSpec, init_params, map_specs

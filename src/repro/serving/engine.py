@@ -182,6 +182,21 @@ and any refill timing emit byte-identical per-request tokens
 The old batch-global key chain made sampled parity hold only on
 refill-free streams.
 
+Observability (``repro/obs``; docs/observability.md): the engine takes
+three optional host-side collaborators — a span ``tracer`` (superstep
+dispatch/unpack, prefill chunk/commit, refill, reseed, idle spans plus
+sched/deploy/spec instants), a per-request flight ``recorder``
+(admit → prefill chunks → first token → per-round commits → finish),
+and a ``metrics`` registry that ``ServingStats`` registers its
+counters/histograms/derived gauges into under the ``serving.*``
+namespace (``spec.*`` and ``paging.*`` gauges ride along).  Every hook
+sits at a boundary the host already crosses — nothing new is pulled
+from the device, so observability-on serving adds **zero** syncs and
+defaults (``NULL_TRACER``/``NULL_RECORDER``) make the disabled path a
+single attribute check; obs-on streams are byte-identical to obs-off
+(tests/test_obs.py, gated with a ≤1.03x wall bound in
+benchmarks/bench_hotloop.py).
+
 ``serve_wave`` is a thin compatibility wrapper over ``serve_stream``
 (a stream containing exactly one wave); waves smaller than the engine
 batch are padded with inert zero-budget slots.  ``superstep_rounds=0``
@@ -202,7 +217,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -214,10 +229,13 @@ from repro.core.controller import Decision, TrainingController
 from repro.core.signals import SignalExtractor
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import NULL_RECORDER
+from repro.obs.trace import NULL_TRACER
 from repro.serving.policy import ServingConfig, ServingPolicy
 from repro.serving.request import Request, inert_request
 from repro.serving.scheduler import Scheduler
-from repro.serving.stats import P2Quantile, Peak, Ring
+from repro.serving.stats import P2Quantile, Ring
 
 
 def _deprecated_kwarg(name: str, replacement: str):
@@ -232,74 +250,120 @@ def _deprecated_kwarg(name: str, replacement: str):
 INERT_SID = 0x7FFFFFFF
 
 
-@dataclasses.dataclass
+# ``serving.*`` registry counters exposed as plain ServingStats
+# attributes (int unless noted float below)
+_STATS_COUNTERS = (
+    "tokens_out", "steps", "spec_steps", "dispatches", "refills",
+    "idle_supersteps", "deploys", "reseeds", "completed",
+    "accept_len_n", "lane_rounds", "busy_lane_rounds",
+    "prefill_chunks", "prefill_lane_rounds", "prefill_row_tokens",
+    "pages_peak", "prefix_hits", "prefix_tokens_saved",
+    "admission_deferrals",
+)
+_STATS_FLOAT_COUNTERS = ("wall_s", "accept_len_sum")
+
+
+class _CounterView:
+    """Descriptor exposing the registry counter ``serving.<name>`` as a
+    plain read/write attribute, so engine idioms like
+    ``stats.tokens_out += n`` keep working unchanged while the value
+    lives in the shared :class:`repro.obs.metrics.MetricsRegistry`."""
+    __slots__ = ("name",)
+
+    def __set_name__(self, owner, name):
+        self.name = name
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return obj._counters[self.name].value
+
+    def __set__(self, obj, value):
+        obj._counters[self.name].value = value
+
+
 class ServingStats:
-    """Engine counters.  ``tokens_out`` counts exactly the tokens that
-    survive in ``Request.generated`` after ``Request.finish()``'s budget
-    truncation — the first sampled token included — so it always equals
-    the sum of emitted stream lengths.
+    """Engine counters, backed by the ``serving.*`` namespace of a
+    :class:`repro.obs.metrics.MetricsRegistry`.  ``tokens_out`` counts
+    exactly the tokens that survive in ``Request.generated`` after
+    ``Request.finish()``'s budget truncation — the first sampled token
+    included — so it always equals the sum of emitted stream lengths.
+
+    Every counter attribute below is a thin view over a registry
+    ``Counter`` (``stats.tokens_out`` IS ``serving.tokens_out``), the
+    prefill-stall Peaks and latency sketches are registry
+    ``Histogram``s, and the derived properties (throughput, occupancy,
+    percentiles) are registered as callback gauges — one
+    ``registry.snapshot()`` exposes everything this object exposes.
+    Constructing a ServingStats against a shared registry zeroes the
+    ``serving.*`` namespace (stats reset == counter reset); with no
+    registry given it owns a private one.
 
     Host retention is bounded for endless streams: ``ttfts`` /
     ``latencies`` / ``timeline`` are drop-oldest rings of the trailing
     ``retain`` entries, while the percentile properties stay whole-stream
     accurate through P² sketches (exact until the rings overflow)."""
-    tokens_out: int = 0
-    steps: int = 0
-    spec_steps: int = 0
-    dispatches: int = 0      # decode-step/superstep launches (sync points)
-    refills: int = 0         # slots refilled in-flight (async, no sync)
-    idle_supersteps: int = 0  # gated-arrival gaps with nothing to dispatch
-    deploys: int = 0         # draft hot-swaps picked up from the deploy slot
-    reseeds: int = 0         # deploy-time draft-cache re-seed dispatches
-    completed: int = 0
-    wall_s: float = 0.0
-    accept_len_sum: float = 0.0
-    accept_len_n: int = 0
-    lane_rounds: int = 0      # batch lanes x executed rounds
-    busy_lane_rounds: int = 0  # lanes that committed >=1 token that round
-    # ---- chunked-prefill / refill-stall accounting (deterministic:
-    # counted in prompt tokens and executed rounds, not wall time)
-    prefill_chunks: int = 0       # chunk-pipeline dispatches
-    prefill_lane_rounds: int = 0  # lane-rounds spent mid-prefill (inert)
-    prefill_row_tokens: int = 0   # Σ rows × width over all prefill ops
-    prefill_op_width: Peak = None   # per-op prompt width: the longest
-    #                                 uninterruptible prefill stall
-    prefill_gap_tokens: Peak = None  # row-tokens prefilled per
-    #                                  inter-superstep gap
-    # ---- paged KV cache (deterministic page-count telemetry, mirrored
-    # from the PageAllocator; all zero on dense engines)
-    pages_peak: int = 0             # peak pages mapped at once
-    prefix_hits: int = 0            # prefix-page adoption events (COW)
-    prefix_tokens_saved: int = 0    # prompt tokens served from shared pages
-    admission_deferrals: int = 0    # admit candidates vetoed on page pressure
-    retain: int = 4096
-    ttfts: Ring = None
-    latencies: Ring = None
-    timeline: Ring = None
 
-    def __post_init__(self):
-        if self.ttfts is None:
-            self.ttfts = Ring(self.retain)
-        if self.latencies is None:
-            self.latencies = Ring(self.retain)
-        if self.timeline is None:
-            self.timeline = Ring(self.retain)
-        if self.prefill_op_width is None:
-            self.prefill_op_width = Peak()
-        if self.prefill_gap_tokens is None:
-            self.prefill_gap_tokens = Peak()
-        self._sketches = {("ttft", 50): P2Quantile(0.50),
-                          ("lat", 50): P2Quantile(0.50),
-                          ("lat", 95): P2Quantile(0.95)}
+    # counter semantics (see also docs/observability.md):
+    #   dispatches       decode-step/superstep launches (sync points)
+    #   refills          slots refilled in-flight (async, no sync)
+    #   idle_supersteps  gated-arrival gaps with nothing to dispatch
+    #   deploys          draft hot-swaps picked up from the deploy slot
+    #   reseeds          deploy-time draft-cache re-seed dispatches
+    #   lane_rounds      batch lanes x executed rounds
+    #   busy_lane_rounds lanes that committed >=1 token that round
+    #   prefill_chunks   chunk-pipeline dispatches
+    #   prefill_lane_rounds  lane-rounds spent mid-prefill (inert)
+    #   prefill_row_tokens   Σ rows × width over all prefill ops
+    #   pages_peak       peak pages mapped at once (paged engines)
+    #   prefix_hits      prefix-page adoption events (COW)
+    #   prefix_tokens_saved  prompt tokens served from shared pages
+    #   admission_deferrals  admit candidates vetoed on page pressure
+
+    def __init__(self, retain: int = 4096, registry=None):
+        from repro.obs.metrics import MetricsRegistry
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.retain = retain
+        self._counters = {}
+        for name in _STATS_COUNTERS:
+            c = self.registry.counter(f"serving.{name}")
+            c.value = 0
+            self._counters[name] = c
+        for name in _STATS_FLOAT_COUNTERS:
+            c = self.registry.counter(f"serving.{name}")
+            c.value = 0.0
+            self._counters[name] = c
+        self.ttfts = Ring(retain)
+        self.latencies = Ring(retain)
+        self.timeline = Ring(retain)
+        # prefill-stall distributions + latency sketches: registry
+        # histograms (Peak + P² underneath), recreated on reset
+        self.prefill_op_width = self.registry.histogram(
+            "serving.prefill_op_width", (0.5,), reset=True)
+        self.prefill_gap_tokens = self.registry.histogram(
+            "serving.prefill_gap_tokens", (0.5,), reset=True)
+        self._ttft_hist = self.registry.histogram(
+            "serving.ttft_s", (0.5,), reset=True)
+        self._lat_hist = self.registry.histogram(
+            "serving.latency_s", (0.5, 0.95), reset=True)
+        for gname, prop in (
+                ("serving.throughput_tok_s", "throughput"),
+                ("serving.occupancy", "occupancy"),
+                ("serving.accept_len", "accept_len"),
+                ("serving.ttft_p50_s", "ttft_p50"),
+                ("serving.latency_p50_s", "latency_p50"),
+                ("serving.latency_p95_s", "latency_p95")):
+            self.registry.gauge(
+                gname, fn=functools.partial(getattr, self, prop))
 
     def record_ttft(self, x: float):
         self.ttfts.append(x)
-        self._sketches[("ttft", 50)].add(x)
+        self._ttft_hist.add(x)
 
     def record_latency(self, x: float):
         self.latencies.append(x)
-        self._sketches[("lat", 50)].add(x)
-        self._sketches[("lat", 95)].add(x)
+        self._lat_hist.add(x)
 
     @property
     def accept_len(self) -> float:
@@ -327,16 +391,22 @@ class ServingStats:
 
     @property
     def ttft_p50(self) -> float:
-        return self._pct(self.ttfts, self._sketches[("ttft", 50)], 50)
+        return self._pct(self.ttfts, self._ttft_hist.sketches[0.5], 50)
 
     @property
     def latency_p50(self) -> float:
-        return self._pct(self.latencies, self._sketches[("lat", 50)], 50)
+        return self._pct(self.latencies, self._lat_hist.sketches[0.5], 50)
 
     @property
     def latency_p95(self) -> float:
-        return self._pct(self.latencies, self._sketches[("lat", 95)], 95)
+        return self._pct(self.latencies, self._lat_hist.sketches[0.95], 95)
 
+
+for _name in _STATS_COUNTERS + _STATS_FLOAT_COUNTERS:
+    _view = _CounterView()
+    _view.__set_name__(ServingStats, _name)
+    setattr(ServingStats, _name, _view)
+del _name, _view
 
 # Back-compat alias (pre-continuous-batching name).
 EngineStats = ServingStats
@@ -410,7 +480,8 @@ class ServingEngine:
                  idle_wait_s: float = 0.005,
                  prefill_chunk: Optional[int] = None,
                  config: Optional[ServingConfig] = None,
-                 policy: Optional[ServingPolicy] = None):
+                 policy: Optional[ServingPolicy] = None,
+                 tracer=None, recorder=None, metrics=None):
         # ------------------------------------------------ configuration
         # One ServingConfig is the source of truth for every serving
         # knob.  Callers either pass ``config=`` (the unified API; the
@@ -527,7 +598,18 @@ class ServingEngine:
         self._pipelines: List[_ChunkPipeline] = []
         self._cohort_next = 0
         self._sleep = time.sleep           # injectable for tests
-        self.stats = ServingStats()
+        # ---------------------------------------------- observability
+        # Host-side instruments only (docs/observability.md): the tracer
+        # and flight recorder default to null singletons whose hooks are
+        # attribute-check cheap, and every ServingStats counter lives in
+        # the metrics registry (``serving.*``), shared with the training
+        # service / allocator when the system layer passes one in.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = ServingStats(registry=self.metrics)
+        self.policy.speculation.on_transition = self._spec_transition
+        self._register_obs_metrics()
         # constant base key for per-request sampling streams: lane keys
         # are fold_in(fold_in(base, sid), step) with sid the request's
         # admission ordinal — identical across scheduling policies
@@ -936,6 +1018,11 @@ class ServingEngine:
         self._deploy_seq = ver.seq
         self.dparams = ver.dparams
         self.stats.deploys += 1
+        if self.tracer.enabled:
+            self.tracer.instant("deploy", seq=ver.seq)
+        if self.recorder.enabled:
+            self.recorder.global_event("deploy", round_=self.stats.steps,
+                                       seq=ver.seq)
         return ver
 
     def reset_adaptation(self, dparams):
@@ -950,10 +1037,44 @@ class ServingEngine:
         self._cohort_next = 0
         if self.allocator is not None:
             self.allocator.reset()
-        self.stats = ServingStats()
+        self.stats = ServingStats(registry=self.metrics)
         self.policy.speculation.reset()
+        self.policy.speculation.on_transition = self._spec_transition
         if self.drafter is not None:
             self.drafter.enabled = True
+
+    # -------------------------------------------------- observability
+    def _register_obs_metrics(self):
+        """Declare the ``spec.*`` and ``paging.*`` namespaces as
+        callback gauges over live policy/allocator state — evaluated
+        only at ``snapshot()`` time, so they cost nothing per round."""
+        reg = self.metrics
+        sp = self.policy.speculation
+        reg.gauge("spec.parks", fn=lambda: sp.parks)
+        reg.gauge("spec.resumes", fn=lambda: sp.resumes)
+        reg.gauge("spec.parked", fn=lambda: int(sp.parked))
+        reg.gauge("spec.probing", fn=lambda: int(sp.probing))
+        reg.gauge("spec.tree_width", fn=lambda: self.tree_width)
+        reg.gauge("spec.gamma", fn=lambda: self.gamma)
+        reg.gauge("spec.accept_ema", fn=lambda: self.accept_ema)
+        if self.allocator is not None:
+            self.allocator.register_metrics(reg)
+        else:
+            # dense engines still expose the namespace (all zero)
+            for name in ("paging.pages_in_use", "paging.pages_free",
+                         "paging.pages_peak", "paging.prefix_hits",
+                         "paging.prefix_tokens_saved", "paging.evictions",
+                         "paging.cow_forks"):
+                reg.gauge(name)
+
+    def _spec_transition(self, kind: str, fields: dict):
+        """Speculation park/probe/resume hook (host-side, from
+        ``observe_round``/``step_decision`` telemetry replay)."""
+        if self.tracer.enabled:
+            self.tracer.instant(kind, **fields)
+        if self.recorder.enabled:
+            self.recorder.global_event(kind, round_=self.stats.steps,
+                                       **fields)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -970,6 +1091,8 @@ class ServingEngine:
             if r.sid is None:
                 r.sid = self._sid_next
                 self._sid_next += 1
+                if self.recorder.enabled:
+                    self.recorder.admit(r, self.stats.steps)
 
     def _apply_capture_park(self):
         """Parked speculation parks signal capture with it; on resume
@@ -991,7 +1114,8 @@ class ServingEngine:
         is exactly what the single-device async-training fallback
         consumes)."""
         self.stats.idle_supersteps += 1
-        self._sleep(min(max(wait or 0.0, 0.0), self.idle_wait_s))
+        with self.tracer.span("idle"):
+            self._sleep(min(max(wait or 0.0, 0.0), self.idle_wait_s))
 
     # -------------------------------------------------- request accounting
     def _finish(self, r: Request):
@@ -1001,6 +1125,8 @@ class ServingEngine:
             self.stats.completed += 1
             if r.latency is not None:
                 self.stats.record_latency(r.latency)
+            if self.recorder.enabled:
+                self.recorder.finish(r, self.stats.steps)
 
     def _commit_first(self, r: Request, tok: int):
         """Commit a freshly (pre)filled slot's first sampled token."""
@@ -1014,6 +1140,9 @@ class ServingEngine:
             r.first_token_t = time.perf_counter()
             r.first_token_round = self.stats.steps
             self.stats.record_ttft(r.ttft)
+            if self.recorder.enabled:
+                self.recorder.note(r.rid, "first_token",
+                                   round_=self.stats.steps)
         self.stats.tokens_out += 1
         if self.eos_id is not None and tok == self.eos_id:
             self._finish(r)
@@ -1095,7 +1224,8 @@ class ServingEngine:
                           gate_arrivals=self.gate_arrivals,
                           completion_sink=self.completion_sink,
                           admission_guard=(self._admission_guard
-                                           if self.paged else None))
+                                           if self.paged else None),
+                          tracer=self.tracer)
         t0 = time.perf_counter()
         while not sched.has_work():
             wait = sched.next_arrival_in()
@@ -1115,7 +1245,8 @@ class ServingEngine:
             self._pipelines = []
             self._spawn_pipelines(admitted)
         else:
-            cache, dcache, carry, first = self._prologue(reqs0)
+            with self.tracer.span("prefill.prologue", rows=self.batch):
+                cache, dcache, carry, first = self._prologue(reqs0)
             first_np = np.asarray(first)
             for i, r in enumerate(reqs0):
                 self._commit_first(r, int(first_np[i]))
@@ -1219,6 +1350,10 @@ class ServingEngine:
         if self.allocator.can_fit(need):
             return True
         self.stats.admission_deferrals += 1
+        if self.recorder.enabled:
+            self.recorder.global_event("admission_deferral",
+                                       round_=self.stats.steps,
+                                       rid=req.rid, pages_needed=need)
         return False
 
     def _reserve_group(self, group: List[Tuple[int, Request]],
@@ -1405,18 +1540,31 @@ class ServingEngine:
         in-flight superstep, like every refill op).  Returns the op's
         row-token cost."""
         w, toks_c, nxt, adv_j = self._chunk_args(pl)
-        if pl.pos == 0:
-            pl.cache, pl.dcache, pl.logits, pl.caps_last = \
-                self._chunk_start_fn(pl.width, self.params, self.dparams,
-                                     toks_c, nxt, pl.pad, adv_j)
-        else:
-            pl.cache, pl.dcache, pl.logits, pl.caps_last = \
-                self._chunk_cont_fn(self.params, self.dparams, pl.cache,
-                                    pl.dcache, toks_c, nxt, adv_j)
+        with self.tracer.span("prefill.chunk", rows=pl.rows, width=w):
+            if pl.pos == 0:
+                pl.cache, pl.dcache, pl.logits, pl.caps_last = \
+                    self._chunk_start_fn(pl.width, self.params,
+                                         self.dparams, toks_c, nxt,
+                                         pl.pad, adv_j)
+            else:
+                pl.cache, pl.dcache, pl.logits, pl.caps_last = \
+                    self._chunk_cont_fn(self.params, self.dparams,
+                                        pl.cache, pl.dcache, toks_c,
+                                        nxt, adv_j)
         pl.pos += w
         self.stats.prefill_chunks += 1
         self._note_prefill_op(pl.rows, w)
+        self._obs_chunk(pl, w)
         return pl.rows * w
+
+    def _obs_chunk(self, pl: _ChunkPipeline, w: int):
+        """Flight-recorder note for one dispatched prefill chunk (every
+        member request of the pipeline advanced by ``w`` columns)."""
+        if self.recorder.enabled:
+            for _, req in pl.admitted:
+                self.recorder.note(req.rid, "prefill_chunk",
+                                   round_=self.stats.steps,
+                                   pos=pl.pos, width=w)
 
     def _advance_pipelines_ss(self, cache, dcache, state, max_new,
                               pending):
@@ -1472,21 +1620,24 @@ class ServingEngine:
                 gap_tokens += self._advance_pipeline(pl)
                 pl.ready = True
                 continue
-            if pl.pos == 0:
-                cache, dcache, state, max_new, fdev = \
-                    self._chunk_final_start_fn(
-                        pl.width, self.params, self.dparams, toks_c, nxt,
-                        pl.pad, adv_j, cache, dcache, state, max_new,
-                        pl.mask, pl.src, pl.budgets, pl.sids)
-            else:
-                cache, dcache, state, max_new, fdev = \
-                    self._chunk_final_cont_fn(
-                        self.params, self.dparams, pl.cache, pl.dcache,
-                        toks_c, nxt, adv_j, cache, dcache, state,
-                        max_new, pl.mask, pl.src, pl.budgets, pl.sids)
+            with self.tracer.span("prefill.chunk", rows=pl.rows,
+                                  width=w, fused_commit=True):
+                if pl.pos == 0:
+                    cache, dcache, state, max_new, fdev = \
+                        self._chunk_final_start_fn(
+                            pl.width, self.params, self.dparams, toks_c,
+                            nxt, pl.pad, adv_j, cache, dcache, state,
+                            max_new, pl.mask, pl.src, pl.budgets, pl.sids)
+                else:
+                    cache, dcache, state, max_new, fdev = \
+                        self._chunk_final_cont_fn(
+                            self.params, self.dparams, pl.cache, pl.dcache,
+                            toks_c, nxt, adv_j, cache, dcache, state,
+                            max_new, pl.mask, pl.src, pl.budgets, pl.sids)
             pl.pos += w
             self.stats.prefill_chunks += 1
             self._note_prefill_op(pl.rows, w)
+            self._obs_chunk(pl, w)
             gap_tokens += pl.rows * w
             self.stats.refills += len(pl.admitted)
             commits += 1
@@ -1502,11 +1653,12 @@ class ServingEngine:
             if not all(q.ready for q in members):
                 continue
             for q in sorted(members, key=lambda q: q.order):
-                cache, dcache, state, max_new, fdev = \
-                    self._chunk_commit_ss_fn(
-                        self.params, self.dparams, cache, dcache, state,
-                        max_new, q.cache, q.dcache, q.logits,
-                        q.caps_last, q.mask, q.src, q.budgets, q.sids)
+                with self.tracer.span("prefill.commit", rows=q.rows):
+                    cache, dcache, state, max_new, fdev = \
+                        self._chunk_commit_ss_fn(
+                            self.params, self.dparams, cache, dcache,
+                            state, max_new, q.cache, q.dcache, q.logits,
+                            q.caps_last, q.mask, q.src, q.budgets, q.sids)
                 self.stats.refills += len(q.admitted)
                 commits += 1
                 committed.append(q)
@@ -1620,14 +1772,17 @@ class ServingEngine:
             # re-seed is one enqueued device op (no telemetry pull)
             ver = self._poll_deploy()
             if ver is not None and self._reseed_fn is not None:
-                dcache = self._reseed_fn(self.dparams, dcache, state)
+                with self.tracer.span("reseed", seq=ver.seq):
+                    dcache = self._reseed_fn(self.dparams, dcache, state)
                 self.stats.reseeds += 1
             dispatched = False
             if sched.has_work():
                 cache, dcache = self._ship_tables(cache, dcache)
-                out = self._superstep_fn(
-                    self.params, self.dparams, cache, dcache, state,
-                    max_new, self.policy.speculation.dispatch_table())
+                with self.tracer.span("superstep.dispatch",
+                                      rounds=self.superstep_rounds):
+                    out = self._superstep_fn(
+                        self.params, self.dparams, cache, dcache, state,
+                        max_new, self.policy.speculation.dispatch_table())
                 self.stats.dispatches += 1
                 cache, dcache, state = (out["cache"], out["dcache"],
                                         out["state"])
@@ -1650,7 +1805,8 @@ class ServingEngine:
                     # drain-then-refill path once the head arrives
                     self._idle_tick(wait)
                 continue
-            progressed = self._drain(prev, t0)
+            with self.tracer.span("superstep.unpack"):
+                progressed = self._drain(prev, t0)
             admitted = self._retire_and_admit(sched, on_complete)
             gap_tokens = 0
             if admitted and self.prefill_chunk:
@@ -1664,9 +1820,12 @@ class ServingEngine:
                 if self.paged:
                     self._reserve_group(admitted, int(args[0].shape[1]))
                     cache, dcache = self._ship_tables(cache, dcache)
-                cache, dcache, state, max_new, fdev = self._refill_ss_fn(
-                    self.params, self.dparams, cache, dcache, state,
-                    max_new, *args)
+                with self.tracer.span("refill", rows=int(args[0].shape[0]),
+                                      width=int(args[0].shape[1])):
+                    cache, dcache, state, max_new, fdev = \
+                        self._refill_ss_fn(
+                            self.params, self.dparams, cache, dcache,
+                            state, max_new, *args)
                 self.stats.refills += len(admitted)
                 if self.paged:
                     self._publish_prefixes(self._prefix_entries(
@@ -1735,6 +1894,7 @@ class ServingEngine:
         valid = ys["valid"]
         sig_np = None            # lazily-fetched packed signal buffers
         any_valid = False
+        rec_on = self.recorder.enabled
         for r in range(valid.shape[0]):
             if not valid[r]:
                 break
@@ -1751,6 +1911,10 @@ class ServingEngine:
                 n = int(n_eff[i])
                 if n:
                     req.generated.extend(int(t) for t in toks[i, :n])
+                    if rec_on:
+                        self.recorder.note(req.rid, "commit",
+                                           round_=self.stats.steps,
+                                           n=n, spec=use_spec)
                 # a lane is inactive-but-unfinished while its chunk
                 # pipeline is still prefilling (first_token_t unset);
                 # only requests that actually started emitting may be
@@ -1829,9 +1993,11 @@ class ServingEngine:
                 if self.paged:
                     self._reserve_group(admitted, int(args[0].shape[1]))
                     cache, dcache = self._ship_tables(cache, dcache)
-                cache, dcache, carry, fdev = self._refill_step_fn(
-                    self.params, self.dparams, cache, dcache, carry,
-                    args[0], args[1], args[2], args[3], args[5])
+                with self.tracer.span("refill", rows=int(args[0].shape[0]),
+                                      width=int(args[0].shape[1])):
+                    cache, dcache, carry, fdev = self._refill_step_fn(
+                        self.params, self.dparams, cache, dcache, carry,
+                        args[0], args[1], args[2], args[3], args[5])
                 self.stats.refills += len(admitted)
                 if self.paged:
                     self._publish_prefixes(self._prefix_entries(
@@ -1869,8 +2035,9 @@ class ServingEngine:
                                        jnp.asarray(steps)))
             steps = np.where(active, steps + 1, steps)
             if use_spec:
-                out = self._spec_fn(self.params, self.dparams, cache,
-                                    dcache, carry, keys)
+                with self.tracer.span("step.dispatch", spec=True):
+                    out = self._spec_fn(self.params, self.dparams, cache,
+                                        dcache, carry, keys)
                 cache, dcache, carry = (out["cache"], out["dcache"],
                                         out["carry"])
                 n_commit = np.asarray(out["n_commit"])
@@ -1890,7 +2057,8 @@ class ServingEngine:
                                  jnp.float32(ell32)))
                 self.stats.spec_steps += 1
             else:
-                out = self._plain_fn(self.params, cache, carry, keys)
+                with self.tracer.span("step.dispatch", spec=False):
+                    out = self._plain_fn(self.params, cache, carry, keys)
                 cache, carry = out["cache"], out["carry"]
                 n_commit = np.ones((b,), np.int32)
                 toks_np = np.asarray(out["tokens"])
@@ -1922,10 +2090,15 @@ class ServingEngine:
                 self.extractor.offer(rids, out["captures"], out["tokens"],
                                      jnp.asarray(mask))
 
+            rec_on = self.recorder.enabled
             for i, r in enumerate(slots):
                 if r is None or not active[i]:
                     continue
                 r.generated.extend(int(t) for t in toks_np[i, :n_eff[i]])
+                if rec_on and n_eff[i]:
+                    self.recorder.note(r.rid, "commit",
+                                       round_=self.stats.steps,
+                                       n=int(n_eff[i]), spec=use_spec)
                 if eos_hit[i] or r.done:
                     self._finish(r)
                     active[i] = False

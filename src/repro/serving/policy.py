@@ -212,6 +212,12 @@ class SpeculationPolicy:
         self._idle = 0              # consecutive gated-off rounds
         self._since_probe = 0       # parked dispatches since last probe
         self._tables = None         # (gate, park, probe) device tables
+        # observability hook: called as on_transition(kind, fields) at
+        # every park/probe/resume state change (kinds "spec.park",
+        # "spec.probe", "spec.resume").  Host-side only — transitions
+        # happen in telemetry replay / dispatch-table selection, never
+        # in-graph — so the hook can never add a device sync.
+        self.on_transition = None
 
     # ------------------------------------------------------------ setup
     def prepare(self, batch: int):
@@ -247,7 +253,12 @@ class SpeculationPolicy:
         self.probing = self._since_probe >= self.probe_interval
         if self.probing:
             self._since_probe = 0
+            self._emit("spec.probe")
         return self.probing
+
+    def _emit(self, kind: str, **fields):
+        if self.on_transition is not None:
+            self.on_transition(kind, fields)
 
     def dispatch_table(self):
         """Threshold table for the next superstep dispatch (or None =
@@ -285,6 +296,7 @@ class SpeculationPolicy:
                 self.parked = False
                 self._idle = 0
                 self.resumes += 1
+                self._emit("spec.resume", accept_ema=accept_ema)
             return
         if use_spec:
             self._idle = 0
@@ -294,6 +306,8 @@ class SpeculationPolicy:
                 self.parked = True
                 self._since_probe = 0
                 self.parks += 1
+                self._emit("spec.park", idle_rounds=self._idle,
+                           accept_ema=accept_ema)
 
     @property
     def blocks_capture(self) -> bool:

@@ -45,6 +45,7 @@ from collections import deque
 from typing import (Callable, Deque, Dict, Iterable, Iterator, List,
                     Optional, Tuple)
 
+from repro.obs.trace import NULL_TRACER
 from repro.serving.policy import AdmissionPolicy, FifoAdmission
 from repro.serving.request import Request
 
@@ -60,9 +61,13 @@ class Scheduler:
                  completion_sink: Optional[Callable[[Request], None]]
                  = None,
                  admission_guard: Optional[
-                     Callable[[Request, List[Request]], bool]] = None):
+                     Callable[[Request, List[Request]], bool]] = None,
+                 tracer=None):
         self.batch = batch_size
         self.policy = policy if policy is not None else FifoAdmission()
+        # host-side observability: admission instants + queue-depth
+        # counter samples (null by default — a no-op attribute check)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # resource veto consulted per candidate during ``admit`` (paged
         # serving passes the page-pool guard): guard(candidate,
         # already-accepted-this-round) -> False defers the candidate —
@@ -204,6 +209,11 @@ class Scheduler:
             self.slots[i] = req
             self.admitted += 1
             out.append((i, req))
+        if out and self.tracer.enabled:
+            self.tracer.instant("sched.admit", n=len(out),
+                                rids=[r.rid for _, r in out])
+            self.tracer.counter("sched.queue_depth",
+                                depth=len(self._queue))
         return out
 
     @staticmethod

@@ -41,15 +41,21 @@ class Peak:
     goodput numbers."""
 
     def __init__(self):
-        self.max = 0.0
+        self._max: float = 0.0
         self.total = 0.0
         self.n = 0
 
     def add(self, x: float):
+        # lazy max: the first observation seeds the peak, so all-negative
+        # streams report their true (negative) max instead of 0.0
+        if self.n == 0 or x > self._max:
+            self._max = float(x)
         self.n += 1
         self.total += x
-        if x > self.max:
-            self.max = x
+
+    @property
+    def max(self) -> float:
+        return self._max if self.n else 0.0
 
     @property
     def mean(self) -> float:

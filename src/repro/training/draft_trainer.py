@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import eagle
-from repro.core.signals import SignalBatch, SignalStore
+from repro.core.signals import SignalBatch
 from repro.models.config import ModelConfig
 from repro.training.optimizer import Optimizer, adamw
 

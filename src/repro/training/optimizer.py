@@ -10,8 +10,7 @@ Both expose the same functional interface:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

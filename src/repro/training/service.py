@@ -60,10 +60,18 @@ class TrainingService:
                  device=None, publish_device=None,
                  trainer_threads: int = 0,
                  engine_steps_fn: Optional[Callable[[], int]] = None,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05,
+                 tracer=None, registry=None):
         self.trainer = trainer
         self.gate = gate
         self.channel = channel
+        # observability (host-side, thread-safe): train-cycle spans +
+        # deploy instants on the shared tracer, ``train.*`` gauges on
+        # the shared metrics registry.  Both optional and null-cheap.
+        from repro.obs.trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if registry is not None:
+            self.register_metrics(registry)
         self.controller = controller
         self.selective = selective
         self.n_threshold = n_threshold
@@ -144,7 +152,8 @@ class TrainingService:
             if self.device is not None:
                 import jax
                 ctx = jax.default_device(self.device)
-            with ctx:
+            with ctx, self.tracer.span("train.cycle",
+                                       batches=len(batches)):
                 result = self.trainer.train_cycle(
                     dparams, batches, epochs=self.train_epochs,
                     min_steps=self.train_min_steps, seed=self.seed)
@@ -162,6 +171,10 @@ class TrainingService:
                     dp = jax.device_put(dp, self.publish_device)
                 self._latest = DraftVersion(self.gate.version, dp,
                                             result["eval_acc"])
+                if self.tracer.enabled:
+                    self.tracer.instant("train.publish",
+                                        seq=self.gate.version,
+                                        eval_acc=result["eval_acc"])
             self.events.append({
                 "kind": "train_cycle", "eval_acc": result["eval_acc"],
                 "train_acc": result["train_acc"], "baseline": baseline,
@@ -236,3 +249,13 @@ class TrainingService:
                 "running": self.running,
                 "trainer_threads": self.trainer_threads,
                 "thread_cap": self._thread_cap, **self.channel.stats()}
+
+    def register_metrics(self, registry):
+        """Expose the service (and its channel) under the ``train.*``
+        metrics namespace as callback gauges — the legacy ``stats()``
+        dict stays as a thin view over the same state."""
+        registry.gauge("train.cycles", fn=lambda: self.cycles)
+        registry.gauge("train.deploy_version",
+                       fn=lambda: self.gate.version)
+        registry.gauge("train.running", fn=lambda: int(self.running))
+        self.channel.register_metrics(registry)

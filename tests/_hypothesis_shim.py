@@ -11,7 +11,6 @@ the genuine library when it is available.
 """
 from __future__ import annotations
 
-import functools
 import random
 
 _DEFAULT_EXAMPLES = 25

@@ -3,7 +3,6 @@ real single CPU device (the dry-run sets its own flags in-process)."""
 import resource
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.models.config import (ATTN, CROSS, FFN_GELU, FFN_MOE, FFN_SWIGLU,

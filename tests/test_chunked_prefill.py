@@ -26,7 +26,6 @@ All tests here run on randomly initialized weights (parity is a property
 of the computation, not the model), so the file stays in the fast tier.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

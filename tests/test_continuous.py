@@ -28,7 +28,7 @@ from repro.core import eagle
 from repro.core.signals import SignalExtractor, SignalStore
 from repro.data.workloads import arrival_trace, make_domains, training_corpus
 from repro.models import transformer as T
-from repro.serving.engine import ServingEngine, ServingStats
+from repro.serving.engine import ServingEngine
 from repro.serving.policy import ServingConfig
 from repro.serving.request import Request, inert_request
 from repro.serving.scheduler import Scheduler

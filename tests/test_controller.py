@@ -1,18 +1,16 @@
 """Algorithm 1 controller + Eq. 2–5 adaptive model: unit + hypothesis
 property tests on the system's control invariants."""
-import math
 
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:   # not in the container image - deterministic shim
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.core.adaptive import (AdaptiveDrafter, LatencyProfile,
+from repro.core.adaptive import (AdaptiveDrafter,
                                  alpha_from_accept_len,
                                  expected_accept_len, min_accept_len_for_gain,
-                                 practical_speedup, theoretical_speedup,
+                                 practical_speedup,
                                  PAPER_PROFILES)
 from repro.core.controller import Decision, TrainingController
 

@@ -7,7 +7,6 @@ no-drop regime; the multi-shard behaviour is exercised by the dry-run
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -15,7 +15,6 @@ is a property of the control plane, not the model), so the file stays
 in the fast tier; the pretrained-fixture end-to-end parity suite at
 the bottom carries the ``slow`` marker (see ROADMAP test tiers).
 """
-import warnings
 
 import jax
 import numpy as np

@@ -1,6 +1,5 @@
 """Roofline extraction: HLO collective parser + term math + workload
 generator sanity."""
-import numpy as np
 import pytest
 
 from repro.launch import roofline as rf
@@ -94,7 +93,6 @@ def test_shape_applicability_rules():
 
 
 def test_input_specs_shapes():
-    import jax.numpy as jnp
     import repro.configs as C
     from repro.configs import shapes as shp
     cfg = C.get("glm4-9b")

@@ -2,12 +2,11 @@
 cache/param tree alignment (hypothesis property tests)."""
 import jax
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:   # not in the container image - deterministic shim
     from _hypothesis_shim import given, settings, strategies as st
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_demo_mesh
@@ -97,7 +96,6 @@ def test_param_tree_sharding_alignment():
 
 
 def test_cache_axes_structure_matches():
-    import jax.numpy as jnp
     import repro.configs as C
     from repro.models import transformer as T
     for arch in ("jamba-1.5-large-398b", "whisper-base",

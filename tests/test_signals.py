@@ -2,7 +2,6 @@
 transfer, storage accounting (paper Table 1 math)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 import repro.configs as C
 from repro.core.signals import (SignalBatch, SignalExtractor, SignalStore,

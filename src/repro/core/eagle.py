@@ -442,6 +442,51 @@ def reseed_draft_rows_from_ring(dcfg: ModelConfig, dparams, embed_params,
                 v=jnp.where(sel, vc, dcache["v"]))
 
 
+def reseed_draft_rows_from_ring_paged(dcfg: ModelConfig, dparams,
+                                      embed_params, dcache, cap_feats,
+                                      cap_toks, cap_count, max_len: int):
+    """Paged twin of ``reseed_draft_rows_from_ring``: recompute the
+    ring-covered draft K/V rows in a dense scratch cache, then write
+    them back through the lane block table (``dcache["tbl"]``) into the
+    page pools.  Row values are identical to the dense re-seed — the
+    draft layer runs on the same (B, W) fused inputs at the same RoPE
+    positions — so paged+reseed streams stay bitwise equal to
+    dense+reseed ones.  This is what lifts the PR 6 reseed_window x
+    paging exclusivity: deploy-time re-seed writes through tables like
+    any other draft-cache commit."""
+    from repro.core import paging
+
+    b, w = cap_toks.shape
+    dt = dcfg.act_dtype
+    lengths = dcache["lengths"]
+    pool_k, pool_v = dcache["k"], dcache["v"]
+    page_size = pool_k.shape[1]
+    trash = pool_k.shape[0] - 1
+    n = jnp.minimum(cap_count, w)
+    j = jnp.arange(w)[None, :]
+    slot = ((cap_count - n)[:, None] + j) % w      # ring → time order
+    feats = jnp.take_along_axis(cap_feats, slot[..., None], axis=1)
+    toks = jnp.take_along_axis(cap_toks, slot, axis=1)
+    start = lengths - n
+    x = _fuse_inputs(dcfg, dparams, feats, embed(embed_params, toks, dt))
+    zeros = jnp.zeros((b, max_len) + pool_k.shape[2:], pool_k.dtype)
+    _, kc, vc = _layer(dcfg, dparams, x, zeros, jnp.zeros_like(zeros),
+                       start, dcache["pad"])
+    # the layer wrote the W recomputed rows at positions start + [0, W);
+    # gather exactly the n valid ones per lane and commit them through
+    # the block table (invalid columns route to the trash page)
+    pos = start[:, None] + j                        # (B, W)
+    idx = jnp.clip(pos, 0, max_len - 1)
+    rows_k = jnp.take_along_axis(kc, idx[..., None, None], axis=1)
+    rows_v = jnp.take_along_axis(vc, idx[..., None, None], axis=1)
+    valid = j < n[:, None]
+    page, pslot = paging.page_slot(dcache["tbl"], page_size, pos, trash,
+                                   valid=valid)
+    return dict(dcache,
+                k=pool_k.at[page, pslot].set(rows_k.astype(pool_k.dtype)),
+                v=pool_v.at[page, pslot].set(rows_v.astype(pool_v.dtype)))
+
+
 # ------------------------------------------------------------- training
 def draft_train_loss(dcfg: ModelConfig, dparams, embed_params, feats, tokens,
                      *, ttt: bool = True, mask=None):

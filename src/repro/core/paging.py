@@ -178,6 +178,10 @@ class PageAllocator:
         self.prefix_tokens_saved = 0
         self.evictions = 0
         self.cow_forks = 0
+        # pages released by lane preemption (spill-to-host); restores
+        # re-reserve through the normal path, so this counts spill
+        # events' page traffic, not a live balance
+        self.spilled_pages = 0
 
     # ------------------------------------------------------------ stats
     @property
@@ -200,6 +204,8 @@ class PageAllocator:
                        fn=lambda: self.prefix_tokens_saved)
         registry.gauge("paging.evictions", fn=lambda: self.evictions)
         registry.gauge("paging.cow_forks", fn=lambda: self.cow_forks)
+        registry.gauge("paging.spilled_pages",
+                       fn=lambda: self.spilled_pages)
 
     def _note_use(self):
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
@@ -263,6 +269,21 @@ class PageAllocator:
                 self._decref(int(row[i]))
                 row[i] = self.trash
                 self.dirty = True
+
+    def lane_pages(self, lane: int) -> int:
+        """Pages the lane currently maps (a restore must re-reserve
+        exactly this many to cover the same token range)."""
+        return int((self.table[lane] != self.trash).sum())
+
+    def spill_lane(self, lane: int) -> int:
+        """Preemption's allocator half: release the victim lane's pages
+        after its bytes were gathered out to the host SpillStore.
+        Returns the page count released (the restore's reservation
+        size) and accounts it under ``spilled_pages``."""
+        pages = self.lane_pages(lane)
+        self.free_lane(lane)
+        self.spilled_pages += pages
+        return pages
 
     # ------------------------------------------------------------- sharing
     def prefix_key(self, rows: int, width: int, pad: int,
@@ -411,3 +432,66 @@ class PageAllocator:
         call materializes a new buffer, so the target cache and draft
         cache can each own one without double-donation."""
         return jnp.asarray(np.array(self.table, copy=True))
+
+
+# ==================================================== lane spill store
+class SpilledLane:
+    """One preempted request parked off-lane.
+
+    ``slices`` is the engine's opaque per-lane snapshot — a pytree of
+    device arrays gathered out of the live caches/superstep state by a
+    jitted spill op (target KV groups + lengths/pad, draft KV +
+    lengths/pad, per-lane carry/PRNG/capture-ring state, remaining
+    token budget).  The arrays stay device-resident: the gather is
+    enqueued like any other superstep op and never synced, so spilling
+    adds zero host round-trips.  ``pages`` is the page count the lane
+    mapped at spill time (paged serving re-reserves exactly that many
+    at restore; dense serving records 0)."""
+
+    __slots__ = ("request", "slices", "pages")
+
+    def __init__(self, request, slices, pages: int = 0):
+        self.request = request
+        self.slices = slices
+        self.pages = pages
+
+
+class SpillStore:
+    """Host-side parking lot for preempted lanes (rid-keyed, insertion
+    ordered).  Pure bookkeeping: the engine decides when to spill and
+    restore; the store only tracks the parked set and the traffic
+    counters (``spills``/``restores``/``dropped`` — dropped entries
+    are spilled requests that finished from already-in-flight
+    telemetry before any restore happened)."""
+
+    def __init__(self):
+        self._entries: "OrderedDict[int, SpilledLane]" = OrderedDict()
+        self.spills = 0
+        self.restores = 0
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+    def put(self, entry: SpilledLane):
+        if entry.request.rid in self._entries:
+            raise AssertionError(
+                f"request {entry.request.rid} spilled twice")
+        self._entries[entry.request.rid] = entry
+        self.spills += 1
+
+    def pop(self, rid: int) -> SpilledLane:
+        self.restores += 1
+        return self._entries.pop(rid)
+
+    def drop(self, rid: int) -> SpilledLane:
+        self.dropped += 1
+        return self._entries.pop(rid)
+
+    def pending(self) -> List[SpilledLane]:
+        """Parked entries in spill order (the engine re-ranks by its
+        restore policy before claiming lanes)."""
+        return list(self._entries.values())

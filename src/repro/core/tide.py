@@ -138,8 +138,16 @@ class TideConfig:
     share_prefix: bool = True         # COW prompt-prefix sharing
     # ---- serving control plane (see serving/policy.py)
     admission: str = "fifo"           # fifo | priority | deadline (EDF)
+    #                                   | wedf (priority-weighted EDF)
     commit: str = "cohort"            # cohort | eager chunk-pipeline commit
     admission_lookahead: int = 64     # reorder window (non-FIFO policies)
+    # ---- overload resilience (docs/overload.md)
+    preempt: str = "none"             # none | deadline: spill a loose
+    #                                   resident lane when a tighter-
+    #                                   deadline candidate is deferred
+    shed: str = "none"                # none | expired | queue: drop
+    #                                   hopeless queued requests
+    shed_queue_depth: int = 64        # queue-shed depth bound
     idle_wait_s: float = 0.005        # gated-arrival idle-tick bound
     spec_park_patience: int = 0       # >0: park speculation + capture
     #                                   after N gated-off rounds
@@ -162,6 +170,7 @@ class TideConfig:
                       "gate_arrivals", "prefill_chunk", "reseed_window",
                       "page_size", "num_pages", "share_prefix",
                       "admission", "commit", "admission_lookahead",
+                      "preempt", "shed", "shed_queue_depth",
                       "idle_wait_s", "spec_park_patience",
                       "spec_probe_interval", "trainer_threads")
 

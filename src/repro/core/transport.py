@@ -62,11 +62,20 @@ class SignalChannel(SignalStore):
         self.capacity = capacity
         self.device = device
         self.dropped = 0
+        self.rejected_after_close = 0
         self.closed = False
         self._cond = threading.Condition(self._lock)
 
     # ------------------------------------------------------------- produce
     def add(self, batch: SignalBatch):
+        if self.closed:
+            # a closed channel has no consumer left — buffering would
+            # grow a ring nobody drains.  Drop-and-count so a straggling
+            # producer (e.g. a superstep unpacked after shutdown) is
+            # visible in stats() instead of silently retained.
+            with self._cond:
+                self.rejected_after_close += 1
+            return
         if self.device is not None:
             # async H2D/D2D enqueue — the serving thread never blocks on
             # the copy; the arrays materialize on the trainer's device
@@ -75,6 +84,9 @@ class SignalChannel(SignalStore):
                 feats=jax.device_put(batch.feats, self.device),
                 tokens=jax.device_put(batch.tokens, self.device))
         with self._cond:
+            if self.closed:   # close() raced the device_put above
+                self.rejected_after_close += 1
+                return
             self._buf.append(batch)
             self.total_added += 1
             self.total_bytes += batch.feats.nbytes + batch.tokens.nbytes
@@ -84,6 +96,14 @@ class SignalChannel(SignalStore):
             self._cond.notify_all()
 
     # ------------------------------------------------------------- consume
+    def drain(self, n=None):
+        """Pop up to ``n`` (default: all) buffered batches.  On a closed
+        channel this is deterministic: ``add`` rejects post-``close``
+        writes, so the drained set is exactly the batches buffered
+        before ``close`` — one final drain empties the channel and every
+        later drain returns ``[]``."""
+        return super().drain(n)
+
     def wait(self, min_count: int = 1,
              timeout: Optional[float] = None) -> int:
         """Block until at least ``min_count`` batches are buffered, the
@@ -108,6 +128,7 @@ class SignalChannel(SignalStore):
             self.total_added = 0
             self.total_bytes = 0
             self.dropped = 0
+            self.rejected_after_close = 0
 
     # --------------------------------------------------------------- stats
     @property
@@ -116,7 +137,8 @@ class SignalChannel(SignalStore):
 
     def stats(self) -> dict:
         return {"pushed": self.total_added, "dropped": self.dropped,
-                "depth": self.peek_count(), "bytes": self.total_bytes}
+                "depth": self.peek_count(), "bytes": self.total_bytes,
+                "rejected_after_close": self.rejected_after_close}
 
     def register_metrics(self, registry):
         """Expose the channel under the ``train.*`` metrics namespace as
@@ -124,5 +146,7 @@ class SignalChannel(SignalStore):
         adds nothing to the push/drain paths)."""
         registry.gauge("train.signals_pushed", fn=lambda: self.total_added)
         registry.gauge("train.signals_dropped", fn=lambda: self.dropped)
+        registry.gauge("train.signals_rejected",
+                       fn=lambda: self.rejected_after_close)
         registry.gauge("train.signal_bytes", fn=lambda: self.total_bytes)
         registry.gauge("train.channel_depth", fn=self.peek_count)

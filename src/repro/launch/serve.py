@@ -85,15 +85,34 @@ def build_parser() -> argparse.ArgumentParser:
                     help="disable COW prompt-prefix page sharing")
     ap.add_argument("--reseed-window", type=int, default=None,
                     help="deploy-time draft-cache re-seed ring size "
-                         "(default: 32 under --async-train on dense "
-                         "engines, else 0)")
-    ap.add_argument("--policy", choices=["fifo", "priority", "deadline"],
+                         "(default: 32 under --async-train, else 0; "
+                         "paged engines re-seed through the lanes' "
+                         "block-table rows in place)")
+    ap.add_argument("--policy",
+                    choices=["fifo", "priority", "deadline", "wedf"],
                     default="fifo",
                     help="admission policy: fifo (arrival order), "
-                         "priority (highest Request.priority first), or "
+                         "priority (highest Request.priority first), "
                          "deadline (EDF over Request.deadline — the "
-                         "latency-SLO policy); implies --continuous for "
-                         "non-fifo choices")
+                         "latency-SLO policy), or wedf (EDF with the "
+                         "deadline relaxed by priority weight); implies "
+                         "--continuous for non-fifo choices")
+    ap.add_argument("--preempt", choices=["none", "deadline"],
+                    default="none",
+                    help="preemption policy (docs/overload.md): deadline "
+                         "spills the loosest resident lane to host when "
+                         "a tighter-deadline candidate is deferred "
+                         "against a full batch, restoring it byte-"
+                         "identically once a lane frees (superstep "
+                         "mode only)")
+    ap.add_argument("--shed", choices=["none", "expired", "queue"],
+                    default="none",
+                    help="load-shedding policy: expired drops queued "
+                         "requests whose deadline already passed; queue "
+                         "bounds the arrived queue depth, dropping the "
+                         "loosest deadlines first")
+    ap.add_argument("--shed-queue-depth", type=int, default=64,
+                    help="arrived-queue depth bound for --shed queue")
     ap.add_argument("--commit", choices=["cohort", "eager"],
                     default="cohort",
                     help="chunk-pipeline commit policy: cohort (default; "
@@ -148,8 +167,7 @@ def config_from_args(args):
                   or args.policy != "fifo")
     reseed = args.reseed_window
     if reseed is None:
-        reseed = (32 if getattr(args, "async_train", False)
-                  and not args.page_size else 0)
+        reseed = 32 if getattr(args, "async_train", False) else 0
     return ServingConfig(
         gamma=args.gamma, batch_size=args.batch,
         max_len=args.max_len or (160 if continuous else 96),
@@ -158,6 +176,8 @@ def config_from_args(args):
         eos_id=args.eos_id, ema=args.accept_ema, seed=args.seed,
         admission=args.policy, commit=args.commit,
         admission_lookahead=args.admission_lookahead,
+        preempt=args.preempt, shed=args.shed,
+        shed_queue_depth=args.shed_queue_depth,
         gate_arrivals=args.gate_arrivals, idle_wait_s=args.idle_wait_s,
         prefill_chunk=args.prefill_chunk,
         page_size=args.page_size, num_pages=args.num_pages,

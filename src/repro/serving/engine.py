@@ -258,7 +258,7 @@ _STATS_COUNTERS = (
     "accept_len_n", "lane_rounds", "busy_lane_rounds",
     "prefill_chunks", "prefill_lane_rounds", "prefill_row_tokens",
     "pages_peak", "prefix_hits", "prefix_tokens_saved",
-    "admission_deferrals",
+    "admission_deferrals", "preemptions", "restores", "shed_requests",
 )
 _STATS_FLOAT_COUNTERS = ("wall_s", "accept_len_sum")
 
@@ -319,6 +319,11 @@ class ServingStats:
     #   prefix_hits      prefix-page adoption events (COW)
     #   prefix_tokens_saved  prompt tokens served from shared pages
     #   admission_deferrals  admit candidates vetoed on page pressure
+    #   preemptions      resident lanes spilled to host for a tighter
+    #                    arrival (Request.evictions sums to this)
+    #   restores         spilled requests re-admitted onto a lane
+    #   shed_requests    queued requests dropped by the shed policy
+    #                    (finish with Request.shed=True, empty stream)
 
     def __init__(self, retain: int = 4096, registry=None):
         from repro.obs.metrics import MetricsRegistry
@@ -585,11 +590,6 @@ class ServingEngine:
         self.num_pages = 0
         if self.paged:
             T.paged_check(cfg, self.max_len, self.page_size)
-            if self.reseed_window:
-                raise ValueError(
-                    "reseed_window is incompatible with paged KV serving "
-                    "(the deploy-time re-seed op rewrites dense draft "
-                    "lanes); disable one of them")
             self.num_pages = (config.num_pages or
                               self.batch * self.max_len // self.page_size)
             self.allocator = paging.PageAllocator(
@@ -597,7 +597,22 @@ class ServingEngine:
                 share_prefix=config.share_prefix)
         self._pipelines: List[_ChunkPipeline] = []
         self._cohort_next = 0
+        # host-side parking lot for preempted lanes: per-lane KV + draft
+        # rows + superstep state gathered to host-owned device buffers at
+        # a superstep boundary, restored when a slot frees up.  Spilling
+        # keeps the full capture ring, which is what lets reseed_window
+        # coexist with paged serving (the paged re-seed op rewrites the
+        # lane's draft rows through its block-table row in place).
+        self._spills = paging.SpillStore()
+        if self.policy.preemption.enabled and self.superstep_rounds <= 0:
+            raise ValueError(
+                "preemption requires superstep mode (superstep_rounds > "
+                "0): spill/restore only runs at superstep boundaries")
         self._sleep = time.sleep           # injectable for tests
+        self._clock = time.perf_counter    # injectable for tests — the
+        # single clock domain behind admit_t / first_token_t / finish_t
+        # and wall_s, shared with the Scheduler so latency stats never
+        # mix real and fake time
         # ---------------------------------------------- observability
         # Host-side instruments only (docs/observability.md): the tracer
         # and flight recorder default to null singletons whose hooks are
@@ -981,13 +996,159 @@ class ServingEngine:
 
         self._reseed_fn = None
         if self.reseed_window and self.superstep_rounds > 0:
-            @functools.partial(jax.jit, donate_argnums=(1,))
-            def _reseed(dparams, dcache, state):
-                return eagle.reseed_draft_rows_from_ring(
-                    dcfg, dparams, self.params["embed"], dcache,
-                    state.cap_feats, state.cap_toks, state.cap_count)
+            if self.paged:
+                @functools.partial(jax.jit, donate_argnums=(1,))
+                def _reseed(dparams, dcache, state):
+                    return eagle.reseed_draft_rows_from_ring_paged(
+                        dcfg, dparams, self.params["embed"], dcache,
+                        state.cap_feats, state.cap_toks, state.cap_count,
+                        self.max_len)
+            else:
+                @functools.partial(jax.jit, donate_argnums=(1,))
+                def _reseed(dparams, dcache, state):
+                    return eagle.reseed_draft_rows_from_ring(
+                        dcfg, dparams, self.params["embed"], dcache,
+                        state.cap_feats, state.cap_toks, state.cap_count)
 
             self._reseed_fn = _reseed
+
+        # ---- preemption spill/restore ops (superstep mode).  Spill
+        # gathers one lane's full serving state — target-cache rows,
+        # draft rows, superstep state slice, remaining budget — into
+        # fresh host-owned device buffers (non-donating, so it is safe
+        # to enqueue behind an in-flight superstep that still reads the
+        # live buffers).  Restore writes the slices back into a freed
+        # lane; under paging it writes *through the lane's new
+        # block-table row*, so the physical pages may differ while the
+        # logical rows are bit-identical.  Both ops take the lane as a
+        # traced scalar: one compiled trace covers every slot.
+        self._spill_fn = None
+        self._restore_fn = None
+        if self.superstep_rounds > 0:
+            paged = self.paged
+            page_size = self.page_size
+            max_len = self.max_len
+
+            def _state_slices(state, lane):
+                st = {
+                    "feats": state.carry.feats[lane],
+                    "tokens": state.carry.tokens[lane],
+                    "advance": state.carry.advance[lane],
+                    "active": state.active[lane],
+                    "gen_count": state.gen_count[lane],
+                    "sid": state.sid[lane],
+                    "step_idx": state.step_idx[lane],
+                }
+                if state.cap_feats is not None:
+                    st["cap_feats"] = state.cap_feats[lane]
+                    st["cap_toks"] = state.cap_toks[lane]
+                    st["cap_count"] = state.cap_count[lane]
+                return st
+
+            @jax.jit
+            def _spill(cache, dcache, state, max_new, lane):
+                if paged:
+                    trow = cache["page_tbl"][lane]
+
+                    def _pool_lane(pool):
+                        # pool leaf (S, pages+1, P, ...) -> (S, max_len, ...)
+                        return jax.vmap(lambda p: paging.gather_view(
+                            p, trow[None])[0])(pool)
+
+                    cslices = {g: jax.tree.map(_pool_lane, cache[g])
+                               for g in cache
+                               if g not in ("lengths", "pad", "page_tbl")}
+                    dtrow = dcache["tbl"][lane]
+                    dk = paging.gather_view(dcache["k"], dtrow[None])[0]
+                    dv = paging.gather_view(dcache["v"], dtrow[None])[0]
+                else:
+                    cslices = {g: jax.tree.map(lambda leaf: leaf[:, lane],
+                                               cache[g])
+                               for g in cache if g not in ("lengths", "pad")}
+                    dk = dcache["k"][lane]
+                    dv = dcache["v"][lane]
+                return {
+                    "cache": cslices,
+                    "clen": cache["lengths"][lane],
+                    "cpad": cache["pad"][lane],
+                    "dk": dk, "dv": dv,
+                    "dlen": dcache["lengths"][lane],
+                    "dpad": dcache["pad"][lane],
+                    "state": _state_slices(state, lane),
+                    "budget": max_new[lane],
+                }
+
+            @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+            def _restore(cache, dcache, state, max_new, lane, sp):
+                cache = dict(cache)
+                dcache = dict(dcache)
+                if paged:
+                    trow = cache["page_tbl"][lane]
+                    pos = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+
+                    def _write1(p, r):
+                        # rows past the lane's (re-)reservation route to
+                        # the trash page: unmapped table entries hold the
+                        # trash id, so page_slot needs no masking here
+                        page, slot = paging.page_slot(trow[None], page_size,
+                                                      pos, p.shape[0] - 1)
+                        return p.at[page[0], slot[0]].set(r.astype(p.dtype))
+
+                    for g in list(cache):
+                        if g in ("lengths", "pad", "page_tbl"):
+                            continue
+                        cache[g] = jax.tree.map(
+                            lambda pool, rows: jax.vmap(_write1)(pool, rows),
+                            cache[g], sp["cache"][g])
+                    dtrow = dcache["tbl"][lane]
+
+                    def _dwrite(p, r):
+                        page, slot = paging.page_slot(dtrow[None], page_size,
+                                                      pos, p.shape[0] - 1)
+                        return p.at[page[0], slot[0]].set(r.astype(p.dtype))
+
+                    dcache["k"] = _dwrite(dcache["k"], sp["dk"])
+                    dcache["v"] = _dwrite(dcache["v"], sp["dv"])
+                else:
+                    for g in list(cache):
+                        if g in ("lengths", "pad"):
+                            continue
+                        cache[g] = jax.tree.map(
+                            lambda leaf, s: leaf.at[:, lane].set(
+                                s.astype(leaf.dtype)),
+                            cache[g], sp["cache"][g])
+                    dcache["k"] = dcache["k"].at[lane].set(sp["dk"])
+                    dcache["v"] = dcache["v"].at[lane].set(sp["dv"])
+                cache["lengths"] = cache["lengths"].at[lane].set(sp["clen"])
+                cache["pad"] = cache["pad"].at[lane].set(sp["cpad"])
+                dcache["lengths"] = dcache["lengths"].at[lane].set(
+                    sp["dlen"])
+                dcache["pad"] = dcache["pad"].at[lane].set(sp["dpad"])
+                st = sp["state"]
+                carry = state.carry._replace(
+                    feats=state.carry.feats.at[lane].set(st["feats"]),
+                    tokens=state.carry.tokens.at[lane].set(st["tokens"]),
+                    advance=state.carry.advance.at[lane].set(st["advance"]))
+                kw = {}
+                if state.cap_feats is not None:
+                    kw = dict(
+                        cap_feats=state.cap_feats.at[lane].set(
+                            st["cap_feats"]),
+                        cap_toks=state.cap_toks.at[lane].set(st["cap_toks"]),
+                        cap_count=state.cap_count.at[lane].set(
+                            st["cap_count"]))
+                state = state._replace(
+                    carry=carry,
+                    active=state.active.at[lane].set(st["active"]),
+                    gen_count=state.gen_count.at[lane].set(st["gen_count"]),
+                    sid=state.sid.at[lane].set(st["sid"]),
+                    step_idx=state.step_idx.at[lane].set(st["step_idx"]),
+                    **kw)
+                max_new = max_new.at[lane].set(sp["budget"])
+                return cache, dcache, state, max_new
+
+            self._spill_fn = _spill
+            self._restore_fn = _restore
 
     def deploy_draft(self, dparams):
         """Hot-swap the draft (no target reload — TIDE's C2).  Under
@@ -1035,6 +1196,7 @@ class ServingEngine:
         self._sid_next = 0
         self._pipelines = []
         self._cohort_next = 0
+        self._spills = paging.SpillStore()
         if self.allocator is not None:
             self.allocator.reset()
         self.stats = ServingStats(registry=self.metrics)
@@ -1057,6 +1219,7 @@ class ServingEngine:
         reg.gauge("spec.tree_width", fn=lambda: self.tree_width)
         reg.gauge("spec.gamma", fn=lambda: self.gamma)
         reg.gauge("spec.accept_ema", fn=lambda: self.accept_ema)
+        reg.gauge("serving.spilled_requests", fn=lambda: len(self._spills))
         if self.allocator is not None:
             self.allocator.register_metrics(reg)
         else:
@@ -1064,7 +1227,7 @@ class ServingEngine:
             for name in ("paging.pages_in_use", "paging.pages_free",
                          "paging.pages_peak", "paging.prefix_hits",
                          "paging.prefix_tokens_saved", "paging.evictions",
-                         "paging.cow_forks"):
+                         "paging.cow_forks", "paging.spilled_pages"):
                 reg.gauge(name)
 
     def _spec_transition(self, kind: str, fields: dict):
@@ -1120,7 +1283,7 @@ class ServingEngine:
     # -------------------------------------------------- request accounting
     def _finish(self, r: Request):
         if r.finish_t is None:
-            r.finish()
+            r.finish(self._clock())
             r.finish_round = self.stats.steps    # deterministic stamp
             self.stats.completed += 1
             if r.latency is not None:
@@ -1137,7 +1300,7 @@ class ServingEngine:
             return
         r.generated.append(tok)
         if r.first_token_t is None:
-            r.first_token_t = time.perf_counter()
+            r.first_token_t = self._clock()
             r.first_token_round = self.stats.steps
             self.stats.record_ttft(r.ttft)
             if self.recorder.enabled:
@@ -1222,11 +1385,12 @@ class ServingEngine:
         sched = Scheduler(self.batch, requests,
                           policy=self.policy.admission,
                           gate_arrivals=self.gate_arrivals,
+                          clock=self._clock,
                           completion_sink=self.completion_sink,
                           admission_guard=(self._admission_guard
                                            if self.paged else None),
                           tracer=self.tracer)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         while not sched.has_work():
             wait = sched.next_arrival_in()
             if wait is None:
@@ -1260,7 +1424,7 @@ class ServingEngine:
                                   cold=bool(self.prefill_chunk))
         if self.extractor is not None:
             self.extractor.flush()
-        self.stats.wall_s += time.perf_counter() - t0
+        self.stats.wall_s += self._clock() - t0
         return sched.completed
 
     def _retire_and_admit(self, sched: Scheduler, on_complete):
@@ -1271,9 +1435,209 @@ class ServingEngine:
         for r in sched.release_finished():
             if on_complete is not None:
                 on_complete(r)
+        self._shed_queue(sched, on_complete)
         admitted = sched.admit()
         self._assign_sids(admitted)
         return admitted
+
+    # ------------------------------------------- overload boundary
+    # (docs/overload.md).  One host-side pass per superstep boundary:
+    # retire finished lanes, drop spill entries that finished via
+    # in-flight telemetry, shed hopeless queue entries, restore spilled
+    # requests whose effective deadline beats the queue head, admit,
+    # preempt-and-admit when the admission tier defers a tighter
+    # candidate against a full batch, then hand leftover free lanes to
+    # any remaining spilled requests.  Zero added device syncs: spills
+    # gather to host-owned device buffers and restores write back
+    # through donated ops, both enqueued behind the in-flight superstep.
+    def _overload_boundary(self, sched: Scheduler, on_complete, cache,
+                           dcache, state, max_new):
+        """Superstep-mode twin of ``_retire_and_admit`` that also runs
+        the spill/restore + preemption machinery.  Returns the updated
+        device bindings plus the new (slot, request) refill
+        assignments."""
+        if self.paged:
+            self._free_finished_lanes(sched)
+        for r in sched.release_finished():
+            if on_complete is not None:
+                on_complete(r)
+        if self._spills:
+            self._drop_finished_spills(sched, on_complete)
+        self._shed_queue(sched, on_complete)
+        if self._spills:
+            cache, dcache, state, max_new = self._restore_spilled(
+                sched, cache, dcache, state, max_new, rank_queue=True)
+        admitted = sched.admit()
+        if self.policy.preemption.enabled and sched.has_pending():
+            admitted += self._preempt_admit(
+                sched, cache, dcache, state, max_new,
+                {id(r) for _, r in admitted})
+        if self._spills:
+            cache, dcache, state, max_new = self._restore_spilled(
+                sched, cache, dcache, state, max_new, rank_queue=False)
+        self._assign_sids(admitted)
+        return cache, dcache, state, max_new, admitted
+
+    def _shed_queue(self, sched: Scheduler, on_complete):
+        """Load shedding: let the shed policy drop queued requests that
+        are not worth serving (expired deadlines, queue overflow).  Shed
+        requests finish immediately with whatever they generated
+        (nothing, for queued ones) and route through the normal
+        completion path.  The default ``none`` policy never touches the
+        scheduler, keeping the byte-parity baseline exact."""
+        pol = self.policy.preemption.shed
+        if pol.name == "none":
+            return
+        victims = pol.pick(sched.queue_view(), self.stats.steps)
+        if not victims:
+            return
+        for r in victims:
+            r.shed = True
+            self.stats.shed_requests += 1
+            self._finish(r)
+        sched.shed(victims)
+        for r in victims:
+            if on_complete is not None:
+                on_complete(r)
+
+    def _drop_finished_spills(self, sched: Scheduler, on_complete):
+        """A spilled request can finish *while parked*: the superstep in
+        flight at spill time still carried its lane, so its final
+        tokens/EOS commit from that superstep's telemetry.  Its pages
+        were already freed at spill — just drop the entry and route the
+        request through the completion path the scheduler would have
+        used."""
+        for e in list(self._spills.pending()):
+            if e.request.finish_t is not None:
+                self._spills.drop(e.request.rid)
+                sched.retire(e.request)
+                if on_complete is not None:
+                    on_complete(e.request)
+
+    @staticmethod
+    def _edl(r: Request):
+        """Effective-deadline sort key (tightest first), matching the
+        loose-ness order the preemption policy victimizes by."""
+        return (r.deadline if r.deadline is not None else float("inf"),
+                -r.priority)
+
+    def _restore_spilled(self, sched: Scheduler, cache, dcache, state,
+                         max_new, *, rank_queue: bool):
+        """Move spilled requests back onto free lanes.  With
+        ``rank_queue`` (the pre-admission pass) only entries whose
+        effective deadline is at least as tight as the queue head's may
+        claim a lane — a restored request must never starve a tighter
+        queued candidate; the post-admission pass hands out whatever
+        lanes are still free.  Restored lanes resume mid-stream: the
+        spilled superstep state re-enters the next dispatch exactly
+        where the lane left off, so the token stream is byte-identical
+        to a never-evicted run."""
+        free = [i for i, s in enumerate(sched.slots) if s is None]
+        if not free or not self._spills:
+            return cache, dcache, state, max_new
+        entries = sorted(self._spills.pending(),
+                         key=lambda e: self._edl(e.request))
+        if rank_queue:
+            head = sched.peek_next()
+            if head is not None:
+                hd = self._edl(head)
+                entries = [e for e in entries if self._edl(e.request) <= hd]
+        for slot in free:
+            if not entries:
+                break
+            e = entries[0]
+            if self.paged:
+                if not self.allocator.reserve(slot,
+                                              e.pages * self.page_size):
+                    break        # pool pressure: keep the entry parked
+                self._sync_paged_stats()
+                # the restore op writes through the lane's fresh table
+                # row, so the table must ship before dispatch
+                cache, dcache = self._ship_tables(cache, dcache)
+            entries.pop(0)
+            self._spills.pop(e.request.rid)
+            with self.tracer.span("preempt.restore", rid=e.request.rid,
+                                  slot=slot):
+                cache, dcache, state, max_new = self._restore_fn(
+                    cache, dcache, state, max_new, jnp.int32(slot),
+                    e.slices)
+            sched.slots[slot] = e.request
+            self.stats.restores += 1
+            if self.recorder.enabled:
+                self.recorder.note(e.request.rid, "restore",
+                                   round_=self.stats.steps, slot=slot)
+        return cache, dcache, state, max_new
+
+    def _victim_candidates(self, sched: Scheduler, new_ids):
+        """Residents eligible for preemption: decoding lanes only —
+        never this boundary's admissions (their device state is a refill
+        op that has not been built yet), never lanes mid-chunk-prefill
+        (their state lives in pipeline staging, not the live buffers)."""
+        in_pipe = {id(r) for pl in self._pipelines for _, r in pl.admitted}
+        out = []
+        for slot, r in enumerate(sched.slots):
+            if r is None or r.finish_t is not None:
+                continue
+            if id(r) in new_ids or id(r) in in_pipe:
+                continue
+            if r.first_token_t is None:
+                continue
+            out.append((slot, r))
+        return out
+
+    def _spill_victim(self, sched: Scheduler, slot: int, cache, dcache,
+                      state, max_new):
+        """Evict one resident lane into the SpillStore.  The gather op
+        reads the *current* (post-drain) host bindings — which already
+        include the in-flight superstep's progress for this lane, whose
+        tokens commit at the next drain through the pending record's
+        request reference — so the spilled state and the host token
+        stream stay exactly in phase."""
+        req = sched.slots[slot]
+        with self.tracer.span("preempt.spill", rid=req.rid, slot=slot):
+            slices = self._spill_fn(cache, dcache, state, max_new,
+                                    jnp.int32(slot))
+        pages = 0
+        if self.paged:
+            pages = self.allocator.spill_lane(slot)
+        self._spills.put(paging.SpilledLane(req, slices, pages))
+        sched.evict(slot)
+        req.evictions += 1
+        self.stats.preemptions += 1
+        if self.recorder.enabled:
+            self.recorder.note(req.rid, "preempt",
+                               round_=self.stats.steps, slot=slot)
+
+    def _preempt_admit(self, sched: Scheduler, cache, dcache, state,
+                       max_new, new_ids):
+        """Deadline preemption: while the batch is full and the
+        admission tier holds a tighter-deadline candidate at the queue
+        head, ask the preemption policy for a victim among the resident
+        lanes, spill it, and admit into the freed slot.  Stops as soon
+        as the policy declines (no resident is loose enough) or the
+        admission guard defers the candidate anyway."""
+        pol = self.policy.preemption
+        out: List[Tuple[int, Request]] = []
+        evicted = 0
+        while (sched.has_pending() and evicted < self.batch
+               and all(s is not None for s in sched.slots)):
+            cand = sched.peek_next()
+            if cand is None:
+                break
+            victim = pol.select_victim(
+                cand, self._victim_candidates(sched, new_ids),
+                self.stats.steps)
+            if victim is None:
+                break
+            self._spill_victim(sched, victim, cache, dcache, state,
+                               max_new)
+            evicted += 1
+            got = sched.admit()
+            if not got:
+                break       # guard deferred: lane stays free for restore
+            out += got
+            new_ids |= {id(r) for _, r in got}
+        return out
 
     def _refill_arrays(self, admitted: List[Tuple[int, Request]]):
         """Host-side packing of a refill batch, shape-bucketed to bound
@@ -1799,6 +2163,13 @@ class ServingEngine:
                 if not dispatched:
                     wait = sched.next_arrival_in()
                     if wait is None and not sched.more_coming():
+                        if self._spills:
+                            # unreachable by construction: every free
+                            # slot is offered to the spill store at each
+                            # boundary before the loop can go idle
+                            raise RuntimeError(
+                                f"{len(self._spills)} spilled requests "
+                                "were never restored")
                         break
                     # gated-arrival gap: no dispatch, yield to the
                     # trainer; admission resumes via the normal
@@ -1807,7 +2178,10 @@ class ServingEngine:
                 continue
             with self.tracer.span("superstep.unpack"):
                 progressed = self._drain(prev, t0)
-            admitted = self._retire_and_admit(sched, on_complete)
+            n_restores0 = self.stats.restores
+            cache, dcache, state, max_new, admitted = \
+                self._overload_boundary(sched, on_complete, cache,
+                                        dcache, state, max_new)
             gap_tokens = 0
             if admitted and self.prefill_chunk:
                 # chunked: new pipelines; their first chunks dispatch in
@@ -1858,7 +2232,8 @@ class ServingEngine:
             # defensive stall guard: every drained superstep must either
             # commit rounds, retire requests, admit new ones, or move a
             # chunk pipeline forward
-            stall = 0 if (progressed or admitted or gap_tokens) \
+            stall = 0 if (progressed or admitted or gap_tokens
+                          or self.stats.restores > n_restores0) \
                 else stall + 1
             if stall > 4:
                 raise RuntimeError(
@@ -1955,7 +2330,7 @@ class ServingEngine:
                 self.extractor.ingest_packed(
                     rids, sig_np[0][r], sig_np[1][r], sig_np[2][r])
             self.stats.timeline.append({
-                "t": time.perf_counter() - t0, "spec": use_spec,
+                "t": self._clock() - t0, "spec": use_spec,
                 "accept_len": ell, "alpha": alpha,
                 "decision": decision.value, "busy_lanes": busy,
             })
@@ -2119,7 +2494,7 @@ class ServingEngine:
                     self.extractor.enabled = \
                         self.controller.collection_enabled
             self.stats.timeline.append({
-                "t": time.perf_counter() - t0, "spec": use_spec,
+                "t": self._clock() - t0, "spec": use_spec,
                 "accept_len": ell, "alpha": alpha,
                 "decision": decision.value, "busy_lanes": busy,
             })

@@ -123,6 +123,29 @@ class DeadlineAdmission(AdmissionPolicy):
         return best
 
 
+class WeightedEdfAdmission(DeadlineAdmission):
+    """Weighted earliest-deadline-first: EDF with a priority credit.
+
+    The effective deadline is ``deadline - weight * priority``, so a
+    high-priority request is treated as ``weight * priority`` service
+    units tighter than its nominal deadline (units are whatever the
+    workload measures deadlines in — executed rounds for the SLO/
+    overload benches).  With every priority equal this is exactly EDF;
+    the weight is the one tuning knob of the classic weighted-EDF
+    admission tier and the ordering the preemption policy's
+    victim/candidate comparison inherits."""
+
+    name = "wedf"
+
+    def __init__(self, lookahead: int = 64, weight: float = 1.0):
+        super().__init__(lookahead=lookahead)
+        self.weight = float(weight)
+
+    def _key(self, r: Request) -> Tuple[float, int]:
+        d = r.deadline if r.deadline is not None else math.inf
+        return (d - self.weight * r.priority, -r.priority)
+
+
 # ======================================================== commit policies
 class CommitPolicy:
     """Shapes chunked-refill pipelines and decides when they commit.
@@ -318,6 +341,142 @@ class SpeculationPolicy:
         return self.parked
 
 
+# ==================================================== shed policies
+class ShedPolicy:
+    """Load shedding for sustained overload: which *queued* requests to
+    drop instead of serving.  Consulted once per superstep boundary
+    with the arrived queue window; returned requests are finished with
+    zero tokens, flagged ``Request.shed``, and never re-admitted.
+    Deadline comparisons use the engine's executed-round clock
+    (``stats.steps``) — the same deterministic units the SLO benches
+    stamp deadlines in."""
+
+    name = "none"
+
+    def pick(self, queued: Sequence[Request],
+             now_round: int) -> List[Request]:
+        return []
+
+
+class ExpiredShed(ShedPolicy):
+    """Shed queued requests whose (round-unit) deadline already passed:
+    they cannot hit their SLO, so serving them only steals rounds from
+    requests that still can.  Requests without a deadline never
+    expire."""
+
+    name = "expired"
+
+    def pick(self, queued: Sequence[Request],
+             now_round: int) -> List[Request]:
+        return [r for r in queued
+                if r.deadline is not None and r.deadline < now_round]
+
+
+class QueueDepthShed(ShedPolicy):
+    """Bound the arrived-queue depth: when it exceeds ``depth``, shed
+    the loosest-deadline overflow (weighted-EDF order reversed) — the
+    classic drop-from-the-tail overload valve."""
+
+    name = "queue"
+
+    def __init__(self, depth: int = 64):
+        self.depth = max(int(depth), 1)
+
+    def pick(self, queued: Sequence[Request],
+             now_round: int) -> List[Request]:
+        over = len(queued) - self.depth
+        if over <= 0:
+            return []
+        loosest = sorted(
+            queued,
+            key=lambda r: (r.deadline if r.deadline is not None
+                           else math.inf, -r.priority),
+            reverse=True)
+        return loosest[:over]
+
+
+# ================================================= preemption policies
+class PreemptionPolicy:
+    """Decides whether a deferred tight-deadline candidate may evict a
+    resident lane (spill its caches + capture state to the host-side
+    ``core.paging.SpillStore``, free its pages, hand the lane over).
+
+    The fourth seam of the control plane, beside Admission / Commit /
+    Speculation.  Consulted at the superstep boundary after normal
+    admission, once per still-deferred candidate; ``select_victim``
+    returns the slot index to spill or None.  The engine restores
+    spilled requests into lanes as they free up (earliest effective
+    deadline first, competing with the queue), so an evicted request
+    resumes mid-stream — byte-identical to a never-evicted run.  The
+    base policy never preempts (the byte-parity default); it also owns
+    the composed ``ShedPolicy``, since shedding and preemption are the
+    two halves of one overload response."""
+
+    name = "none"
+
+    def __init__(self, shed: Optional[ShedPolicy] = None,
+                 max_evictions: int = 2, margin: float = 0.0):
+        self.shed = shed if shed is not None else ShedPolicy()
+        # per-request eviction cap: a loose request can only be bounced
+        # this many times before it becomes un-evictable (starvation
+        # guard — otherwise a sustained tight-deadline burst could
+        # spill/restore the same victim forever)
+        self.max_evictions = int(max_evictions)
+        # a victim's deadline must exceed the candidate's by at least
+        # this margin (round units) — spilling costs a restore prefill,
+        # so near-ties are not worth the churn
+        self.margin = float(margin)
+
+    @property
+    def enabled(self) -> bool:
+        return False
+
+    def select_victim(self, candidate: Request,
+                      residents: Sequence[Tuple[int, Request]],
+                      now_round: int) -> Optional[int]:
+        """Slot index (from ``residents``: (slot, request) pairs) to
+        spill for ``candidate``, or None to leave it queued."""
+        return None
+
+
+class DeadlinePreemption(PreemptionPolicy):
+    """Deadline-aware preemption: a deferred candidate with a tighter
+    deadline evicts the loosest-deadline resident, provided the victim
+    is at least ``margin`` rounds looser and under its eviction cap.
+    Residents without a deadline count as infinitely loose (batch
+    traffic yields to SLO traffic)."""
+
+    name = "deadline"
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    @staticmethod
+    def _loose(r: Request) -> Tuple[float, int]:
+        d = r.deadline if r.deadline is not None else math.inf
+        return (d, -r.priority)
+
+    def select_victim(self, candidate: Request,
+                      residents: Sequence[Tuple[int, Request]],
+                      now_round: int) -> Optional[int]:
+        if candidate.deadline is None:
+            return None          # no SLO to defend — wait in the queue
+        best = None              # (slot, request) of the loosest victim
+        for slot, r in residents:
+            if r.evictions >= self.max_evictions:
+                continue
+            if best is None or self._loose(r) > self._loose(best[1]):
+                best = (slot, r)
+        if best is None:
+            return None
+        loose = (best[1].deadline if best[1].deadline is not None
+                 else math.inf)
+        if loose <= candidate.deadline + self.margin:
+            return None          # not meaningfully looser — don't churn
+        return best[0]
+
+
 # ===================================================== composed policy
 def _default_speculation() -> SpeculationPolicy:
     return SpeculationPolicy()
@@ -336,12 +495,23 @@ class ServingPolicy:
     commit: CommitPolicy = dataclasses.field(default_factory=CohortCommit)
     speculation: SpeculationPolicy = dataclasses.field(
         default_factory=_default_speculation)
+    # overload response: preemption (victim selection for deferred
+    # tight-deadline candidates) + its composed shed policy.  The
+    # default never preempts and never sheds — byte-parity with the
+    # pre-overload engine.
+    preemption: PreemptionPolicy = dataclasses.field(
+        default_factory=PreemptionPolicy)
 
 
 # ====================================================== unified config
 ADMISSION_POLICIES = {"fifo": FifoAdmission, "priority": PriorityAdmission,
-                      "deadline": DeadlineAdmission}
+                      "deadline": DeadlineAdmission,
+                      "wedf": WeightedEdfAdmission}
 COMMIT_POLICIES = {"cohort": CohortCommit, "eager": EagerCommit}
+PREEMPT_POLICIES = {"none": PreemptionPolicy,
+                    "deadline": DeadlinePreemption}
+SHED_POLICIES = {"none": ShedPolicy, "expired": ExpiredShed,
+                 "queue": QueueDepthShed}
 
 
 @dataclasses.dataclass
@@ -390,6 +560,17 @@ class ServingConfig:
     # bitwise identical to the chain engine (tests/test_tree.py);
     # attention-mixer models only.
     tree_width: int = 0
+    # ---- overload response (superstep engine only; "none" = never)
+    # preempt="deadline" lets a deferred tight-deadline arrival evict
+    # the loosest resident lane (spill to the host SpillStore, restore
+    # when a lane frees — streams stay byte-identical); shed names the
+    # load-shedding policy for sustained overload ("expired" drops
+    # queued requests past their round-unit deadline, "queue" bounds
+    # the arrived-queue depth at shed_queue_depth, dropping loosest
+    # first).
+    preempt: str = "none"              # none | deadline
+    shed: str = "none"                 # none | expired | queue
+    shed_queue_depth: int = 64
     # ---- decoupled training
     reseed_window: int = 0
     # >0: deprioritize the background training thread at the OS
@@ -402,10 +583,14 @@ class ServingConfig:
         adm_cls = ADMISSION_POLICIES[self.admission]
         adm = (adm_cls() if adm_cls is FifoAdmission
                else adm_cls(lookahead=self.admission_lookahead))
+        shed_cls = SHED_POLICIES[self.shed]
+        shed = (shed_cls(depth=self.shed_queue_depth)
+                if shed_cls is QueueDepthShed else shed_cls())
         return ServingPolicy(
             admission=adm,
             commit=COMMIT_POLICIES[self.commit](),
             speculation=SpeculationPolicy(
                 drafter, park_patience=self.spec_park_patience,
                 probe_interval=self.spec_probe_interval,
-                tree_width=self.tree_width))
+                tree_width=self.tree_width),
+            preemption=PREEMPT_POLICIES[self.preempt](shed=shed))

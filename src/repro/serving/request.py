@@ -50,8 +50,17 @@ class Request:
     # engine-assigned sampling-stream id (admission ordinal): the
     # per-request PRNG fold-in key, identical for a given stream across
     # every scheduling policy — what makes sampled decoding
-    # scheduling-invariant
+    # scheduling-invariant.  Preemption spills/restores the sid (and
+    # the per-lane step counter), so a restored request keeps drawing
+    # from the same PRNG stream — sampled byte-parity across eviction
     sid: Optional[int] = None
+    # ---- overload accounting (preemption / load shedding)
+    # times this request was preempted off a lane into the SpillStore
+    evictions: int = 0
+    # set when a shed policy dropped the request instead of serving it;
+    # a shed request is finished with whatever it generated so far
+    # (usually nothing) and never re-admitted
+    shed: bool = False
 
     @property
     def done(self) -> bool:
@@ -81,9 +90,13 @@ class Request:
             return None
         return self.finish_t - self.arrival_t
 
-    def finish(self):
+    def finish(self, now: Optional[float] = None):
+        """Mark completion.  ``now`` lets the engine stamp ``finish_t``
+        from its injected clock (one clock domain for arrival/admit/
+        first-token/finish — fake-clock tests and latency stats depend
+        on it); bare calls fall back to the wall clock."""
         if self.finish_t is None:
-            self.finish_t = time.perf_counter()
+            self.finish_t = time.perf_counter() if now is None else now
             del self.generated[self.max_new_tokens:]
 
 

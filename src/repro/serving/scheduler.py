@@ -70,9 +70,10 @@ class Scheduler:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         # resource veto consulted per candidate during ``admit`` (paged
         # serving passes the page-pool guard): guard(candidate,
-        # already-accepted-this-round) -> False defers the candidate —
-        # and, since admissions this round only grow the footprint, the
-        # rest of the round with it
+        # already-accepted-this-round) -> False defers the candidate.
+        # Strict-order policies defer the rest of the round with it
+        # (admitting past the FIFO head would reorder); reordering
+        # policies skip it and keep probing the lookahead window
         self.admission_guard = admission_guard
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._queue: Deque[Request] = deque()
@@ -163,7 +164,32 @@ class Scheduler:
         """True while any slot is occupied or any request is admissible."""
         return any(s is not None for s in self.slots) or self.has_pending()
 
+    def queue_view(self) -> List[Request]:
+        """The arrived queue entries (window topped up first) — the
+        read-only view shed policies rank over."""
+        self._fill()
+        return [r for r in self._queue if self._arrived(r)]
+
+    def peek_next(self) -> Optional[Request]:
+        """The request ``admit`` would pick next, without removing it —
+        the preemption tier compares its deadline against resident
+        lanes' to decide whether evicting one is worth it."""
+        cands = self._admissible()
+        if not cands:
+            return None
+        pick = cands[self.policy.select(
+            [self._queue[j] for j in cands], self._now())]
+        return self._queue[pick]
+
     # ------------------------------------------------------------ slots
+    def retire(self, req: Request):
+        """Route one finished request through the completion path (the
+        sink when configured, else the ``completed`` list)."""
+        if self.sink is not None:
+            self.sink(req)
+        else:
+            self.completed.append(req)
+
     def release_finished(self) -> List[Request]:
         """Free every slot whose request has finished; returns them in
         slot order (the engine records latency stats before calling).
@@ -173,42 +199,93 @@ class Scheduler:
         for i, r in enumerate(self.slots):
             if r is not None and r.finish_t is not None:
                 self.slots[i] = None
-                if self.sink is not None:
-                    self.sink(r)
-                else:
-                    self.completed.append(r)
+                self.retire(r)
                 freed.append(r)
         return freed
+
+    def evict(self, slot: int) -> Request:
+        """Preemption: clear an *unfinished* resident from its slot
+        (the engine has already spilled its device state) and return
+        it.  The request stays live — it re-enters via the engine's
+        SpillStore restore path, never through the admission queue."""
+        req = self.slots[slot]
+        assert req is not None, f"evict of empty slot {slot}"
+        self.slots[slot] = None
+        if self.tracer.enabled:
+            self.tracer.instant("sched.evict", slot=slot, rid=req.rid)
+        return req
+
+    def shed(self, victims: List[Request]):
+        """Load shedding: drop queued requests (already finished/marked
+        by the engine) from the pending queue and route them through
+        the completion path."""
+        ids = {id(r) for r in victims}
+        if not ids:
+            return
+        self._queue = deque(r for r in self._queue if id(r) not in ids)
+        for r in victims:
+            self.retire(r)
+        if self.tracer.enabled:
+            self.tracer.instant("sched.shed", n=len(victims),
+                                rids=[r.rid for r in victims])
 
     def admit(self) -> List[Tuple[int, Request]]:
         """Fill free slots from the pending queue (admission order per
         the policy; gated on arrival time when enabled).  Returns the
         (slot, request) assignments made — the engine's refill batch.
         Each admitted request is stamped with ``admit_t`` (prefill
-        starts now — the TTFT clock origin).  An ``admission_guard``
-        (paged serving's page-pool check) can veto the round's next
-        candidate; the round then stops — deferred requests stay queued
-        in policy order and retry once capacity frees."""
+        starts now — the TTFT clock origin; the injected ``clock`` so
+        latency stats never mix clock domains under a fake clock).  An
+        ``admission_guard`` (paged serving's page-pool check) can veto
+        the round's next candidate: under a strict-order policy the
+        round then stops (FIFO order must not be violated by admitting
+        past the head); a reordering policy skips the vetoed candidate
+        and keeps trying the rest of its lookahead window, so one
+        over-wide pick can't head-of-line-block smaller arrived
+        candidates that would fit.  Deferred requests stay queued in
+        policy order and retry once capacity frees."""
         out = []
-        now = time.perf_counter()
+        now = self._clock()
         for i, r in enumerate(self.slots):
             if r is not None:
                 continue
-            cands = self._admissible()
-            if not cands:
+            req = self._pick_fitting(out)
+            if req is None:
                 break
-            pick = cands[self.policy.select(
-                [self._queue[j] for j in cands], self._now())]
-            req = self._queue[pick]
-            if (self.admission_guard is not None
-                    and not self.admission_guard(req,
-                                                 [q for _, q in out])):
-                break
-            del self._queue[pick]
             req.admit_t = now
             self.slots[i] = req
             self.admitted += 1
             out.append((i, req))
+        return self._admit_trace(out)
+
+    def _pick_fitting(self, accepted: List[Tuple[int, Request]]
+                      ) -> Optional[Request]:
+        """Policy-pick one admissible request that passes the admission
+        guard, removing it from the queue.  Strict-order policies get at
+        most one guard probe (a veto defers the round); reordering
+        policies retry the remaining candidates with the vetoed ones
+        excluded — bounded by the lookahead window the queue is already
+        capped at."""
+        vetoed: set = set()
+        while True:
+            cands = [j for j in self._admissible() if j not in vetoed]
+            if not cands:
+                return None
+            pick = cands[self.policy.select(
+                [self._queue[j] for j in cands], self._now())]
+            req = self._queue[pick]
+            if (self.admission_guard is not None
+                    and not self.admission_guard(
+                        req, [q for _, q in accepted])):
+                if self.policy.strict_order:
+                    return None
+                vetoed.add(pick)
+                continue
+            del self._queue[pick]
+            return req
+
+    def _admit_trace(self, out: List[Tuple[int, Request]]
+                     ) -> List[Tuple[int, Request]]:
         if out and self.tracer.enabled:
             self.tracer.instant("sched.admit", n=len(out),
                                 rids=[r.rid for _, r in out])

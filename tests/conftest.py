@@ -12,11 +12,16 @@ from repro.models.config import (ATTN, CROSS, FFN_GELU, FFN_MOE, FFN_SWIGLU,
 # the default 8 MB soft stack limit a big compile late in the full-tier
 # session segfaults the interpreter.  The main-thread stack grows on
 # demand against the soft limit, so raising it here (hard limit permits)
-# covers every compile the suite triggers.
+# covers every compile the suite triggers.  512 MB proved insufficient
+# once the suite grew past ~300 tests (the depth LLVM reaches scales
+# with how much the session has already compiled), so take the hard
+# limit outright — unlimited where the container allows it.
 _soft, _hard = resource.getrlimit(resource.RLIMIT_STACK)
 _want = 512 * 1024 * 1024
-if _soft != resource.RLIM_INFINITY and _soft < _want:
-    if _hard == resource.RLIM_INFINITY or _hard >= _want:
+if _soft != resource.RLIM_INFINITY:
+    if _hard == resource.RLIM_INFINITY:
+        resource.setrlimit(resource.RLIMIT_STACK, (_hard, _hard))
+    elif _hard >= _want and _soft < _want:
         resource.setrlimit(resource.RLIMIT_STACK, (_want, _hard))
 
 

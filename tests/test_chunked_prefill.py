@@ -124,6 +124,7 @@ def _valid_region_equal(one_shot, chunked, pad, lengths, seq_axis):
 
 
 # ------------------------------------------------------ op-level parity
+@pytest.mark.slow
 @settings(max_examples=5)
 @given(st.integers(1, 4), st.integers(0, 10 ** 6))
 def test_chunked_refill_op_parity(chunk_idx, seed):
@@ -232,9 +233,8 @@ def _serve(model, *, rounds, chunk, greedy, budgets=BUDGETS, lens=LENS,
     return [list(r.generated) for r in reqs], eng, reqs
 
 
-@pytest.mark.parametrize(
-    "greedy",
-    [True, pytest.param(False, marks=pytest.mark.slow)])
+@pytest.mark.slow
+@pytest.mark.parametrize("greedy", [True, False])
 def test_chunked_stream_matches_one_shot(model, greedy):
     """Full emitted streams, chunked vs legacy one-shot refill: byte
     identical — greedy and per-request-keyed sampled.  (chunk=32

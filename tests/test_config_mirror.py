@@ -62,7 +62,9 @@ def test_flat_fields_mirror_into_serving():
              "idle_wait_s": 0.25, "prefill_chunk": 16, "page_size": 8,
              "num_pages": 40, "share_prefix": False,
              "spec_park_patience": 6, "spec_probe_interval": 4,
-             "tree_width": 2, "reseed_window": 8, "trainer_threads": 2}
+             "tree_width": 2, "reseed_window": 8, "trainer_threads": 2,
+             "preempt": "deadline", "shed": "expired",
+             "shed_queue_depth": 9}
     assert set(probe) == set(TideConfig._SHARED_FIELDS), (
         "probe table out of date: update it alongside _SHARED_FIELDS")
     for name, value in probe.items():
@@ -101,6 +103,9 @@ def test_serve_flags_cover_every_serving_knob():
         "tree_width": (["--tree-width", "2"], 2),
         "reseed_window": (["--reseed-window", "8"], 8),
         "trainer_threads": (["--trainer-threads", "2"], 2),
+        "preempt": (["--preempt", "deadline"], "deadline"),
+        "shed": (["--shed", "expired"], "expired"),
+        "shed_queue_depth": (["--shed-queue-depth", "9"], 9),
     }
     missing = set(KNOBS) - set(flag_cases)
     assert not missing, (

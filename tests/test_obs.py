@@ -324,6 +324,7 @@ def _waves(n_waves=2, batch=2, seed=1):
              for _ in range(batch)] for _ in range(n_waves)]
 
 
+@pytest.mark.slow
 def test_system_snapshot_matches_summary():
     """`metrics.snapshot()` must agree with every counter the legacy
     ``summary()`` dict reports, across all four namespaces."""

@@ -338,6 +338,7 @@ def _parity_case(lens, budgets, seed, *, chunk=0, greedy=True, rounds=4,
     return eng
 
 
+@pytest.mark.slow
 @settings(max_examples=5)
 @given(st.integers(0, 1), st.integers(0, 1), st.integers(0, 10 ** 6))
 def test_paged_stream_parity_property(chunk_idx, greedy_idx, seed):
@@ -352,6 +353,7 @@ def test_paged_stream_parity_property(chunk_idx, greedy_idx, seed):
                  greedy=bool(greedy_idx))
 
 
+@pytest.mark.slow
 def test_paged_stream_parity_stepwise():
     """The per-step reference loop (superstep_rounds=0) takes the
     stepwise dispatch path — same parity contract."""
@@ -375,6 +377,7 @@ def test_paged_admission_defers_under_page_pressure():
     assert eng.stats.pages_peak <= 4
 
 
+@pytest.mark.slow
 def test_paged_prefix_sharing_hits_and_parity():
     """Requests sharing a long system prompt: chunked paged serving
     adopts the published prefix pages (registry hits, prefill row-token
@@ -399,13 +402,40 @@ def test_paged_prefix_sharing_hits_and_parity():
     assert eng.stats.prefix_tokens_saved > 0
 
 
-# ======================================================= config guards
-def test_paged_rejects_reseed_window():
+# ============================================= paged deploy re-seed
+@pytest.mark.slow
+def test_paged_reseed_deploy_stream_parity():
+    """reseed_window + paged serving compose (the old exclusivity is
+    lifted): the paged re-seed op rewrites resident lanes' draft rows
+    through their block-table rows in place.  A mid-stream deploy with
+    re-seed on a paged engine leaves greedy streams byte-identical to
+    the same deploy on a dense engine (and both to the deploy-free
+    run, since the target verifies every draft)."""
     cfg, params, dcfg, dparams = _get_model()
-    with pytest.raises(ValueError, match="reseed_window"):
-        ServingEngine(cfg, params, dcfg, dparams,
-                      config=ServingConfig(batch_size=2, max_len=96,
-                                           page_size=8, reseed_window=32))
+    draft_b = eagle.draft_init(dcfg, jax.random.key(99))
+
+    class _AfterN:
+        def __init__(self, n):
+            self.n, self.polls = n, 0
+
+        def __call__(self):
+            from repro.training.service import DraftVersion
+            self.polls += 1
+            return (DraftVersion(1, draft_b, 0.9)
+                    if self.polls >= self.n else None)
+
+    lens, budgets = [6, 9, 5, 8], [16, 12, 14, 10]
+    dense = _streams(_cached_engine(greedy=True, reseed_window=12),
+                     _requests(cfg, lens, budgets))
+
+    eng = _cached_engine(greedy=True, reseed_window=12, page_size=8)
+    eng.deploy_source = _AfterN(3)
+    paged = _streams(eng, _requests(cfg, lens, budgets))
+    assert eng.stats.deploys == 1 and eng.stats.reseeds == 1
+    assert paged == dense
+
+
+# ======================================================= config guards
 
 
 def test_paged_rejects_indivisible_max_len():

@@ -163,6 +163,7 @@ def test_edf_gated_arrivals_skip_unarrived():
 
 
 # ============================== admission-order stream invariance
+@pytest.mark.slow
 @settings(max_examples=4)
 @given(st.integers(0, 10 ** 6))
 def test_admission_permutation_stream_invariance(seed):
@@ -193,6 +194,7 @@ def test_admission_permutation_stream_invariance(seed):
 
 
 # ======================================= commit policy: eager vs cohort
+@pytest.mark.slow
 def test_eager_vs_cohort_commit(model):
     """A short prompt co-admitted (mid-decode) with a long-tail sibling:
     cohort commit holds its lane until the long pipeline finishes —
@@ -278,6 +280,7 @@ def test_park_resume_unit():
         SpeculationPolicy(None, park_patience=2).prepare(4)
 
 
+@pytest.mark.slow
 def test_park_engine_integration(model):
     """End-to-end park: a drafter whose break-even threshold the
     observed acceptance can never clear gates speculation off, the
@@ -347,6 +350,7 @@ def test_park_stepwise_mode(model):
 
 
 # ================================================ deprecated-kwarg shims
+@pytest.mark.slow
 def test_deprecated_kwargs_warn_and_match_policy_path(model):
     """The legacy control kwargs still work (DeprecationWarning) and
     are byte-identical to the new default ServingPolicy/ServingConfig

@@ -93,6 +93,38 @@ def test_channel_wait_and_close_wakes_consumer():
     assert not t2.is_alive(), "close() must wake blocked waiters"
 
 
+def test_channel_add_after_close_drops_and_counts():
+    """The shutdown bugfix: a straggling producer (a superstep unpacked
+    after service shutdown) must not grow a ring nobody drains — the
+    closed channel drops the batch and counts it, and the drained set
+    stays exactly the pre-close buffer."""
+    ch = SignalChannel(capacity=8)
+    ch.add(_batch(0))
+    ch.add(_batch(1))
+    ch.close()
+    ch.add(_batch(2))            # post-close: dropped, not buffered
+    ch.add(_batch(3))
+    assert ch.peek_count() == 2
+    assert ch.rejected_after_close == 2
+    assert ch.stats()["rejected_after_close"] == 2
+    kept = [int(b.tokens[0]) for b in ch.drain()]
+    assert kept == [0, 1], "drain must see exactly the pre-close batches"
+    assert ch.drain() == []      # deterministic: later drains are empty
+    ch.add(_batch(4))
+    assert ch.drain() == [] and ch.rejected_after_close == 3
+    # total_added never counts rejected batches
+    assert ch.total_added == 2
+
+
+def test_channel_reset_clears_rejection_counter():
+    ch = SignalChannel(capacity=4)
+    ch.close()
+    ch.add(_batch(0))
+    assert ch.rejected_after_close == 1
+    ch.reset()
+    assert ch.rejected_after_close == 0 and ch.peek_count() == 0
+
+
 def test_service_rejects_starving_channel(pretrained):
     """A per-cycle threshold the bounded channel can never buffer must
     fail loudly at construction, not silently never train."""

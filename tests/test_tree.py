@@ -353,6 +353,7 @@ def _parity_case(lens, budgets, seed, *, greedy=True, rounds=4,
     assert chain == tree
 
 
+@pytest.mark.slow
 @settings(max_examples=5)
 @given(st.integers(0, 1), st.integers(0, 1), st.integers(0, 10 ** 6))
 def test_tree_width1_stream_parity_property(greedy_idx, paged_idx, seed):
@@ -366,6 +367,7 @@ def test_tree_width1_stream_parity_property(greedy_idx, paged_idx, seed):
                  page_size=8 * paged_idx)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("greedy", [True, False])
 def test_tree_width1_stream_parity_stepwise(greedy):
     """The per-step reference loop (superstep_rounds=0) takes the
@@ -374,6 +376,7 @@ def test_tree_width1_stream_parity_stepwise(greedy):
                  rounds=0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("greedy", [True, False])
 def test_tree_width2_paged_equals_dense(greedy):
     """Wider trees: paged streams byte-identical to dense, zero pages

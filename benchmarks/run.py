@@ -51,6 +51,7 @@ MODULES = [
     ("overload", "benchmarks.bench_overload"),
     ("paged", "benchmarks.bench_paged"),
     ("tree", "benchmarks.bench_tree"),
+    ("fleet", "benchmarks.bench_fleet"),
     ("table5", "benchmarks.bench_profile_latency"),
     ("fig4", "benchmarks.bench_beta_ratio"),
     ("table1", "benchmarks.bench_storage"),
@@ -83,7 +84,11 @@ MODULES = [
 # gate (accepted draft tokens per target pass >= 1.2x the linear chain
 # at equal passes, tokens/s uplift reported with a conservative CPU
 # floor, width=1 engine streams byte-identical to the chain, zero
-# leaked pages with paging on) + the kernel oracles.
+# leaked pages with paging on) + the disaggregation gate (N=4 replica
+# fleet >= 3x single-replica critical-path rounds with byte-identical
+# streams and full bus fan-out, out-of-process trainer drain-parity
+# byte-identical with no added serving-path syncs, trainer-kill
+# degradation completes every request) + the kernel oracles.
 # ``python -m benchmarks.run --smoke``.
 SMOKE_MODULES = [
     ("hotloop", "benchmarks.bench_hotloop"),
@@ -93,6 +98,7 @@ SMOKE_MODULES = [
     ("overload", "benchmarks.bench_overload"),
     ("paged", "benchmarks.bench_paged"),
     ("tree", "benchmarks.bench_tree"),
+    ("fleet", "benchmarks.bench_fleet"),
     ("kernels", "benchmarks.bench_kernels"),
 ]
 
@@ -113,6 +119,13 @@ BASELINE_KEYS = {
     "overload/preempt/sampled": ["preemptions", "restores", "parity"],
     "overload/preempt/paged": ["preemptions", "restores",
                                "spilled_pages", "parity"],
+    # fleet keys are structural: parity flags, the replica count, the
+    # counter-derived sync ratio (~1.0 by construction), and the gated
+    # round-domain speedup (trace-design-invariant up to draft accept
+    # rate, hence the wider tolerance)
+    "fleet/ratio": ["round_speedup", "parity", "replicas"],
+    "fleet/remote": ["parity", "sync_ratio", "trainer_failures"],
+    "fleet/kill": ["parity", "trainer_failures"],
 }
 # per-key relative tolerance overrides written into the baseline file:
 # the p99/sync ratios sit near 1.0 by construction but their exact
@@ -120,6 +133,8 @@ BASELINE_KEYS = {
 BASELINE_TOLS = {
     "overload/preempt/ratio:p99_ratio": 0.15,
     "overload/preempt/ratio:sync_ratio": 0.15,
+    "fleet/ratio:round_speedup": 0.2,
+    "fleet/remote:sync_ratio": 0.05,
 }
 BASELINE_PATH = "benchmarks/BENCH_baseline.json"
 HISTORY_PATH = "benchmarks/BENCH_history.jsonl"

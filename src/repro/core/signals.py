@@ -27,6 +27,67 @@ class SignalBatch:
     tokens: np.ndarray      # (S,)
 
 
+# One schema for every serialized signal container: the offline .npz
+# spill shards (``SignalStore.spill``/``load_shard``) and the fleet wire
+# frames (``repro.fleet.wire.signals_payload``) both carry exactly this
+# key layout, so a spilled shard can be replayed over the wire and a
+# captured wire payload can be written down as a shard.  Per-batch keys
+# (instead of one stacked array) keep the round trip lossless: window
+# lengths may be ragged (residual windows at stream end) and dtypes are
+# preserved exactly as captured.
+SIGNAL_SCHEMA = "tide-signals/v1"
+
+
+def pack_batches(batches: List[SignalBatch]) -> Dict[str, np.ndarray]:
+    """Serialize batches into a flat ``{key: array}`` dict (the shared
+    shard/wire schema).  Lossless: per-batch arrays keep their own
+    shapes and dtypes; ``__schema__``/``__n__`` tag and count them."""
+    out: Dict[str, np.ndarray] = {
+        "__schema__": np.asarray(SIGNAL_SCHEMA),
+        "__n__": np.asarray(len(batches), np.int64),
+    }
+    for i, b in enumerate(batches):
+        out[f"feats_{i:06d}"] = np.asarray(b.feats)
+        out[f"tokens_{i:06d}"] = np.asarray(b.tokens)
+    return out
+
+
+def unpack_batches(arrays) -> List[SignalBatch]:
+    """Inverse of ``pack_batches`` (accepts any mapping of arrays — an
+    open .npz file or a plain dict).  Validates the schema tag and that
+    every counted batch is present; also accepts the legacy pre-schema
+    stacked-shard layout (``feats``/``tokens`` only) for old shards."""
+    keys = set(getattr(arrays, "files", None) or arrays.keys())
+    if "__schema__" not in keys:
+        if not {"feats", "tokens"} <= keys:
+            raise ValueError(f"not a signal shard (keys {sorted(keys)})")
+        feats, tokens = arrays["feats"], arrays["tokens"]   # legacy stack
+        return [SignalBatch(feats=np.asarray(feats[i]),
+                            tokens=np.asarray(tokens[i]))
+                for i in range(feats.shape[0])]
+    schema = str(np.asarray(arrays["__schema__"]))
+    if schema != SIGNAL_SCHEMA:
+        raise ValueError(f"unknown signal schema {schema!r} "
+                         f"(expected {SIGNAL_SCHEMA!r})")
+    n = int(np.asarray(arrays["__n__"]))
+    out = []
+    for i in range(n):
+        fk, tk = f"feats_{i:06d}", f"tokens_{i:06d}"
+        if fk not in keys or tk not in keys:
+            raise ValueError(f"truncated signal shard: batch {i}/{n} "
+                             "missing")
+        out.append(SignalBatch(feats=np.asarray(arrays[fk]),
+                               tokens=np.asarray(arrays[tk])))
+    return out
+
+
+def load_shard(path: str) -> List[SignalBatch]:
+    """Load one spilled .npz shard back into batches (lossless inverse
+    of ``SignalStore.spill``; legacy stacked shards still load)."""
+    with np.load(path, allow_pickle=False) as data:
+        return unpack_batches(data)
+
+
 class SignalStore:
     """The 'shared storage' between the serving and training engines.
 
@@ -67,18 +128,28 @@ class SignalStore:
             return out
 
     def spill(self, tag: str):
-        """Flush the buffer to an .npz shard (offline-training parity)."""
+        """Flush the buffer to a schema-tagged .npz shard
+        (offline-training parity).  Lossless and versioned: the shard
+        uses the ``pack_batches`` schema (per-batch keys, exact shapes
+        and dtypes, ``__schema__`` tag), so ragged residual windows
+        survive and ``load_shard``/``load`` restore the batches
+        bit-exactly."""
         if not self.spill_dir:
             return None
         batches = self.drain()
         if not batches:
             return None
         path = os.path.join(self.spill_dir, f"signals_{tag}.npz")
-        np.savez_compressed(
-            path,
-            feats=np.stack([b.feats for b in batches]),
-            tokens=np.stack([b.tokens for b in batches]))
+        np.savez_compressed(path, **pack_batches(batches))
         return path
+
+    def load(self, path: str) -> int:
+        """Re-ingest a spilled shard (inverse of ``spill``).  Returns
+        the number of batches added."""
+        batches = load_shard(path)
+        for b in batches:
+            self.add(b)
+        return len(batches)
 
 
 class SignalExtractor:

@@ -27,6 +27,23 @@ waits on training.  Every control decision of the paper (Algorithm 1
 collection gating, deploy-if-improved) is identical in both modes; the
 asynchrony is an interface property.
 
+Disaggregation (``TideConfig(fleet=FleetConfig(...))``, repro/fleet,
+docs/disaggregation.md): with ``fleet.trainer_endpoint`` set, the same
+two seams cross a *process* boundary — signals flow through a
+``RemoteSignalChannel`` (identical bounded drop-oldest ring, drained
+onto a socket off-path) to a ``TrainingService`` running in its own
+process on its own XLA client (``repro.fleet.trainer_main``), and
+published drafts come back as wire frames into the same lock-free
+deploy slot the engine already polls.  Both training modes survive the
+move: sync mode's ``drain()`` becomes a wire barrier whose ack is
+ordered after every DRAFT frame it caused (byte-identical streams),
+async mode stays zero-sync.  Trainer death degrades serving to the
+last published draft (``summary()['trainer_failures']``), never a
+hang.  ``fleet.replicas > 0`` scales out to a data-parallel engine
+fleet behind a draft-version bus + front-end router — that topology
+is served by ``repro.fleet.router.ServingFleet``; TideSystem itself
+stays single-engine.
+
 Serving control plane: all runtime scheduling decisions (admission
 order, chunk-pipeline commit, the Eq. 5 speculate-vs-plain gate and
 its park/resume control) are delegated to a composed
@@ -86,6 +103,7 @@ from repro.core.adaptive import AdaptiveDrafter, LatencyProfile
 from repro.core.controller import TrainingController
 from repro.core.signals import SignalExtractor
 from repro.core.transport import SignalChannel, pick_training_device
+from repro.fleet import FleetConfig
 from repro.models.config import ModelConfig
 from repro.obs import ObsConfig
 from repro.obs.metrics import MetricsRegistry
@@ -158,6 +176,14 @@ class TideConfig:
     #      Not a ServingConfig knob: the engine takes the built
     #      tracer/recorder as collaborators, never a config field.
     obs: Optional[ObsConfig] = None
+    # ---- disaggregation (repro/fleet; docs/disaggregation.md).
+    #      fleet.trainer_endpoint moves the TrainingService out of
+    #      process over the fleet wire protocol (TideSystem handles
+    #      this transparently: same sync/async modes, same summary);
+    #      fleet.replicas > 0 selects the data-parallel replica fleet,
+    #      served through repro.fleet.router.ServingFleet (TideSystem
+    #      itself stays single-engine).
+    fleet: Optional[FleetConfig] = None
     serving: Optional[ServingConfig] = None
 
     # knobs shared (by name) with ServingConfig: assembled into one
@@ -214,37 +240,68 @@ class TideSystem:
         self.obs = tide_cfg.obs if tide_cfg.obs is not None else ObsConfig()
         self.metrics = MetricsRegistry()
         self.tracer, self.recorder = self.obs.build()
-        train_device = (pick_training_device()
-                        if tide_cfg.async_train else None)
-        serve_device = jax.devices()[0] if train_device is not None else None
-        # the channel must be able to buffer at least one cycle's worth
-        # of windows or training starves behind the drop-oldest bound
-        self.channel = SignalChannel(
-            capacity=max(tide_cfg.channel_capacity, tide_cfg.n_threshold),
-            device=train_device)
-        self.store = self.channel     # back-compat alias (shared storage)
-        self.extractor = SignalExtractor(self.channel,
-                                         window=tide_cfg.signal_window)
         self.controller = TrainingController(
             n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
             n_init=4)
         drafter = None
         if tide_cfg.adaptive_spec and profile is not None:
             drafter = AdaptiveDrafter(profile, gamma=tide_cfg.gamma)
-        self.trainer = DraftTrainer(cfg, self.dcfg, params["embed"])
-        self.gate = DraftDeployGate(dparams)
-        self.service = TrainingService(
-            self.trainer, self.gate, self.channel,
-            controller=self.controller,
-            selective=tide_cfg.selective_training,
-            n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
-            signal_window=tide_cfg.signal_window,
-            train_epochs=tide_cfg.train_epochs,
-            train_min_steps=tide_cfg.train_min_steps, seed=tide_cfg.seed,
-            device=train_device, publish_device=serve_device,
-            trainer_threads=tide_cfg.trainer_threads,
-            engine_steps_fn=lambda: self.engine.stats.steps,
-            tracer=self.tracer, registry=self.metrics)
+        # --- training stack: in-process (thread / submesh) or
+        # out-of-process over the fleet wire (docs/disaggregation.md).
+        # Both expose the same poll/drain/reset/close surface, so every
+        # serving-side mode below is transport-agnostic.
+        remote = (tide_cfg.fleet is not None
+                  and tide_cfg.fleet.trainer_endpoint is not None)
+        if remote:
+            from repro.fleet.remote import RemoteTrainingService
+            self.service = RemoteTrainingService(
+                tide_cfg.fleet.trainer_endpoint,
+                tcfg=cfg, dcfg=self.dcfg,
+                embed_params=params["embed"], dparams0=dparams,
+                n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
+                signal_window=tide_cfg.signal_window,
+                train_epochs=tide_cfg.train_epochs,
+                train_min_steps=tide_cfg.train_min_steps,
+                seed=tide_cfg.seed, async_train=tide_cfg.async_train,
+                channel_capacity=max(tide_cfg.channel_capacity,
+                                     tide_cfg.n_threshold),
+                controller=self.controller,
+                selective=tide_cfg.selective_training,
+                engine_steps_fn=lambda: self.engine.stats.steps,
+                tracer=self.tracer, registry=self.metrics)
+            self.channel = self.service.channel
+            self.trainer = None        # lives in the trainer process
+            self.gate = self.service.gate   # serving-side version mirror
+        else:
+            train_device = (pick_training_device()
+                            if tide_cfg.async_train else None)
+            serve_device = (jax.devices()[0]
+                            if train_device is not None else None)
+            # the channel must be able to buffer at least one cycle's
+            # worth of windows or training starves behind the
+            # drop-oldest bound
+            self.channel = SignalChannel(
+                capacity=max(tide_cfg.channel_capacity,
+                             tide_cfg.n_threshold),
+                device=train_device)
+            self.trainer = DraftTrainer(cfg, self.dcfg, params["embed"])
+            self.gate = DraftDeployGate(dparams)
+            self.service = TrainingService(
+                self.trainer, self.gate, self.channel,
+                controller=self.controller,
+                selective=tide_cfg.selective_training,
+                n_threshold=tide_cfg.n_threshold * tide_cfg.signal_window,
+                signal_window=tide_cfg.signal_window,
+                train_epochs=tide_cfg.train_epochs,
+                train_min_steps=tide_cfg.train_min_steps,
+                seed=tide_cfg.seed,
+                device=train_device, publish_device=serve_device,
+                trainer_threads=tide_cfg.trainer_threads,
+                engine_steps_fn=lambda: self.engine.stats.steps,
+                tracer=self.tracer, registry=self.metrics)
+        self.store = self.channel     # back-compat alias (shared storage)
+        self.extractor = SignalExtractor(self.channel,
+                                         window=tide_cfg.signal_window)
         self.events = self.service.events
         # the engine consumes one unified ServingConfig + the composed
         # ServingPolicy it names (re-seed only makes sense with the
@@ -381,6 +438,7 @@ class TideSystem:
             "train_cycles": len([e for e in self.events
                                  if e["kind"] == "train_cycle"]),
             "deployed": self.gate.version,
+            "trainer_failures": getattr(self.service, "failures", 0),
             "signals_collected": self.channel.total_added,
             "signal_bytes": self.channel.total_bytes,
             "signals_dropped": self.channel.dropped,

@@ -17,7 +17,12 @@ one device, ``pick_training_device`` carves a training submesh with the
 ``core/hetero`` allocation model and the channel ``device_put``s each
 batch onto the trainer's device as it is enqueued — the copy happens
 asynchronously, off the serving path, and the train loop never touches
-serving-device memory.
+serving-device memory.  When the trainer lives in another *process*
+(``repro.fleet``), ``RemoteSignalChannel`` subclasses this channel: the
+same bounded drop-oldest ring becomes the socket send queue (the
+``_prepare`` hook skips device placement) and a sender thread frames
+batches over the wire, so the serving-path contract — never block,
+never sync — is identical in-process and out.
 """
 from __future__ import annotations
 
@@ -67,6 +72,20 @@ class SignalChannel(SignalStore):
         self._cond = threading.Condition(self._lock)
 
     # ------------------------------------------------------------- produce
+    def _prepare(self, batch: SignalBatch) -> SignalBatch:
+        """Producer-side placement hook, run outside the lock.  The base
+        channel ``device_put``s onto the trainer's device (async enqueue
+        — the serving thread never blocks on the copy); subclasses
+        override to stage for other transports (e.g. the fleet's
+        ``RemoteSignalChannel`` keeps batches as host arrays for the
+        socket sender)."""
+        if self.device is None:
+            return batch
+        import jax
+        return SignalBatch(
+            feats=jax.device_put(batch.feats, self.device),
+            tokens=jax.device_put(batch.tokens, self.device))
+
     def add(self, batch: SignalBatch):
         if self.closed:
             # a closed channel has no consumer left — buffering would
@@ -76,13 +95,7 @@ class SignalChannel(SignalStore):
             with self._cond:
                 self.rejected_after_close += 1
             return
-        if self.device is not None:
-            # async H2D/D2D enqueue — the serving thread never blocks on
-            # the copy; the arrays materialize on the trainer's device
-            import jax
-            batch = SignalBatch(
-                feats=jax.device_put(batch.feats, self.device),
-                tokens=jax.device_put(batch.tokens, self.device))
+        batch = self._prepare(batch)
         with self._cond:
             if self.closed:   # close() raced the device_put above
                 self.rejected_after_close += 1

@@ -1,0 +1,59 @@
+"""Disaggregated serving: out-of-process trainer + engine replica fleet.
+
+The paper's heterogeneous-cluster story maps the decoupled serving and
+training engines onto *different* machines: one continuously-updating
+draft trainer amortized across N data-parallel serving replicas.  This
+package is that production shape:
+
+- ``wire``         length-prefixed, versioned frame codec carrying
+                   ``SignalBatch`` tensors and ``DraftVersion`` payloads
+                   (one schema with ``SignalStore.spill``'s .npz shards);
+- ``remote``       ``RemoteSignalChannel`` / ``RemoteTrainingService`` —
+                   the serving-side endpoints keeping the engine's
+                   ``SignalChannel`` and ``deploy_source`` interfaces
+                   (zero serving-path syncs, drop-oldest backpressure
+                   over the socket);
+- ``trainer_main`` the out-of-process trainer entrypoint
+                   (``python -m repro.fleet.trainer_main``) running
+                   ``TrainingService`` on its own XLA client;
+- ``bus``          draft-version fan-out to N replica subscribers;
+- ``router``       front-end request router + ``ServingFleet`` running
+                   N data-parallel ``ServingEngine`` replicas off one
+                   trainer.
+
+``FleetConfig`` lives here (and only here) so ``core.tide`` can accept
+``TideConfig(fleet=...)`` without importing any socket/subprocess
+machinery until a fleet is actually requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Disaggregation knobs (CLI: ``--fleet-replicas``,
+    ``--trainer-endpoint``, ``--fleet-route``).
+
+    ``replicas=0`` (default) means no fleet — single engine, in-process
+    trainer; ``trainer_endpoint`` alone moves training out of process
+    for a single engine.  ``trainer_endpoint`` accepts
+    ``spawn`` (fork a trainer subprocess on a private unix socket),
+    ``unix:/path`` or ``tcp:host:port`` (connect to a running
+    ``repro.fleet.trainer_main``)."""
+    replicas: int = 0
+    trainer_endpoint: Optional[str] = None
+    route: str = "least"     # "least" (least-loaded) | "rr" (round-robin)
+
+    def __post_init__(self):
+        if self.replicas < 0:
+            raise ValueError(f"fleet replicas must be >= 0, "
+                             f"got {self.replicas}")
+        if self.route not in ("least", "rr"):
+            raise ValueError(f"unknown fleet route {self.route!r} "
+                             "(expected 'least' or 'rr')")
+
+    @property
+    def enabled(self) -> bool:
+        return self.replicas > 0 or self.trainer_endpoint is not None

@@ -1,0 +1,273 @@
+"""Front-end router + data-parallel serving fleet.
+
+One trainer amortized across N ``ServingEngine`` replicas — the
+production shape of the paper's disaggregation story.  The
+``FleetRouter`` load-balances an arrival trace across replicas
+deterministically (cost-estimate least-loaded by default, so the
+round-domain benchmarks reproduce exactly); ``ServingFleet`` wires the
+shared trainer stack (in-process ``TrainingService`` or out-of-process
+``RemoteTrainingService``), a ``DraftVersionBus`` fanning every
+published draft out to all replicas, and N engines that share one set
+of compiled step functions (``ServingEngine.adopt_compiled`` — XLA
+traces once per fleet, not once per replica).
+
+Per-replica determinism: greedy token streams are draft- and
+scheduling-invariant (the target verifies every draft token), so a
+request's stream is byte-identical whether it lands on replica 0 of 1
+or replica 3 of 8 — the property the drain-parity gates in
+``benchmarks/bench_fleet.py`` pin.
+
+On a single host the replicas serve *serially* (one XLA client, shared
+cores — concurrent engines would just timeslice), so fleet wall-clock
+is modeled, not measured: per-replica wall and executed rounds are
+tracked separately and ``summary()`` reports the aggregate over
+``max``-of-replicas, the bound a true data-parallel deployment sees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.checkpoint.ckpt import DraftDeployGate
+from repro.core import eagle
+from repro.core.adaptive import AdaptiveDrafter, LatencyProfile
+from repro.core.controller import TrainingController
+from repro.core.signals import SignalExtractor
+from repro.core.transport import SignalChannel
+from repro.fleet import FleetConfig
+from repro.fleet.bus import DraftVersionBus
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.training.draft_trainer import DraftTrainer
+from repro.training.service import TrainingService
+
+
+def request_cost(req: Request) -> float:
+    """Deterministic per-request work estimate for load balancing:
+    decode rounds scale with the token budget, prefill with prompt
+    width (8 = the refill shape bucket)."""
+    return len(req.prompt) / 8.0 + float(req.max_new_tokens)
+
+
+class FleetRouter:
+    """Deterministic request→replica assignment.
+
+    ``least``: cost-estimate least-loaded (ties to the lowest replica
+    index), the default — balances mixed prompt/budget traces so no
+    replica becomes the fleet's critical path.  ``rr``: round-robin,
+    the oblivious baseline."""
+
+    def __init__(self, n: int, policy: str = "least"):
+        if n < 1:
+            raise ValueError(f"router needs >= 1 replica, got {n}")
+        if policy not in ("least", "rr"):
+            raise ValueError(f"unknown route policy {policy!r}")
+        self.n = n
+        self.policy = policy
+        self.load = [0.0] * n
+        self.assigned = [0] * n
+        self._rr = 0
+
+    def assign(self, req: Request) -> int:
+        if self.policy == "rr":
+            idx = self._rr % self.n
+            self._rr += 1
+        else:
+            idx = min(range(self.n), key=lambda i: (self.load[i], i))
+        self.load[idx] += request_cost(req)
+        self.assigned[idx] += 1
+        return idx
+
+    def split(self, requests: Sequence[Request]) -> List[List[Request]]:
+        """Shard a trace, preserving arrival order within each shard."""
+        shards: List[List[Request]] = [[] for _ in range(self.n)]
+        for req in requests:
+            shards[self.assign(req)].append(req)
+        return shards
+
+
+class ServingFleet:
+    """N data-parallel serving replicas fed by one shared trainer.
+
+    Mirrors ``TideSystem``'s wiring (channel → service → deploy
+    pickup) with two substitutions: published drafts fan out through a
+    ``DraftVersionBus`` (each replica subscribes; its subscription IS
+    its ``deploy_source``), and when
+    ``TideConfig.fleet.trainer_endpoint`` is set the trainer stack is a
+    ``RemoteTrainingService`` in another process.  Signals from every
+    replica funnel into the one shared channel — N replicas' traffic
+    amortizes one trainer, the point of the topology."""
+
+    def __init__(self, cfg, params, tide_cfg,
+                 profile: Optional[LatencyProfile] = None, dparams=None):
+        fleet = tide_cfg.fleet if tide_cfg.fleet is not None \
+            else FleetConfig(replicas=1)
+        self.fleet_cfg = fleet
+        self.n = max(fleet.replicas, 1)
+        self.cfg = cfg
+        self.tcfg = tide_cfg
+        self.dcfg = eagle.draft_config(cfg)
+        if dparams is None:
+            dparams = eagle.draft_init(self.dcfg,
+                                       jax.random.key(tide_cfg.seed + 7))
+        self._dparams0 = dparams
+        self.async_train = tide_cfg.async_train
+        n_threshold = tide_cfg.n_threshold * tide_cfg.signal_window
+        self.controller = TrainingController(n_threshold=n_threshold,
+                                             n_init=4)
+        self.controller.collection_enabled = True
+
+        if fleet.trainer_endpoint is not None:
+            from repro.fleet.remote import RemoteTrainingService
+            self.service = RemoteTrainingService(
+                fleet.trainer_endpoint, tcfg=cfg, dcfg=self.dcfg,
+                embed_params=params["embed"], dparams0=dparams,
+                n_threshold=n_threshold,
+                signal_window=tide_cfg.signal_window,
+                train_epochs=tide_cfg.train_epochs,
+                train_min_steps=tide_cfg.train_min_steps,
+                seed=tide_cfg.seed, async_train=tide_cfg.async_train,
+                channel_capacity=max(tide_cfg.channel_capacity,
+                                     tide_cfg.n_threshold),
+                controller=self.controller,
+                selective=tide_cfg.selective_training,
+                engine_steps_fn=self._total_steps)
+            self.channel = self.service.channel
+            self.gate = self.service.gate
+            self.trainer = None
+        else:
+            self.channel = SignalChannel(
+                capacity=max(tide_cfg.channel_capacity,
+                             tide_cfg.n_threshold))
+            self.trainer = DraftTrainer(cfg, self.dcfg, params["embed"])
+            self.gate = DraftDeployGate(dparams)
+            self.service = TrainingService(
+                self.trainer, self.gate, self.channel,
+                controller=self.controller,
+                selective=tide_cfg.selective_training,
+                n_threshold=n_threshold,
+                signal_window=tide_cfg.signal_window,
+                train_epochs=tide_cfg.train_epochs,
+                train_min_steps=tide_cfg.train_min_steps,
+                seed=tide_cfg.seed)
+        self.bus = DraftVersionBus(source=self.service.poll)
+        self.router = FleetRouter(self.n, fleet.route)
+        self.events = self.service.events
+
+        scfg = dataclasses.replace(
+            tide_cfg.serving,
+            reseed_window=(tide_cfg.reseed_window if tide_cfg.async_train
+                           else 0))
+        self.extractors: List[SignalExtractor] = []
+        self.engines: List[ServingEngine] = []
+        self.subs = []
+        for i in range(self.n):
+            extractor = SignalExtractor(self.channel,
+                                        window=tide_cfg.signal_window)
+            sub = self.bus.subscribe(f"replica{i}")
+            drafter = (AdaptiveDrafter(profile, gamma=tide_cfg.gamma)
+                       if tide_cfg.adaptive_spec and profile is not None
+                       else None)
+            engine = ServingEngine(
+                cfg, params, self.dcfg, dparams, config=scfg,
+                policy=scfg.make_policy(drafter),
+                controller=(self.controller
+                            if tide_cfg.selective_training else None),
+                extractor=extractor,
+                deploy_source=(sub if tide_cfg.async_train else None))
+            if i > 0:
+                engine.adopt_compiled(self.engines[0])
+            self.extractors.append(extractor)
+            self.engines.append(engine)
+            self.subs.append(sub)
+        if tide_cfg.async_train:
+            self.service.start()
+
+    def _total_steps(self) -> int:
+        return sum(e.stats.steps for e in getattr(self, "engines", []))
+
+    # ------------------------------------------------------------ serving
+    def serve(self, requests: Sequence[Request]) -> List[Request]:
+        """Route the trace across replicas and serve every shard.
+
+        Single-host execution is serial (see module docstring) — each
+        replica runs its shard to completion with the standard stream
+        loop; in sync-training mode every replica drains the shared
+        trainer at its request-completion boundaries and each engine
+        picks published drafts up from its bus subscription (the same
+        pickup protocol as ``TideSystem._drain_train``)."""
+        shards = self.router.split(list(requests))
+        done: List[Request] = []
+        for engine, sub, shard in zip(self.engines, self.subs, shards):
+            if not shard:
+                continue
+            engine._poll_deploy(sub)   # deploys won while others served
+            on_complete = None
+            if not self.async_train:
+                def on_complete(_req=None, engine=engine, sub=sub):
+                    self.service.drain()
+                    engine._poll_deploy(sub)
+            done.extend(engine.serve_stream(shard,
+                                            on_complete=on_complete))
+        return done
+
+    # ---------------------------------------------------------- lifecycle
+    def close(self):
+        self.service.close()
+
+    def reset_adaptation(self):
+        """Fleet-wide adaptation reset (cf. ``TideSystem
+        .reset_adaptation``): every replica, the shared channel /
+        controller / gate / service, and the bus, under the service's
+        train lock."""
+        with self.service._train_lock:
+            self.channel.reset()
+            self.controller.reset()
+            self.controller.collection_enabled = True
+            self.gate.reset(self._dparams0)
+            self.service.reset()
+            self.bus._latest = None
+            self.bus.published = 0
+            for extractor in self.extractors:
+                extractor.reset()
+            for sub in self.subs:
+                sub.delivered_seq = 0
+                sub.deliveries = 0
+            for engine in self.engines:
+                engine.reset_adaptation(self._dparams0)
+        self.router = FleetRouter(self.n, self.fleet_cfg.route)
+
+    # ------------------------------------------------------------- stats
+    def summary(self) -> Dict:
+        """Aggregate fleet summary.  Wall-clock is modeled for the
+        serial single-host run: ``agg_tokens_per_s`` divides total
+        tokens by the *slowest replica's* wall (what a true
+        data-parallel deployment is bounded by); ``round_speedup`` vs a
+        single replica is the deterministic round-domain version of the
+        same quantity (rounds are scheduling-exact, wall is not)."""
+        tokens = sum(e.stats.tokens_out for e in self.engines)
+        walls = [e.stats.wall_s for e in self.engines]
+        rounds = [e.stats.steps for e in self.engines]
+        service_stats = self.service.stats()
+        return {
+            "replicas": self.n,
+            "tokens": tokens,
+            "replica_tokens": [e.stats.tokens_out for e in self.engines],
+            "replica_rounds": rounds,
+            "max_rounds": max(rounds) if rounds else 0,
+            "replica_wall_s": walls,
+            "max_wall_s": max(walls) if walls else 0.0,
+            "agg_tokens_per_s": tokens / max(max(walls, default=0.0),
+                                             1e-9),
+            "deploys": sum(e.stats.deploys for e in self.engines),
+            "bus": self.bus.stats(),
+            "router_load": list(self.router.load),
+            "router_assigned": list(self.router.assigned),
+            "train_cycles": self.service.cycles,
+            "deployed": self.gate.version,
+            "trainer_failures": service_stats.get("failures", 0),
+            "signals_collected": self.channel.total_added,
+            "signals_dropped": self.channel.dropped,
+        }

@@ -1,0 +1,198 @@
+"""Out-of-process draft trainer entrypoint.
+
+``python -m repro.fleet.trainer_main --listen unix:/path`` (or
+``tcp:host:port``) accepts one serving-side connection and runs the
+real ``training.service.TrainingService`` on this process's *own* XLA
+client — the true thread/device isolation the in-process
+``trainer_threads`` nice-level hack could only approximate: the
+trainer's jitted cycles compile and run in a separate process with a
+separate intra-op thread pool, and the serving process's XLA client
+never executes a training op.
+
+Protocol (see ``fleet.wire``): the serving side opens with HELLO
+(model/draft configs + train kwargs + async flag) and INIT (frozen
+embeddings + initial draft params); the host builds the trainer stack,
+acks HELLO, then loops on SIGNALS / DRAIN / RESET / BYE.  Published
+drafts and cycle events stream back as DRAFT / EVENT frames through the
+service's ``on_publish``/``on_event`` hooks — in async mode from the
+background cycle loop, in sync (drain-parity) mode inline before the
+DRAIN_ACK, which is what makes the remote drain barrier byte-
+deterministic for the serving engine.
+
+``TrainerHost`` is transport-agnostic (any connected stream socket), so
+tests drive the full protocol over ``socket.socketpair()`` with a stub
+service factory — no subprocess, no XLA warm-up.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import threading
+from typing import Callable, Dict, Optional
+
+from repro.fleet import wire
+
+
+def default_service_factory(hello: Dict, embed, dparams0,
+                            host: "TrainerHost"):
+    """Build the real trainer stack from the handshake: DraftTrainer on
+    this process's XLA client, a deploy gate seeded with the shipped
+    draft, and a TrainingService whose baseline comes from the wire
+    (the serving side ships its controller's ``alpha_train`` with each
+    SIGNALS frame) and whose publish/event hooks frame straight back
+    onto the socket."""
+    from repro.checkpoint.ckpt import DraftDeployGate
+    from repro.core.transport import SignalChannel
+    from repro.training.draft_trainer import DraftTrainer
+    from repro.training.service import TrainingService
+
+    import jax
+
+    tcfg = wire.config_from_dict(hello["tcfg"])
+    dcfg = wire.config_from_dict(hello["dcfg"])
+    t = hello["train"]
+    # off the wire the trees are numpy; the embed is *captured* by the
+    # jitted train step (not a traced argument), so it must be a device
+    # array or tracing fails on the first cycle
+    embed = jax.device_put(embed)
+    dparams0 = jax.device_put(dparams0)
+    trainer = DraftTrainer(tcfg, dcfg, embed)
+    gate = DraftDeployGate(dparams0)
+    min_batches = -(-int(t["n_threshold"]) // max(int(t["signal_window"]),
+                                                 1))
+    channel = SignalChannel(capacity=max(512, min_batches))
+    return TrainingService(
+        trainer, gate, channel,
+        controller=None, selective=False,
+        n_threshold=int(t["n_threshold"]),
+        signal_window=int(t["signal_window"]),
+        train_epochs=int(t["train_epochs"]),
+        train_min_steps=int(t["train_min_steps"]),
+        seed=int(t["seed"]),
+        baseline_fn=lambda: host.baseline,
+        on_publish=host.send_draft,
+        on_event=host.send_event)
+
+
+class TrainerHost:
+    """One serving connection's trainer: handshake, then frame loop.
+
+    Transport-agnostic — ``conn`` is any connected stream socket.
+    ``service_factory(hello, embed, dparams0, host)`` builds the
+    service; tests substitute a stub to exercise the protocol without
+    XLA."""
+
+    def __init__(self, conn, service_factory: Optional[Callable] = None):
+        self.conn = conn
+        self.service_factory = service_factory or default_service_factory
+        self.baseline = 0.0       # freshest serving-side deploy baseline
+        self.service = None
+        self.dparams0 = None
+        self._send_lock = threading.Lock()
+
+    # ------------------------------------------------------------- frames
+    def _send(self, ftype: int, payload: bytes = b""):
+        with self._send_lock:
+            self.conn.sendall(wire.encode_frame(ftype, payload))
+
+    def send_draft(self, ver):
+        self._send(wire.FT_DRAFT,
+                   wire.draft_payload(ver.seq, ver.dparams, ver.eval_acc))
+
+    def send_event(self, event: Dict):
+        self._send(wire.FT_EVENT, wire.json_payload(
+            {k: v for k, v in event.items()
+             if isinstance(v, (str, int, float, bool)) or v is None}))
+
+    # --------------------------------------------------------------- loop
+    def run(self):
+        reader = wire.FrameReader()
+        frames = wire.recv_frames(self.conn, reader)
+        try:
+            self._handshake(frames)
+            for ftype, _flags, payload in frames:
+                if ftype == wire.FT_SIGNALS:
+                    batches, baseline = wire.decode_signals(payload)
+                    self.baseline = baseline
+                    for b in batches:
+                        self.service.channel.add(b)
+                elif ftype == wire.FT_DRAIN:
+                    token = wire.decode_json(payload).get("token", -1)
+                    cycles = self.service.drain()
+                    self._send(wire.FT_DRAIN_ACK, wire.json_payload(
+                        {"token": token, "cycles": cycles,
+                         "version": self.service.gate.version,
+                         "failures": self.service.failures}))
+                elif ftype == wire.FT_RESET:
+                    token = wire.decode_json(payload).get("token", -1)
+                    with self.service._train_lock:
+                        self.service.channel.reset()
+                        self.service.gate.reset(self.dparams0)
+                        self.service.reset()
+                    self.baseline = 0.0
+                    self._send(wire.FT_RESET_ACK,
+                               wire.json_payload({"token": token}))
+                elif ftype == wire.FT_BYE:
+                    break
+                else:
+                    raise wire.WireError(
+                        f"unexpected frame "
+                        f"{wire.FRAME_NAMES.get(ftype, ftype)} "
+                        "from serving side")
+        finally:
+            if self.service is not None:
+                self.service.close()   # never raises (abandons on wedge)
+
+    def _handshake(self, frames):
+        ftype, _flags, payload = self._next(frames, wire.FT_HELLO)
+        hello = wire.decode_json(payload)
+        ftype, _flags, payload = self._next(frames, wire.FT_INIT)
+        arrays = wire.decode_npz(payload)
+        embed = wire.unflatten_tree(
+            {k[2:]: v for k, v in arrays.items() if k.startswith("e/")})
+        self.dparams0 = wire.unflatten_tree(
+            {k[2:]: v for k, v in arrays.items() if k.startswith("p/")})
+        self.service = self.service_factory(hello, embed, self.dparams0,
+                                            self)
+        self._send(wire.FT_HELLO, wire.json_payload({"ok": True}))
+        if hello.get("async"):
+            self.service.start()
+
+    @staticmethod
+    def _next(frames, expect: int):
+        for frame in frames:
+            if frame[0] != expect:
+                raise wire.WireError(
+                    f"handshake expected {wire.FRAME_NAMES[expect]}, got "
+                    f"{wire.FRAME_NAMES.get(frame[0], frame[0])}")
+            return frame
+        raise wire.WireError(
+            f"connection closed before {wire.FRAME_NAMES[expect]}")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="TIDE out-of-process draft trainer")
+    parser.add_argument("--listen", required=True,
+                        help="unix:/path or tcp:host:port to listen on")
+    args = parser.parse_args(argv)
+    srv = wire.listen(args.listen)
+    try:
+        conn, _addr = srv.accept()
+        try:
+            TrainerHost(conn).run()
+        finally:
+            conn.close()
+    finally:
+        srv.close()
+        kind, addr = wire.parse_endpoint(args.listen)
+        if kind == "unix":
+            try:
+                os.unlink(addr)
+            except OSError:
+                pass
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,300 @@
+"""Length-prefixed, versioned wire codec for the disaggregated trainer.
+
+Frame layout (network byte order, 16-byte header)::
+
+    !4s  magic     b"TIDE"
+    B    version   WIRE_VERSION (1)
+    B    ftype     frame type (FT_*)
+    H    flags     reserved (must be 0)
+    I    length    payload byte count (<= MAX_PAYLOAD)
+    I    crc32     zlib.crc32 of the payload
+
+Payloads are either JSON control dicts or .npz tensor containers.  The
+tensor container is *exactly* the ``core.signals`` shard schema
+(``pack_batches`` — per-batch keys, ``__schema__`` tag), so a spilled
+.npz shard and a SIGNALS frame payload are interchangeable: the trainer
+can replay offline shards over the wire and a captured frame can be
+written down as a shard.  Draft payloads flatten the param pytree with
+the checkpoint module's "/"-joined keys.
+
+Decoding is strict and transactional: bad magic, unknown version,
+nonzero flags, oversize length, or CRC mismatch raise ``WireError``
+*without consuming partial frames* — a ``FrameReader`` either yields a
+complete valid frame or leaves the stream untouched after the error, so
+one corrupt frame can't smear into the next.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import socket
+import struct
+import zipfile
+import zlib
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.signals import SignalBatch, pack_batches, unpack_batches
+from repro.models.config import BlockDef, ModelConfig
+
+MAGIC = b"TIDE"
+WIRE_VERSION = 1
+HEADER = struct.Struct("!4sBBHII")   # magic, version, ftype, flags, len, crc
+MAX_PAYLOAD = 256 * 1024 * 1024      # 256 MiB — far beyond any draft/shard
+
+# Frame types.
+FT_HELLO = 1        # json: handshake (configs + train kwargs), serving→trainer
+FT_INIT = 2         # npz: frozen embed + initial draft params
+FT_SIGNALS = 3      # npz: signal batches (+ __baseline__), serving→trainer
+FT_DRAFT = 4        # npz: published DraftVersion, trainer→serving
+FT_DRAIN = 5        # json: run-all-cycles barrier request {token}
+FT_DRAIN_ACK = 6    # json: {token, cycles, version} after DRAIN completes
+FT_EVENT = 7        # json: one train_cycle event dict, trainer→serving
+FT_RESET = 8        # json: reset trainer-side adaptation state {token}
+FT_RESET_ACK = 9    # json: {token}
+FT_BYE = 10         # empty: orderly shutdown
+
+FRAME_NAMES = {
+    FT_HELLO: "HELLO", FT_INIT: "INIT", FT_SIGNALS: "SIGNALS",
+    FT_DRAFT: "DRAFT", FT_DRAIN: "DRAIN", FT_DRAIN_ACK: "DRAIN_ACK",
+    FT_EVENT: "EVENT", FT_RESET: "RESET", FT_RESET_ACK: "RESET_ACK",
+    FT_BYE: "BYE",
+}
+
+
+class WireError(Exception):
+    """Malformed frame (bad magic/version/flags/length/CRC) or protocol
+    violation.  The stream is not advanced past the offending header."""
+
+
+# ---------------------------------------------------------------- framing
+def encode_frame(ftype: int, payload: bytes = b"", flags: int = 0) -> bytes:
+    if ftype not in FRAME_NAMES:
+        raise WireError(f"unknown frame type {ftype}")
+    if len(payload) > MAX_PAYLOAD:
+        raise WireError(f"payload {len(payload)} bytes exceeds "
+                        f"MAX_PAYLOAD {MAX_PAYLOAD}")
+    return HEADER.pack(MAGIC, WIRE_VERSION, ftype, flags, len(payload),
+                       zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+
+class FrameReader:
+    """Incremental frame decoder over an arbitrary chunking of bytes.
+
+    ``feed(data)`` buffers and yields every complete ``(ftype, flags,
+    payload)`` frame.  Validation is all-or-nothing: an invalid header
+    or CRC raises ``WireError`` and poisons the reader (no partial frame
+    is ever yielded, and nothing after the corruption is trusted)."""
+
+    def __init__(self):
+        self._buf = bytearray()
+        self._dead: Optional[str] = None
+
+    def feed(self, data: bytes) -> Iterator[Tuple[int, int, bytes]]:
+        if self._dead is not None:
+            raise WireError(f"reader poisoned by earlier error: "
+                            f"{self._dead}")
+        self._buf.extend(data)
+        while len(self._buf) >= HEADER.size:
+            magic, version, ftype, flags, length, crc = HEADER.unpack_from(
+                self._buf)
+            try:
+                if magic != MAGIC:
+                    raise WireError(f"bad magic {bytes(magic)!r}")
+                if version != WIRE_VERSION:
+                    raise WireError(f"unsupported wire version {version} "
+                                    f"(speak {WIRE_VERSION})")
+                if ftype not in FRAME_NAMES:
+                    raise WireError(f"unknown frame type {ftype}")
+                if flags != 0:
+                    raise WireError(f"nonzero reserved flags {flags:#x}")
+                if length > MAX_PAYLOAD:
+                    raise WireError(f"payload length {length} exceeds "
+                                    f"MAX_PAYLOAD {MAX_PAYLOAD}")
+            except WireError as exc:
+                self._dead = str(exc)
+                raise
+            if len(self._buf) < HEADER.size + length:
+                return   # incomplete — wait for more bytes, consume nothing
+            payload = bytes(self._buf[HEADER.size:HEADER.size + length])
+            if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+                self._dead = "payload CRC mismatch"
+                raise WireError(self._dead)
+            del self._buf[:HEADER.size + length]
+            yield ftype, flags, payload
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+
+def send_frame(sock: socket.socket, ftype: int, payload: bytes = b""):
+    sock.sendall(encode_frame(ftype, payload))
+
+
+def recv_frames(sock: socket.socket, reader: FrameReader,
+                bufsize: int = 1 << 16) -> Iterator[Tuple[int, int, bytes]]:
+    """Generator over frames on a blocking socket; returns on EOF."""
+    while True:
+        data = sock.recv(bufsize)
+        if not data:
+            return
+        yield from reader.feed(data)
+
+
+# --------------------------------------------------------------- payloads
+def json_payload(obj: Dict) -> bytes:
+    return json.dumps(obj, sort_keys=True).encode("utf-8")
+
+
+def decode_json(payload: bytes) -> Dict:
+    try:
+        obj = json.loads(payload.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+        raise WireError(f"bad json payload: {exc}") from exc
+    if not isinstance(obj, dict):
+        raise WireError("json payload must be an object")
+    return obj
+
+
+def npz_payload(arrays: Dict[str, np.ndarray]) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def decode_npz(payload: bytes) -> Dict[str, np.ndarray]:
+    try:
+        with np.load(io.BytesIO(payload), allow_pickle=False) as data:
+            return {k: np.asarray(data[k]) for k in data.files}
+    except (ValueError, OSError, zlib.error, zipfile.BadZipFile) as exc:
+        raise WireError(f"bad npz payload: {exc}") from exc
+
+
+# ------------------------------------------------------- signals payloads
+def signals_payload(batches: List[SignalBatch],
+                    baseline: float = 0.0) -> bytes:
+    """SIGNALS frame body: the shard schema + the serving side's current
+    deploy baseline (best-effort fresh — the trainer-side gate compares
+    eval accuracy against it, standing in for the in-process
+    controller's ``alpha_train``)."""
+    arrays = pack_batches(batches)
+    arrays["__baseline__"] = np.asarray(float(baseline), np.float64)
+    return npz_payload(arrays)
+
+
+def decode_signals(payload: bytes) -> Tuple[List[SignalBatch], float]:
+    arrays = decode_npz(payload)
+    baseline = float(arrays.pop("__baseline__", 0.0))
+    try:
+        return unpack_batches(arrays), baseline
+    except ValueError as exc:
+        raise WireError(str(exc)) from exc
+
+
+# --------------------------------------------------------- draft payloads
+def flatten_tree(tree, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a nested-dict param pytree into "/"-joined keys (the
+    checkpoint module's layout; draft params are nested dicts only)."""
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_tree(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_tree(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, arr in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def draft_payload(seq: int, dparams, eval_acc: float) -> bytes:
+    """DRAFT frame body: one published ``DraftVersion``."""
+    arrays = {f"p/{k}": v for k, v in flatten_tree(dparams).items()}
+    arrays["__seq__"] = np.asarray(int(seq), np.int64)
+    arrays["__eval_acc__"] = np.asarray(float(eval_acc), np.float64)
+    return npz_payload(arrays)
+
+
+def decode_draft(payload: bytes) -> Tuple[int, Any, float]:
+    arrays = decode_npz(payload)
+    try:
+        seq = int(arrays.pop("__seq__"))
+        eval_acc = float(arrays.pop("__eval_acc__"))
+    except KeyError as exc:
+        raise WireError(f"draft payload missing {exc}") from exc
+    flat = {k[2:]: v for k, v in arrays.items() if k.startswith("p/")}
+    if not flat:
+        raise WireError("draft payload has no parameters")
+    return seq, unflatten_tree(flat), eval_acc
+
+
+# ---------------------------------------------------------- config codec
+def config_to_dict(cfg: ModelConfig) -> Dict:
+    """JSON-safe dict for a ``ModelConfig`` (BlockDef tuples become
+    lists of dicts)."""
+    d = dataclasses.asdict(cfg)
+    for f in ("pattern", "prologue"):
+        d[f] = [dataclasses.asdict(b) if not isinstance(b, dict) else b
+                for b in d[f]]
+    d["capture_layers"] = list(d["capture_layers"])
+    return d
+
+
+def config_from_dict(d: Dict) -> ModelConfig:
+    d = dict(d)
+    for f in ("pattern", "prologue"):
+        d[f] = tuple(BlockDef(**b) for b in d.get(f, ()))
+    d["capture_layers"] = tuple(d.get("capture_layers", (-1, -1, -1)))
+    return ModelConfig(**d)
+
+
+# ------------------------------------------------------------- endpoints
+def parse_endpoint(endpoint: str) -> Tuple[str, Any]:
+    """``unix:/path`` → ("unix", path); ``tcp:host:port`` →
+    ("tcp", (host, port))."""
+    if endpoint.startswith("unix:"):
+        path = endpoint[len("unix:"):]
+        if not path:
+            raise ValueError("empty unix socket path")
+        return "unix", path
+    if endpoint.startswith("tcp:"):
+        rest = endpoint[len("tcp:"):]
+        host, sep, port = rest.rpartition(":")
+        if not sep or not host:
+            raise ValueError(f"tcp endpoint {endpoint!r} needs host:port")
+        return "tcp", (host, int(port))
+    raise ValueError(f"unknown endpoint scheme {endpoint!r} "
+                     "(expected unix:/path or tcp:host:port)")
+
+
+def connect(endpoint: str, timeout: Optional[float] = None) -> socket.socket:
+    kind, addr = parse_endpoint(endpoint)
+    fam = socket.AF_UNIX if kind == "unix" else socket.AF_INET
+    sock = socket.socket(fam, socket.SOCK_STREAM)
+    if timeout is not None:
+        sock.settimeout(timeout)
+    sock.connect(addr)
+    sock.settimeout(None)
+    return sock
+
+
+def listen(endpoint: str, backlog: int = 1) -> socket.socket:
+    kind, addr = parse_endpoint(endpoint)
+    fam = socket.AF_UNIX if kind == "unix" else socket.AF_INET
+    sock = socket.socket(fam, socket.SOCK_STREAM)
+    if kind == "tcp":
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    sock.bind(addr)
+    sock.listen(backlog)
+    return sock

@@ -135,6 +135,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "in-process XLA pool is shared, so a hard "
                          "per-client thread cap needs the out-of-"
                          "process trainer — see ROADMAP)")
+    # ---- disaggregation (repro/fleet; docs/disaggregation.md): not
+    #      ServingConfig knobs — they select process/fleet topology
+    #      around unchanged engines (FleetConfig; asserted total by
+    #      tests/test_config_mirror.py)
+    ap.add_argument("--fleet-replicas", type=int, default=0,
+                    help=">0: serve through a data-parallel fleet of N "
+                         "engine replicas behind a front-end router, "
+                         "fed by one shared trainer over the draft-"
+                         "version bus (0 = single engine)")
+    ap.add_argument("--trainer-endpoint", default=None,
+                    metavar="ENDPOINT",
+                    help="run draft training out of process on its own "
+                         "XLA client: 'spawn' forks a private trainer "
+                         "subprocess; unix:/path or tcp:host:port "
+                         "connect to a running "
+                         "`python -m repro.fleet.trainer_main`")
+    ap.add_argument("--fleet-route", choices=["least", "rr"],
+                    default="least",
+                    help="fleet request routing: least (cost-estimate "
+                         "least-loaded, default) or rr (round-robin)")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     # ---- observability (repro/obs): main()-consumed, not ServingConfig
@@ -186,6 +206,21 @@ def config_from_args(args):
         spec_probe_interval=args.spec_probe_interval,
         reseed_window=reseed, trainer_threads=args.trainer_threads,
         tree_width=args.tree_width)
+
+
+def fleet_config_from_args(args):
+    """Assemble the ``FleetConfig`` the disaggregation flags name (the
+    testable flag → config-field mapping, same contract as
+    ``config_from_args``).  Returns None when no fleet/remote-trainer
+    topology was requested."""
+    from repro.fleet import FleetConfig
+
+    if not getattr(args, "fleet_replicas", 0) \
+            and getattr(args, "trainer_endpoint", None) is None:
+        return None
+    return FleetConfig(replicas=args.fleet_replicas,
+                       trainer_endpoint=args.trainer_endpoint,
+                       route=args.fleet_route)
 
 
 def main():
@@ -241,8 +276,10 @@ def main():
                     n_threshold=4, signal_window=16,
                     adaptive_spec=not args.no_adaptive,
                     async_train=args.async_train,
-                    obs=obs)
+                    obs=obs, fleet=fleet_config_from_args(args))
     profile = analytic_tpu_profile(cfg, chips=1)
+    if tc.fleet is not None and tc.fleet.replicas > 0:
+        return _main_fleet(args, cfg, params, tc, profile, domains)
     sys_ = TideSystem(cfg, params, tc, profile=profile)
     stop_metrics = _start_metrics_printer(sys_, args.metrics_interval)
     t0 = time.perf_counter()
@@ -293,6 +330,38 @@ def main():
               f"{args.trace_out}")
     if args.flight_record:
         _print_flight_digest(sys_.recorder)
+
+
+def _main_fleet(args, cfg, params, tc, profile, domains):
+    """Fleet serving path (--fleet-replicas N): route an arrival trace
+    across N data-parallel replicas fed by one shared (optionally
+    out-of-process) trainer, and print the aggregate fleet summary."""
+    import time as _time
+
+    from repro.data.workloads import Phase, arrival_trace
+    from repro.fleet.router import ServingFleet
+    from repro.serving.request import Request
+
+    n = args.requests
+    mx = max(args.max_new_tokens, 1)
+    trace = arrival_trace(
+        domains, n, mode="poisson", rate=16.0,
+        max_new_range=(min(8, mx), mx),
+        schedule=[Phase("science", n // 2), Phase("code", n - n // 2)],
+        seed=1)
+    reqs = [Request(prompt=ev.prompt, domain=ev.domain,
+                    max_new_tokens=ev.max_new_tokens, arrives_at=ev.t)
+            for ev in trace]
+    fleet = ServingFleet(cfg, params, tc, profile=profile)
+    t0 = _time.perf_counter()
+    fleet.serve(reqs)
+    fleet.service.drain()
+    fleet.close()
+    s = fleet.summary()
+    print(f"\n== fleet summary ({_time.perf_counter()-t0:.1f}s wall, "
+          f"{s['replicas']} replicas) ==")
+    for k, v in s.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
 
 
 def _start_metrics_printer(sys_, interval: float):

@@ -1150,6 +1150,36 @@ class ServingEngine:
             self._spill_fn = _spill
             self._restore_fn = _restore
 
+    def adopt_compiled(self, donor: "ServingEngine"):
+        """Share the donor's jitted step functions (fleet replicas).
+
+        A data-parallel replica fleet (``repro.fleet.router``) runs N
+        engines with the *same* model, params, and serving config —
+        their ``_build_steps`` closures trace to identical computations,
+        so compiling them N times is pure waste.  This replaces every
+        ``*_fn`` attribute (and the shared null-key constant) with the
+        donor's, so XLA traces/compiles once per fleet.  Safe only when
+        every trace-time capture matches: same model/draft configs, the
+        same params object (``_reseed_fn`` bakes ``params['embed']``
+        in), and an equal ServingConfig minus the per-replica
+        ``completion_sink`` (equal seed ⇒ equal baked-in base sampling
+        key, so sampled streams stay request-keyed and replica-
+        invariant)."""
+        if donor is self:
+            return
+        mine = dataclasses.replace(self.config, completion_sink=None)
+        theirs = dataclasses.replace(donor.config, completion_sink=None)
+        if (self.cfg != donor.cfg or self.dcfg != donor.dcfg
+                or mine != theirs):
+            raise ValueError("adopt_compiled needs identically-configured "
+                             "engines (model, draft, ServingConfig)")
+        if self.params is not donor.params:
+            raise ValueError("adopt_compiled needs the shared params "
+                             "object (closures capture params['embed'])")
+        for name, fn in donor.__dict__.items():
+            if name.endswith("_fn") or name == "_null_keys":
+                setattr(self, name, fn)
+
     def deploy_draft(self, dparams):
         """Hot-swap the draft (no target reload — TIDE's C2).  Under
         ``serve_stream`` the swap lands between supersteps, mid-stream.

@@ -61,6 +61,9 @@ class TrainingService:
                  trainer_threads: int = 0,
                  engine_steps_fn: Optional[Callable[[], int]] = None,
                  poll_s: float = 0.05,
+                 baseline_fn: Optional[Callable[[], float]] = None,
+                 on_publish: Optional[Callable[["DraftVersion"], None]] = None,
+                 on_event: Optional[Callable[[Dict], None]] = None,
                  tracer=None, registry=None):
         self.trainer = trainer
         self.gate = gate
@@ -97,8 +100,19 @@ class TrainingService:
         self._thread_cap: Optional[str] = None
         self.engine_steps_fn = engine_steps_fn or (lambda: -1)
         self.poll_s = poll_s
+        # disaggregation hooks (repro.fleet.trainer_main): baseline_fn
+        # replaces the in-process controller's alpha_train when the
+        # controller lives in another process (the serving side ships a
+        # best-effort-fresh baseline with each signal frame); on_publish
+        # / on_event mirror accepted deploys and cycle events onto the
+        # wire.  All optional; the in-process path never sets them.
+        self.baseline_fn = baseline_fn
+        self.on_publish = on_publish
+        self.on_event = on_event
         self.events: List[Dict] = []
         self.cycles = 0
+        self.failures = 0
+        self.last_error: Optional[str] = None
         self._latest: Optional[DraftVersion] = None   # lock-free slot
         # reentrant: TideSystem.reset_adaptation holds it across a
         # compound reset that includes this service's own reset()
@@ -145,8 +159,12 @@ class TrainingService:
             if not self.should_train():
                 return False
             batches = self.channel.drain()
-            baseline = (self.controller.alpha_train
-                        if self.controller is not None else 0.0)
+            if self.controller is not None:
+                baseline = self.controller.alpha_train
+            elif self.baseline_fn is not None:
+                baseline = self.baseline_fn()
+            else:
+                baseline = 0.0
             dparams, _ = self.gate.current()
             ctx = contextlib.nullcontext()
             if self.device is not None:
@@ -171,28 +189,49 @@ class TrainingService:
                     dp = jax.device_put(dp, self.publish_device)
                 self._latest = DraftVersion(self.gate.version, dp,
                                             result["eval_acc"])
+                if self.on_publish is not None:
+                    self.on_publish(self._latest)
                 if self.tracer.enabled:
                     self.tracer.instant("train.publish",
                                         seq=self.gate.version,
                                         eval_acc=result["eval_acc"])
-            self.events.append({
+            event = {
                 "kind": "train_cycle", "eval_acc": result["eval_acc"],
                 "train_acc": result["train_acc"], "baseline": baseline,
                 "deployed": deployed, "steps": result["steps"],
                 "seconds": result["seconds"],
                 "engine_steps": self.engine_steps_fn(),
-            })
+            }
+            self.events.append(event)
+            if self.on_event is not None:
+                self.on_event(event)
             self.cycles += 1
             return True
 
     def drain(self) -> int:
         """Deterministic parity mode: synchronously run every cycle the
         buffered signals allow (the legacy blocking-training schedule).
-        Returns the number of cycles run."""
+        Returns the number of cycles run.
+
+        Safe after trainer death: a cycle that raises is recorded in
+        ``failures``/``last_error`` and drain stops (returning the
+        cycles that did complete) instead of propagating — serving
+        keeps the last published draft and continues (the degradation
+        is visible in ``stats()`` and TideSystem ``summary()``)."""
         n = 0
-        while self.train_once():
+        while True:
+            try:
+                if not self.train_once():
+                    break
+            except Exception as exc:  # degrade, don't kill serving
+                self._record_failure(exc)
+                break
             n += 1
         return n
+
+    def _record_failure(self, exc: Exception):
+        self.failures += 1
+        self.last_error = f"{type(exc).__name__}: {exc}"
 
     def poll(self) -> Optional[DraftVersion]:
         """Lock-free read of the latest accepted deploy (or None)."""
@@ -205,6 +244,8 @@ class TrainingService:
             self._latest = None
             self.events.clear()
             self.cycles = 0
+            self.failures = 0
+            self.last_error = None
 
     # ------------------------------------------------------------- thread
     def start(self):
@@ -224,31 +265,42 @@ class TrainingService:
             if self._stop.is_set():
                 break
             if self.should_train():
-                self.train_once()
+                try:
+                    self.train_once()
+                except Exception as exc:   # trainer died: stop the loop,
+                    self._record_failure(exc)   # keep the last deploy
+                    break
 
     @property
     def running(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
 
     def close(self, timeout: float = 30.0):
-        """Stop the loop and join the thread.  Idempotent; the channel
-        is closed (waking any blocked waiter) but its buffered signals
-        remain drainable."""
+        """Stop the loop and join the thread.  Idempotent and safe
+        after abrupt trainer death: a thread that fails to join within
+        ``timeout`` (e.g. wedged inside a dead trainer's cycle) is
+        abandoned and counted in ``failures`` — close never raises and
+        never hangs serving shutdown.  The channel is closed (waking
+        any blocked waiter) but its buffered signals remain
+        drainable."""
         self._stop.set()
         self.channel.close()
         t, self._thread = self._thread, None
         if t is not None and t.is_alive():
             t.join(timeout=timeout)
             if t.is_alive():
-                raise RuntimeError("training service thread failed to "
-                                   f"stop within {timeout}s")
+                self._record_failure(RuntimeError(
+                    f"training thread failed to stop within {timeout}s; "
+                    "abandoned (daemon)"))
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict:
         return {"cycles": self.cycles, "deploy_version": self.gate.version,
                 "running": self.running,
                 "trainer_threads": self.trainer_threads,
-                "thread_cap": self._thread_cap, **self.channel.stats()}
+                "thread_cap": self._thread_cap,
+                "failures": self.failures, "last_error": self.last_error,
+                **self.channel.stats()}
 
     def register_metrics(self, registry):
         """Expose the service (and its channel) under the ``train.*``

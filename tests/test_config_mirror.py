@@ -18,6 +18,7 @@ jit — so the file runs in milliseconds in the fast tier.
 import dataclasses
 
 from repro.core.tide import TideConfig
+from repro.fleet import FleetConfig
 from repro.launch import serve
 from repro.serving.policy import ServingConfig
 
@@ -119,6 +120,42 @@ def test_serve_flags_cover_every_serving_knob():
         scfg = serve.config_from_args(parser.parse_args(argv))
         assert getattr(scfg, name) == expected, (
             f"flag {argv} did not land on ServingConfig.{name}")
+
+
+def test_fleet_flags_cover_every_fleet_knob():
+    """Same totality contract for the disaggregation surface: every
+    ``FleetConfig`` field needs a launch/serve flag that lands on the
+    assembled config (``fleet_config_from_args``).  The table's key set
+    is pinned to the field set, so a new fleet knob fails here until it
+    grows a flag AND a row."""
+    fleet_fields = {f.name for f in dataclasses.fields(FleetConfig)}
+    flag_cases = {
+        "replicas": (["--fleet-replicas", "4"], 4),
+        "trainer_endpoint": (["--trainer-endpoint", "unix:/tmp/t.sock"],
+                             "unix:/tmp/t.sock"),
+        "route": (["--fleet-replicas", "2", "--fleet-route", "rr"], "rr"),
+    }
+    missing = fleet_fields - set(flag_cases)
+    assert not missing, (
+        f"FleetConfig fields {sorted(missing)} have no launch/serve flag "
+        f"case: add the flag to serve.build_parser, wire it in "
+        f"serve.fleet_config_from_args, and add a row here")
+    stale = set(flag_cases) - fleet_fields
+    assert not stale, f"flag cases for non-fields: {sorted(stale)}"
+    parser = serve.build_parser()
+    for name, (argv, expected) in flag_cases.items():
+        fc = serve.fleet_config_from_args(parser.parse_args(argv))
+        assert fc is not None and getattr(fc, name) == expected, (
+            f"flag {argv} did not land on FleetConfig.{name}")
+
+
+def test_fleet_flags_default_to_no_fleet():
+    """Bare argv must not build a FleetConfig (single engine,
+    in-process trainer — the byte-pinned legacy topology), and
+    TideConfig carries the same default."""
+    args = serve.build_parser().parse_args([])
+    assert serve.fleet_config_from_args(args) is None
+    assert TideConfig().fleet is None
 
 
 def test_serve_flag_defaults_assemble_serving_defaults():

@@ -2,10 +2,12 @@
 transfer, storage accounting (paper Table 1 math)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 import repro.configs as C
-from repro.core.signals import (SignalBatch, SignalExtractor, SignalStore,
-                                storage_bytes_per_token)
+from repro.core.signals import (SIGNAL_SCHEMA, SignalBatch, SignalExtractor,
+                                SignalStore, load_shard, pack_batches,
+                                storage_bytes_per_token, unpack_batches)
 
 
 def _offer(ex, rid, n, fdim=6, accept=None):
@@ -48,16 +50,70 @@ def test_extractor_respects_mask_and_enable():
     assert store.total_added == 0           # 2 rows < window, no force emit
 
 
-def test_store_spill(tmp_path):
+def test_store_spill_roundtrip_lossless(tmp_path):
+    """spill → load is a lossless, schema-tagged round trip: ragged
+    window lengths and per-batch dtypes survive bit-exactly (the old
+    stacked format required uniform shapes and one dtype)."""
     store = SignalStore(spill_dir=str(tmp_path))
-    for i in range(3):
-        store.add(SignalBatch(np.ones((4, 6), np.float32),
-                              np.arange(4, dtype=np.int32)))
+    batches = [
+        SignalBatch(np.arange(24, dtype=np.float32).reshape(4, 6),
+                    np.arange(4, dtype=np.int32)),
+        SignalBatch(np.arange(54, dtype=np.float16).reshape(9, 6),
+                    np.arange(9, dtype=np.int64)),     # ragged residual
+        SignalBatch(np.zeros((2, 6), np.float64),
+                    np.array([7, 9], np.int32)),
+    ]
+    for b in batches:
+        store.add(b)
     path = store.spill("t0")
-    assert path is not None
-    data = np.load(path)
-    assert data["feats"].shape == (3, 4, 6)
-    assert store.peek_count() == 0
+    assert path is not None and store.peek_count() == 0
+    with np.load(path) as data:
+        assert str(np.asarray(data["__schema__"])) == SIGNAL_SCHEMA
+    loaded = load_shard(path)
+    assert len(loaded) == len(batches)
+    for orig, back in zip(batches, loaded):
+        np.testing.assert_array_equal(orig.feats, back.feats)
+        np.testing.assert_array_equal(orig.tokens, back.tokens)
+        assert orig.feats.dtype == back.feats.dtype
+        assert orig.tokens.dtype == back.tokens.dtype
+    # and back into a store (offline replay path)
+    store2 = SignalStore()
+    assert store2.load(path) == 3 and store2.peek_count() == 3
+
+
+def test_spill_empty_store_and_no_dir(tmp_path):
+    assert SignalStore().spill("t") is None          # no spill dir
+    assert SignalStore(spill_dir=str(tmp_path)).spill("t") is None
+
+
+def test_pack_unpack_validation():
+    batches = [SignalBatch(np.ones((4, 6), np.float32),
+                           np.arange(4, dtype=np.int32))]
+    arrays = pack_batches(batches)
+    # truncated shard: counted batch missing
+    broken = dict(arrays)
+    del broken["feats_000000"]
+    with pytest.raises(ValueError, match="truncated"):
+        unpack_batches(broken)
+    # unknown schema tag
+    wrong = dict(arrays)
+    wrong["__schema__"] = np.asarray("tide-signals/v999")
+    with pytest.raises(ValueError, match="schema"):
+        unpack_batches(wrong)
+    # not a shard at all
+    with pytest.raises(ValueError, match="not a signal shard"):
+        unpack_batches({"junk": np.zeros(3)})
+
+
+def test_legacy_stacked_shard_still_loads(tmp_path):
+    """Pre-schema shards (one stacked feats/tokens pair) keep loading."""
+    path = str(tmp_path / "legacy.npz")
+    np.savez_compressed(path,
+                        feats=np.ones((3, 4, 6), np.float32),
+                        tokens=np.tile(np.arange(4, dtype=np.int32), (3, 1)))
+    loaded = load_shard(path)
+    assert len(loaded) == 3
+    assert all(b.feats.shape == (4, 6) for b in loaded)
 
 
 def test_storage_math_matches_paper_scale():
